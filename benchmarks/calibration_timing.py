@@ -1,0 +1,38 @@
+"""Calibration cost scaling: the paper's O(T d^2) claim + our streaming
+Gram variant (memory O(d^2) instead of O(T d))."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core.projections import (Factors, key_projection_from_caches,
+                                    solve_kq_svd)
+from repro.core.svd import gram
+
+
+def run(d: int = 64, rank: int = 16) -> List[Row]:
+    rng = np.random.default_rng(0)
+    rows: List[Row] = []
+    print("\n== calibration_timing: solve cost vs T (O(T d^2)) ==")
+    prev = None
+    for T in (2048, 8192, 32768):
+        K = rng.normal(size=(T, d))
+        Q = rng.normal(size=(T, d))
+        t0 = time.perf_counter()
+        gk, gq = gram(K), gram(Q)
+        p = solve_kq_svd(Factors.from_gram(gk), Factors.from_gram(gq),
+                         rank)
+        us = (time.perf_counter() - t0) * 1e6
+        scale = "" if prev is None else f" ({us/prev:.2f}x for 4x T)"
+        print(f"T={T:6d}: {us:9.0f} us{scale}  gram_mem={2*d*d*8} B "
+              f"vs paper concat {T*d*8} B")
+        rows.append((f"calib_T{T}", us, f"gram_bytes={2*d*d*8}"))
+        prev = us
+    return rows
+
+
+if __name__ == "__main__":
+    run()

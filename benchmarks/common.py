@@ -1,0 +1,79 @@
+"""Shared benchmark scaffolding: calibrated tiny-model fixture + timing."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import CompressionConfig, TrainConfig
+from repro.configs import get_config
+from repro.core.calibration import GramAccumulator
+from repro.data import DataConfig, batches
+from repro.models import build_model
+from repro.train import Trainer
+
+Row = Tuple[str, float, str]      # (name, us_per_call, derived)
+
+
+def timed(fn: Callable, *args, reps: int = 3, **kw):
+    fn(*args, **kw)                       # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out) if hasattr(out, "block_until_ready") \
+        else None
+    return out, (time.perf_counter() - t0) / reps * 1e6
+
+
+_FIXTURE = {}
+
+
+def calibrated_fixture(arch: str = "paper-llama2-7b", train_steps: int = 30,
+                       n_calib: int = 4, seq: int = 64):
+    """Reduced model briefly trained on Zipf data, then calibrated.
+
+    Training sharpens the cache spectra (random init is too isotropic to
+    show the methods' separation clearly); the paper's qualitative claims
+    are therows evaluated downstream.
+    """
+    key = (arch, train_steps, n_calib, seq)
+    if key in _FIXTURE:
+        return _FIXTURE[key]
+    cfg = get_config(arch).reduced()
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(
+                cfg.moe, capacity_factor=float(cfg.moe.n_experts)))
+    tc = TrainConfig(learning_rate=3e-3, warmup_steps=2,
+                     total_steps=train_steps, checkpoint_every=0)
+    trainer = Trainer(cfg, tc)
+    state = trainer.init_state()
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq, batch_size=4)
+    trainer.run(batches(dc), train_steps, state=state)
+    model = trainer.model
+    params = trainer.state["params"]
+    acc = GramAccumulator(len(model.attn_layers))
+    raw: List[List[Dict[str, np.ndarray]]] = []
+    for i in range(n_calib):
+        toks = jnp.asarray(
+            next(batches(DataConfig(cfg.vocab_size, seq, 2,
+                                    seed=100 + i)))["tokens"])
+        caps = model.calibrate(params, toks)
+        caps = [jax.tree.map(np.asarray, c) for c in caps]
+        acc.update_from_captures(caps)
+        raw.append(caps)
+    _FIXTURE[key] = (cfg, model, params, acc, raw)
+    return _FIXTURE[key]
+
+
+def eval_caches(cfg, model, params, seed: int = 999, seq: int = 64,
+                batch: int = 2):
+    """Held-out validation captures (the paper's eval split)."""
+    toks = jnp.asarray(next(batches(
+        DataConfig(cfg.vocab_size, seq, batch, seed=seed)))["tokens"])
+    caps = model.calibrate(params, toks)
+    return [jax.tree.map(np.asarray, c) for c in caps]

@@ -1,0 +1,57 @@
+"""Decode-step cost: full vs KQ-SVD-compressed cache.
+
+Wall time on this CPU container is not the scored metric (TPU is the
+target); the derived columns are the cache bytes/token and the measured
+lax decode-step latency ratio, plus the kernel's analytic HBM traffic.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, timed
+from repro.core.compressed import cache_footprint
+from repro.models.attention import decode_attention
+
+
+def run(B: int = 4, Hkv: int = 8, m: int = 8, T: int = 4096,
+        d: int = 128, R: int = 64) -> List[Row]:
+    H = Hkv * m
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q_full = jax.random.normal(ks[0], (B, H, 1, d))
+    k_full = jax.random.normal(ks[1], (B, Hkv, T, d))
+    v_full = jax.random.normal(ks[2], (B, Hkv, T, d))
+    valid = jnp.ones((T,), bool)
+
+    fn_full = jax.jit(lambda q, k, v: decode_attention(q, k, v, valid,
+                                                       0.1))
+    _, us_full = timed(fn_full, q_full, k_full, v_full)
+
+    q_c = q_full[..., :R]
+    k_c = k_full[..., :R]
+    v_c = v_full[..., :R]
+    _, us_comp = timed(fn_full, q_c, k_c, v_c)
+
+    fp = cache_footprint(Hkv, d, R, R)
+    print("\n== decode_costs: full vs compressed decode attention ==")
+    print(f"T={T} d={d} R={R}: lax step {us_full:.0f}us -> {us_comp:.0f}us "
+          f"({us_full/us_comp:.2f}x), cache bytes/token "
+          f"{fp.full_bytes} -> {fp.compressed_bytes} ({1/fp.ratio:.2f}x)")
+    hbm_full = B * Hkv * T * 2 * d * 2
+    hbm_comp = B * Hkv * T * 2 * R * 2
+    return [
+        ("decode_full_cache", us_full,
+         f"hbm_bytes={hbm_full};bytes_per_tok={fp.full_bytes}"),
+        ("decode_kqsvd_cache", us_comp,
+         f"hbm_bytes={hbm_comp};bytes_per_tok={fp.compressed_bytes}"),
+        ("decode_speedup", us_full / us_comp,
+         f"cache_reduction={1/fp.ratio:.3f}x"),
+    ]
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,72 @@
+"""Paper Fig. 2: attention-output error under K/Q rescaling (Thm 4).
+
+K <- beta*K, Q <- Q/beta leaves attention unchanged; K-SVD and KQ-SVD are
+invariant while Eigen degrades toward K-SVD as beta grows.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row, calibrated_fixture, eval_caches
+from repro.core.projections import Factors, solve_key, select_rank
+from repro.core.theory import mha_outputs, relative_fro
+
+BETAS = (1.0, 2.0, 5.0, 10.0, 100.0)
+
+
+def run(rank: int = 0, epsilon: float = 0.1) -> List[Row]:
+    cfg, model, params, acc, _ = calibrated_fixture()
+    caps = eval_caches(cfg, model, params)
+    w_out = model.group_output_weights(params)
+    dh = cfg.d_head
+    m_per = cfg.n_heads // cfg.n_kv_heads
+
+    t0 = time.perf_counter()
+    table = {m: [] for m in ("ksvd", "eigen", "kqsvd")}
+    for beta in BETAS:
+        errs = {m: [] for m in table}
+        for l, cap in enumerate(caps):
+            fk0, fq0, fv = acc.layer_factors(l)
+            R = rank or select_rank(tuple(fk0), epsilon)
+            for g in range(cfg.n_kv_heads):
+                K = cap["k"][:, g].reshape(-1, dh) * beta
+                Q = cap["q"][:, g * m_per:(g + 1) * m_per].reshape(
+                    -1, dh) / beta
+                V = cap["v"][:, g].reshape(-1, dh)
+                # projections learned on the RESCALED calibration stats
+                fk = Factors(fk0[g].V, fk0[g].sigma * beta)
+                fq = Factors(fq0[g].V, fq0[g].sigma / beta)
+                for method in table:
+                    kp = solve_key(method, fk, fq, R)
+                    o = mha_outputs(K, Q, V, w_out[l][g], kp, None)
+                    errs[method].append(
+                        relative_fro(o["out"], o["out_approx"]))
+        for method in table:
+            table[method].append(float(np.mean(errs[method])))
+    dt_us = (time.perf_counter() - t0) * 1e6
+
+    print("\n== fig2_unbalance: mean relative output error vs beta ==")
+    print(f"{'beta':>8s} " + " ".join(f"{m:>9s}" for m in table))
+    for i, beta in enumerate(BETAS):
+        print(f"{beta:8.1f} " + " ".join(f"{table[m][i]:9.4f}"
+                                         for m in table))
+    # Thm 4 checks: invariance + Eigen -> K-SVD
+    inv_kq = max(abs(v - table["kqsvd"][0]) for v in table["kqsvd"])
+    inv_ks = max(abs(v - table["ksvd"][0]) for v in table["ksvd"])
+    gap_start = abs(table["eigen"][0] - table["ksvd"][0])
+    gap_end = abs(table["eigen"][-1] - table["ksvd"][-1])
+    print(f"[check] invariance: kqsvd drift {inv_kq:.2e}, ksvd drift "
+          f"{inv_ks:.2e}; eigen->ksvd gap {gap_start:.4f} -> {gap_end:.4f}")
+    rows: List[Row] = [
+        ("fig2_kqsvd_drift", dt_us / len(BETAS), f"{inv_kq:.2e}"),
+        ("fig2_eigen_gap_beta1", dt_us / len(BETAS), f"{gap_start:.5f}"),
+        ("fig2_eigen_gap_beta100", dt_us / len(BETAS), f"{gap_end:.5f}"),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""Roofline report: aggregate the dry-run artifacts into the table used by
+EXPERIMENTS.md §Roofline (one row per arch x shape x variant x mesh)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from benchmarks.common import Row
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+COLS = ("arch", "shape", "variant", "t_compute", "t_memory",
+        "t_collective", "bottleneck", "useful_flops_frac",
+        "roofline_frac", "hbm_per_device_gib")
+
+
+def load(mesh: str = "pod_16x16") -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ART, mesh, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(mesh: str = "pod_16x16") -> List[Row]:
+    recs = load(mesh)
+    rows: List[Row] = []
+    ok = [r for r in recs if r.get("status") == "ok"]
+    print(f"\n== roofline ({mesh}): {len(ok)} compiled cells, "
+          f"{sum(r.get('status') == 'skip' for r in recs)} documented "
+          f"skips ==")
+    hdr = (f"{'arch':26s} {'shape':12s} {'var':10s} {'comp(ms)':>9s} "
+           f"{'mem(ms)':>9s} {'mProj(ms)':>9s} {'coll(ms)':>9s} "
+           f"{'bound*':>10s} {'useful%':>8s} {'roofK%':>6s} "
+           f"{'roof*%':>6s} {'GiB/dev':>8s}")
+    print(hdr)
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"],
+                                       r["variant"])):
+        bp = r.get("bottleneck_projected", r["bottleneck"])
+        rp = r.get("roofline_frac_projected", r["roofline_frac"])
+        rk = r.get("roofline_frac_kernel", r["roofline_frac"])
+        print(f"{r['arch']:26s} {r['shape']:12s} {r['variant']:10s} "
+              f"{r['t_compute']*1e3:9.2f} {r['t_memory']*1e3:9.2f} "
+              f"{r.get('t_memory_projected', 0)*1e3:9.2f} "
+              f"{r['t_collective']*1e3:9.2f} {bp:>10s} "
+              f"{r['useful_flops_frac']*100:8.1f} "
+              f"{rk*100:6.1f} {rp*100:6.1f} "
+              f"{r.get('hbm_per_device_gib', 0):8.1f}")
+        rows.append((f"roofline_{r['arch']}_{r['shape']}_{r['variant']}",
+                     r.get("t_compile_s", 0) * 1e6,
+                     f"bound={bp};roofK={rk*100:.1f}%;"
+                     f"roof={rp*100:.1f}%"))
+    errs = [r for r in recs if r.get("status") == "error"]
+    if errs:
+        print(f"!! {len(errs)} error cells:")
+        for r in errs:
+            print(f"   {r['arch']} {r['shape']} {r['variant']}: "
+                  f"{r.get('error', '?')[:100]}")
+    return rows
+
+
+def main() -> None:
+    run("pod_16x16")
+    if os.path.isdir(os.path.join(ART, "multipod_2x16x16")):
+        run("multipod_2x16x16")
+
+
+if __name__ == "__main__":
+    main()

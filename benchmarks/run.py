@@ -1,0 +1,56 @@
+"""Benchmark orchestrator.  One module per paper table/figure; prints the
+``name,us_per_call,derived`` CSV contract plus each module's own report.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig1,fig2,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (calibration_timing, decode_costs, fig1_methods,
+                        fig2_unbalance, roofline, table_rank_energy)
+
+def _roofline_both():
+    rows = roofline.run("pod_16x16")
+    import os
+    if os.path.isdir(os.path.join(roofline.ART, "multipod_2x16x16")):
+        rows += roofline.run("multipod_2x16x16")
+    return rows
+
+
+MODULES = {
+    "fig1": fig1_methods.run,
+    "fig2": fig2_unbalance.run,
+    "rank_energy": table_rank_energy.run,
+    "decode_costs": decode_costs.run,
+    "calibration": calibration_timing.run,
+    "roofline": _roofline_both,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(MODULES))
+    args = ap.parse_args()
+    names = (args.only.split(",") if args.only else list(MODULES))
+    rows = []
+    failed = []
+    for name in names:
+        try:
+            rows.extend(MODULES[name]() or [])
+        except Exception as e:       # keep the suite running
+            traceback.print_exc()
+            failed.append((name, str(e)))
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if failed:
+        print(f"\nFAILED benchmarks: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

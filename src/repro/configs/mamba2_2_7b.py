@@ -1,0 +1,26 @@
+"""Mamba2-2.7B — pure SSM (SSD), attention-free.
+
+[arXiv:2405.21060; unverified] 64L d_model=2560 d_ff=0 vocab=50280
+ssm_state=128.  No KV cache exists, so the paper's technique is
+inapplicable (DESIGN.md §Arch-applicability); the constant-size SSD state
+is the entire decode state.
+"""
+from repro.config import CompressionConfig, ModelConfig, SSMConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-2.7b",
+        family="ssm",
+        n_layers=64,
+        d_model=2560,
+        n_heads=0,
+        n_kv_heads=0,
+        d_ff=0,                       # Mamba-2 blocks have no separate MLP
+        vocab_size=50280,
+        tie_embeddings=True,
+        ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=64,
+                      n_groups=1, chunk_size=256),
+        compression=CompressionConfig(method="none"),
+        source="arXiv:2405.21060",
+    )

@@ -1,0 +1,21 @@
+"""TinyLlama-1.1B — llama2-architecture small.
+
+[arXiv:2401.02385; hf] 22L d_model=2048 32H (GQA kv=4) d_ff=5632
+vocab=32000.
+"""
+from repro.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="tinyllama-1.1b",
+        family="dense",
+        n_layers=22,
+        d_model=2048,
+        n_heads=32,
+        n_kv_heads=4,
+        d_head=64,
+        d_ff=5632,
+        vocab_size=32000,
+        source="arXiv:2401.02385; hf",
+    )

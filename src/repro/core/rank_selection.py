@@ -1,0 +1,9 @@
+"""Rank selection (paper §3.3): re-exported API.
+
+The energy rule lives in ``svd.energy_rank`` and the per-layer driver in
+``projections.select_rank``; this module is the stable public surface.
+"""
+from repro.core.svd import energy_rank
+from repro.core.projections import select_rank
+
+__all__ = ["energy_rank", "select_rank"]

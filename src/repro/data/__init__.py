@@ -1,0 +1,4 @@
+from repro.data.synthetic import (DataConfig, batches, calibration_batches,
+                                  sample_batch)
+
+__all__ = ["DataConfig", "batches", "calibration_batches", "sample_batch"]

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+flash/      prefill/train attention (BlockSpec-tiled, causal block skip)
+kq_decode/  decode attention over the KQ-SVD-compressed cache (the
+            paper's runtime hot spot)
+ssd/        Mamba-2 SSD chunk scan (jamba / mamba2 hot spot; inter-chunk
+            state carried in VMEM scratch across the sequential grid)
+
+Each kernel ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper) and ref.py (pure-jnp oracle); tests sweep shapes/dtypes in
+interpret mode.  The lax blockwise path in repro.models.attention is the
+dry-run/compile twin (Pallas TPU kernels do not lower on the CPU backend).
+"""

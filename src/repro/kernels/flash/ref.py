@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+from repro.models.attention import reference_attention
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    return reference_attention(q, k, v, causal=causal, window=window,
+                               scale=scale).astype(q.dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.kq_decode.ops import kq_decode_attention_op
+from repro.kernels.kq_decode.ref import kq_decode_attention_ref
+
+__all__ = ["kq_decode_attention_op", "kq_decode_attention_ref"]

@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: decode attention over the KQ-SVD-compressed cache.
+
+This is the paper's runtime hot spot.  Per decoded token we stream the
+compressed cache kc (T, R_k) / vc (T, R_v) HBM->VMEM in blocks of
+``block_t`` and keep the online-softmax statistics for all m query heads
+of a kv group in VREG/VMEM scratch.  The arithmetic intensity of decode
+attention is ~1 FLOP/byte — pure bandwidth — so the kernel's job is to
+touch every cache byte exactly once; the compression itself (R_k+R_v vs
+2*d_head) is what moves the roofline (DESIGN.md §1).
+
+Layout choices for TPU:
+* R_k / R_v are zero-padded to lane multiples (128) by the caller;
+* block_t is a sublane multiple (>=8; default 256);
+* grid (B, Hkv, Nt), sequential in Nt so scratch persists per (b, g);
+* the current length enters via scalar prefetch (SMEM) and masks the tail
+  block.
+
+Output: per-group aggregated values (B, H, R_v); the C_v up-projection
+(absorbing W^O) is a dense GEMM left outside the kernel where the MXU
+handles it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kq_decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
+                      m_ref, l_ref, acc_ref, *, block_t: int,
+                      scale: float):
+    t = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # (m, Rk)
+    k = k_ref[0, 0].astype(jnp.float32)               # (bt, Rk)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    tpos = t * block_t + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)
+    s = jnp.where(tpos <= pos_ref[0], s, NEG_INF)     # (m, bt)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    v = v_ref[0, 0].astype(jnp.float32)               # (bt, Rv)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(t == nt - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0, :, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def kq_decode_attention(qc, kc, vc, pos, *, block_t: int = 256,
+                        scale: float = 1.0, interpret: bool = True):
+    """qc: (B,H,Rk); kc: (B,Hkv,T,Rk); vc: (B,Hkv,T,Rv); pos: scalar.
+
+    Returns (B, H, Rv) group-aggregated values (softmax(qc kc^T) vc).
+    """
+    B, H, Rk = qc.shape
+    _, Hkv, T, _ = kc.shape
+    Rv = vc.shape[-1]
+    m = H // Hkv
+    bt = min(block_t, T)
+    assert T % bt == 0, (T, bt)
+    grid = (B, Hkv, T // bt)
+    qg = qc.reshape(B, Hkv, m, Rk)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_kq_decode_kernel, block_t=bt, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, m, Rk), lambda b, g, t, pos: (b, g, 0, 0)),
+            pl.BlockSpec((1, 1, bt, Rk), lambda b, g, t, pos: (b, g, t, 0)),
+            pl.BlockSpec((1, 1, bt, Rv), lambda b, g, t, pos: (b, g, t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, m, Rv),
+                               lambda b, g, t, pos: (b, g, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((m,), jnp.float32),
+            pltpu.VMEM((m,), jnp.float32),
+            pltpu.VMEM((m, Rv), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, m, Rv), qc.dtype),
+        interpret=interpret,
+    )(pos_arr, qg, kc, vc)
+    return out.reshape(B, H, Rv)

@@ -1,0 +1,16 @@
+"""jit'd public wrapper for the compressed-decode kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.kq_decode.kq_decode import kq_decode_attention
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_t", "scale", "interpret"))
+def kq_decode_attention_op(qc, kc, vc, pos, *, block_t=256, scale=1.0,
+                           interpret=True):
+    return kq_decode_attention(qc, kc, vc, pos, block_t=block_t,
+                               scale=scale, interpret=interpret)

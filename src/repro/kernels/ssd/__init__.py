@@ -1,0 +1,4 @@
+from repro.kernels.ssd.ops import ssd_chunk_scan_op
+from repro.kernels.ssd.ref import ssd_chunk_scan_ref
+
+__all__ = ["ssd_chunk_scan_op", "ssd_chunk_scan_ref"]

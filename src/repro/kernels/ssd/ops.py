@@ -1,0 +1,14 @@
+"""jit'd public wrapper for the SSD chunk-scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd.ssd import ssd_chunk_scan
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunk_scan_op(x, a, dt, B, C, *, chunk=128, interpret=True):
+    return ssd_chunk_scan(x, a, dt, B, C, chunk=chunk,
+                          interpret=interpret)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the SSD chunk-scan kernel (naive recurrence)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def ssd_chunk_scan_ref(x, a, dt, B, C):
+    """Token-by-token recurrence.  Shapes as in ssd_chunk_scan."""
+    x = np.asarray(x, np.float64)
+    a = np.asarray(a, np.float64)
+    dt = np.asarray(dt, np.float64)
+    B_ = np.asarray(B, np.float64)
+    C_ = np.asarray(C, np.float64)
+    Bsz, nh, S, hd = x.shape
+    G, n = B_.shape[1], B_.shape[-1]
+    rep = nh // G
+    B_ = np.repeat(B_, rep, axis=1)
+    C_ = np.repeat(C_, rep, axis=1)
+    h = np.zeros((Bsz, nh, n, hd))
+    y = np.zeros_like(x)
+    for t in range(S):
+        decay = np.exp(a[:, :, t])                           # (B, nh)
+        upd = np.einsum("bhn,bh,bhd->bhnd", B_[:, :, t], dt[:, :, t],
+                        x[:, :, t])
+        h = h * decay[..., None, None] + upd
+        y[:, :, t] = np.einsum("bhn,bhnd->bhd", C_[:, :, t], h)
+    return jnp.asarray(y, jnp.float32)

@@ -1,0 +1,290 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede any jax import: jax locks the device
+count on first init, and the production meshes need 512 host devices
+(16x16 single-pod, 2x16x16 multi-pod).
+
+Per cell this driver:
+  1. builds abstract inputs (ShapeDtypeStruct, no allocation) and
+     NamedShardings from repro.launch.specs;
+  2. ``jax.jit(step, in_shardings=...).lower(...).compile()``;
+  3. records ``memory_analysis()`` (fits-per-device proof),
+     ``cost_analysis()`` (FLOPs/bytes for the roofline) and the parsed
+     collective schedule into artifacts/dryrun/<mesh>/<cell>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch deepseek-67b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--jobs-filter k]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.config import (ModelConfig, SHAPES, ShapeSpec, TrainConfig,
+                          shape_applicable)
+from repro.configs import get_config, list_archs
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.models.layers import dtype_of
+from repro.models.model import build_model
+from repro.roofline import hlo_cost
+from repro.roofline.analysis import (Roofline, attn_substitution,
+                                     model_flops_for, parse_collectives,
+                                     summarize, useful_bytes_for)
+from repro.sharding.partition import params_shardings, use_mesh
+from repro.train.steps import (make_decode_step, make_prefill_step,
+                               make_train_step)
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+
+def train_config_for(cfg: ModelConfig, n_dp: int = 16,
+                     global_batch: int = 256) -> TrainConfig:
+    """Memory-vs-traffic policy by model size.
+
+    Gradient accumulation re-reads every weight per microbatch, so it is
+    pure HBM overhead unless activations would not fit: keep accum=1 for
+    small models, scale up with parameter count (activation footprint per
+    sequence grows with d_model * layers).  >=100B configs also switch to
+    Adafactor (optimizer-state compression, DESIGN.md §5).
+    """
+    n = cfg.param_count()
+    accum = 16 if n > 30e9 else (4 if n > 8e9 else 1)
+    # the global microbatch must still cover the data axes, or GSPMD
+    # replicates the batch across dp shards (found on the multipod mesh:
+    # accum=16 with dp=32 left a 16-sequence microbatch -> replicated
+    # compute, useful FLOPs 75% -> 28%)
+    accum = min(accum, max(1, global_batch // n_dp))
+    return TrainConfig(
+        optimizer="adafactor" if n > 100e9 else "adamw",
+        grad_accum=accum)
+
+
+def _lower_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, variant: str):
+    """Returns (lowered, donate_note). variant: baseline | kqsvd."""
+    model = build_model(cfg)
+    params_abs = S.abstract_params(model)
+    # NOTE: serve=True ("resident" contracting-dim sharding) was tried as
+    # §Perf iteration D4 and REFUTED: GSPMD still materializes the
+    # gathered weights and the MoE dispatch constraints conflict with
+    # dp-sharded expert weights (jamba decode collective 28->209 ms).
+    # ZeRO-3 gather-at-use remains the serving layout.
+    p_shard_serve = params_shardings(params_abs, mesh, fsdp=True)
+
+    n_dp_ = int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                         if a in ("pod", "data")]))
+    if shape.kind == "train":
+        tc = train_config_for(cfg, n_dp_, shape.global_batch)
+        step = make_train_step(model, tc)
+        opt_abs = S.abstract_opt_state(params_abs, tc)
+        batch_abs = S.batch_specs(cfg, shape.global_batch, shape.seq_len,
+                                  with_labels=True)
+        ps = params_shardings(params_abs, mesh, fsdp=tc.fsdp)
+        os_ = params_shardings(opt_abs, mesh, fsdp=tc.fsdp)
+        bs = S.batch_shardings(batch_abs, mesh)
+        fn = jax.jit(step, in_shardings=(ps, os_, bs))
+        return fn.lower(params_abs, opt_abs, batch_abs)
+
+    compressed = variant.startswith("kqsvd")
+    ranks = S.default_ranks(cfg) if compressed else (0, 0)
+    if variant == "kqsvd_int8":
+        cfg = dataclasses.replace(cfg, cache_quant="int8")
+    model_ = build_model(cfg)
+
+    if shape.kind == "prefill":
+        # vlm: the patch tokens prepend to the text sequence
+        max_len = shape.seq_len + cfg.num_patch_tokens
+        step = make_prefill_step(model_, max_len, compressed)
+        batch_abs = S.batch_specs(cfg, shape.global_batch, shape.seq_len,
+                                  with_labels=False)
+        bs = S.batch_shardings(batch_abs, mesh)
+        if compressed:
+            proj_abs = S.abstract_projections(model_, ranks)
+            pj = S.projection_shardings(proj_abs, mesh)
+            fn = jax.jit(step, in_shardings=(p_shard_serve, pj, bs))
+            return fn.lower(params_abs, proj_abs, batch_abs)
+        fn = jax.jit(step, in_shardings=(p_shard_serve, bs))
+        return fn.lower(params_abs, batch_abs)
+
+    # decode
+    step = make_decode_step(model_, compressed)
+    cache_abs = S.abstract_cache(model_, shape.global_batch, shape.seq_len,
+                                 ranks)
+    seq_sharded = shape.global_batch == 1
+    cs = S.cache_shardings(cache_abs, mesh, seq_sharded=seq_sharded)
+    tok_abs = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    ts = S.batch_shardings({"tokens": tok_abs}, mesh)["tokens"]
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    pos_s = S.replicated(mesh)
+    if compressed:
+        proj_abs = S.abstract_projections(model_, ranks)
+        pj = S.projection_shardings(proj_abs, mesh)
+        fn = jax.jit(step,
+                     in_shardings=(p_shard_serve, pj, cs, ts, pos_s))
+        return fn.lower(params_abs, proj_abs, cache_abs, tok_abs, pos_abs)
+    fn = jax.jit(step, in_shardings=(p_shard_serve, cs, ts, pos_s))
+    return fn.lower(params_abs, cache_abs, tok_abs, pos_abs)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             variant: str = "baseline",
+             out_dir: Optional[str] = None) -> Optional[dict]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "variant": variant, "status": "skip", "reason": why,
+    }
+    out_dir = out_dir or ARTIFACT_DIR
+    os.makedirs(os.path.join(out_dir, mesh_name), exist_ok=True)
+    path = os.path.join(out_dir, mesh_name,
+                        f"{arch}__{shape_name}__{variant}.json")
+    if not ok:
+        with open(path, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"SKIP  {arch} {shape_name} {variant}: {why}")
+        return record
+    if variant.startswith("kqsvd") and (cfg.attention_free
+                                        or shape.kind == "train"):
+        record["reason"] = "kqsvd variant n/a (attention-free or train)"
+        with open(path, "w") as f:
+            json.dump(record, f, indent=2)
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        with use_mesh(mesh):
+            lowered = _lower_cell(cfg, shape, mesh, variant)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+    except Exception as e:
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+        with open(path, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"ERROR {arch} {shape_name} {variant}: {e}")
+        return record
+
+    n_dev = mesh.devices.size
+    coll = parse_collectives(hlo, n_dev)
+    # trip-count-aware walker (XLA's cost_analysis counts while bodies
+    # once — see roofline/hlo_cost.py); per-device post-SPMD -> totals
+    hc = hlo_cost.HloCost(hlo)
+    walked = hc.totals()
+    flops_total = walked.flops * n_dev
+    bytes_total = walked.bytes * n_dev
+    # flash-kernel substitution for the lax attention stand-in
+    n_dp = int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                        if a in ("pod", "data")]))
+    accum = (train_config_for(cfg, n_dp, shape.global_batch).grad_accum
+             if shape.kind == "train" else 1)
+    removed, added, n_loops = attn_substitution(
+        cfg, shape, hc.while_summary(), accum,
+        mesh.shape.get("model", 1), n_dp)
+    bytes_kernel = max(0.0, walked.bytes - removed + added) * n_dev
+    r = Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, variant=variant,
+        n_devices=n_dev,
+        hlo_flops=flops_total,
+        hlo_bytes=bytes_total,
+        hlo_bytes_kernel=bytes_kernel,
+        collective_wire_bytes_per_dev=coll.wire_bytes,
+        model_flops=model_flops_for(cfg, shape, variant),
+        useful_bytes=useful_bytes_for(cfg, shape, variant),
+        mem_args=float(getattr(mem, "argument_size_in_bytes", 0)),
+        mem_out=float(getattr(mem, "output_size_in_bytes", 0)),
+        mem_temp=float(getattr(mem, "temp_size_in_bytes", 0)),
+        collectives={"by_op": coll.by_op, "count": coll.count,
+                     "top": coll.top, "attn_loops_subbed": n_loops},
+    ).finalize()
+    record.update(r.to_dict())
+    record["status"] = "ok"
+    record["t_lower_s"] = t_lower
+    record["t_compile_s"] = t_compile
+    record["dot_flops_total"] = walked.dot_flops * n_dev
+    record["xla_flops_per_dev"] = float(cost.get("flops", 0.0))
+    record["xla_bytes_per_dev"] = float(cost.get("bytes accessed", 0.0))
+    record["walker_warnings"] = walked.warnings[:5]
+    record["hbm_per_device_gib"] = (r.mem_args + r.mem_out + r.mem_temp) \
+        / 2**30
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+    print(summarize(r) + f"  [lower {t_lower:.0f}s compile {t_compile:.0f}s"
+          f" hbm/dev {record['hbm_per_device_gib']:.1f}GiB]")
+    return record
+
+
+def all_cells(include_variants: bool = True):
+    cells = []
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape_name in SHAPES:
+            shape = SHAPES[shape_name]
+            ok, _ = shape_applicable(cfg, shape)
+            cells.append((arch, shape_name, "baseline"))
+            if (include_variants and ok and shape.kind == "decode"
+                    and not cfg.attention_free):
+                cells.append((arch, shape_name, "kqsvd"))
+                if cfg.mla is None:          # int8 path: GQA caches
+                    cells.append((arch, shape_name, "kqsvd_int8"))
+    return cells
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--jobs-filter", type=int, default=None,
+                    help="run cells where index %% 4 == this (sharded runs)")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        cells = all_cells()
+        for i, (arch, shape, variant) in enumerate(cells):
+            if args.jobs_filter is not None and i % 4 != args.jobs_filter:
+                continue
+            mesh_name = ("multipod_2x16x16" if args.multi_pod
+                         else "pod_16x16")
+            path = os.path.join(args.out or ARTIFACT_DIR, mesh_name,
+                                f"{arch}__{shape}__{variant}.json")
+            if args.skip_existing and os.path.exists(path):
+                try:
+                    ok = json.load(open(path)).get("status") in ("ok",
+                                                                 "skip")
+                except Exception:
+                    ok = False
+                if ok:
+                    continue
+            run_cell(arch, shape, args.multi_pod, variant, args.out)
+    else:
+        run_cell(args.arch, args.shape, args.multi_pod, args.variant,
+                 args.out)
+
+
+if __name__ == "__main__":
+    main()

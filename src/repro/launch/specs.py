@@ -1,0 +1,245 @@
+"""ShapeDtypeStruct input specs + shardings for every (arch x shape) cell.
+
+``input_specs(cfg, shape)`` returns abstract stand-ins (weak-type-correct,
+shardable, no device allocation) for every input of the step being lowered:
+
+* train_4k      -> train_step(params, opt_state, batch)
+* prefill_32k   -> prefill_step(params[, proj], batch)
+* decode_32k /
+  long_500k     -> decode_step(params[, proj], cache, tokens, pos)
+
+``*_shardings`` map the same pytrees to NamedShardings: batch over the
+data axes, heads/experts/vocab over the model axis, and — for the B=1
+long-context decode — the cache sequence axis over ``data`` (SP).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.config import ModelConfig, ShapeSpec, TrainConfig
+from repro.models.layers import dtype_of
+from repro.models.model import LM
+from repro.sharding.partition import dp_axes, params_shardings
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Batches
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int,
+                with_labels: bool) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    label_len = seq
+    if cfg.inputs_embeds:
+        out["embeds"] = _sds((batch, seq, cfg.d_model), dtype_of(cfg.dtype))
+    else:
+        out["tokens"] = _sds((batch, seq), jnp.int32)
+    if cfg.num_patch_tokens:
+        out["image_embeds"] = _sds((batch, cfg.num_patch_tokens,
+                                    cfg.d_model), dtype_of(cfg.dtype))
+        label_len = seq + cfg.num_patch_tokens
+    if with_labels:
+        out["labels"] = _sds((batch, label_len), jnp.int32)
+    return out
+
+
+def batch_shardings(batch_tree, mesh: Mesh) -> Dict[str, Any]:
+    dp = dp_axes(mesh)
+
+    def spec(leaf):
+        parts = [None] * len(leaf.shape)
+        dpsize = int(np.prod([mesh.shape[a] for a in dp]))
+        if leaf.shape and leaf.shape[0] % dpsize == 0 and dpsize > 1:
+            parts[0] = dp
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree.map(spec, batch_tree)
+
+
+# ---------------------------------------------------------------------------
+# Params / optimizer state
+# ---------------------------------------------------------------------------
+
+
+def abstract_params(model: LM):
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def abstract_opt_state(params_abs, tc: TrainConfig):
+    return jax.eval_shape(lambda p: optim.init_state(p, tc), params_abs)
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+def abstract_cache(model: LM, batch: int, max_len: int,
+                   ranks: Tuple[int, int]):
+    return jax.eval_shape(
+        lambda: model.init_cache(batch, max_len, ranks))
+
+
+_SEQ_AXIS_BY_LEAF = {
+    # leaf name -> (batch, kvhead, seq dims, base rank) in the layer cache
+    "k": (0, 1, 2, 4), "v": (0, 1, 2, 4),
+    "kc": (0, 1, 2, 4), "vc": (0, 1, 2, 4),
+    "kscale": (0, 1, 2, 3), "vscale": (0, 1, 2, 3),
+    "c": (0, None, 1, 3), "cc": (0, None, 1, 3), "ccv": (0, None, 1, 3),
+    "kr": (0, None, 1, 3),
+}
+
+
+def cache_shardings(cache_tree, mesh: Mesh, *, seq_sharded: bool):
+    """NamedShardings for a cache pytree.
+
+    Batch on the data axes.  The model axis goes on kv heads when they
+    divide it; otherwise on the SEQUENCE axis (FlashDecoding-style
+    sequence-parallel decode: per-shard partial softmax stats, GSPMD
+    inserts the tiny stat all-reduce).  Without this, a kv=8 cache on a
+    16-way model axis is fully replicated — 16x the HBM and bandwidth
+    (found in the roofline pass, §Perf iteration D2).  For ``seq_sharded``
+    (the B=1 long-context decode) the sequence axis also takes the data
+    axes.
+    """
+    dp = dp_axes(mesh)
+    dpsize = int(np.prod([mesh.shape[a] for a in dp]))
+    msize = mesh.shape.get("model", 1)
+
+    def spec_for(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        nd = len(leaf.shape)
+        parts = [None] * nd
+        if name in _SEQ_AXIS_BY_LEAF:
+            b_dim, h_dim, s_dim, base = _SEQ_AXIS_BY_LEAF[name]
+            off = nd - base                              # scan-stacking
+            b_dim += off
+            s_dim += off
+            if h_dim is not None:
+                h_dim += off
+            heads_shardable = (h_dim is not None and msize > 1
+                               and leaf.shape[h_dim] % msize == 0)
+            seq_axes = []
+            if seq_sharded and dpsize > 1:
+                seq_axes.append(dp)
+            if not heads_shardable and msize > 1:
+                seq_axes.append("model")
+            if heads_shardable:
+                parts[h_dim] = "model"
+            if not seq_sharded and dpsize > 1 \
+                    and leaf.shape[b_dim] % dpsize == 0:
+                parts[b_dim] = dp
+            if seq_axes:
+                flat = []
+                for a in seq_axes:
+                    flat.extend(a if isinstance(a, tuple) else (a,))
+                size = int(np.prod([mesh.shape[a] for a in flat]))
+                if leaf.shape[s_dim] % size == 0:
+                    parts[s_dim] = tuple(flat)
+        elif name == "conv":                              # (.., B, Cd, K-1)
+            if not seq_sharded and leaf.shape[-3] % dpsize == 0 \
+                    and dpsize > 1:
+                parts[-3] = dp
+            if leaf.shape[-2] % msize == 0 and msize > 1:
+                parts[-2] = "model"
+        elif name == "s":                                 # (.., B,nh,n,hd)
+            if not seq_sharded and leaf.shape[-4] % dpsize == 0 \
+                    and dpsize > 1:
+                parts[-4] = dp
+            if leaf.shape[-3] % msize == 0 and msize > 1:
+                parts[-3] = "model"
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_tree)
+
+
+# ---------------------------------------------------------------------------
+# Projections (the paper's factors) as abstract inputs
+# ---------------------------------------------------------------------------
+
+
+def default_ranks(cfg: ModelConfig) -> Tuple[int, int]:
+    """Representative compressed ranks (~eps=0.1): half the head dim.
+
+    MLA stores ONE shared latent (kv_lora) as both K and V, while the
+    compressed form stores separate score/value factors (cc, ccv) — so the
+    per-path rank must be kv_lora/4 for a 2x cache saving (kv_lora/2 each
+    would merely break even; found in the first roofline pass).
+    """
+    if cfg.mla is not None:
+        r = cfg.mla.kv_lora_rank // 4
+        return r, r
+    return max(1, cfg.d_head // 2), max(1, cfg.d_head // 2)
+
+
+def abstract_projections(model: LM, ranks: Tuple[int, int]):
+    """ShapeDtypeStruct pytree matching LM.projections_pytree output."""
+    cfg = model.cfg
+    rk, rv = ranks
+    dt = dtype_of(cfg.dtype)
+    H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.d_model
+
+    def layer_spec(kind):
+        if kind == "mla":
+            lora = cfg.mla.kv_lora_rank
+            return {"a_k": _sds((1, lora, rk), dt),
+                    "b_q": _sds((1, lora, rk), dt),
+                    "a_v": _sds((1, lora, rv), dt),
+                    "c_v": _sds((1, rv, H * D), dt)}
+        m = H // Hkv
+        dh = cfg.d_head
+        return {"a_k": _sds((Hkv, dh, rk), dt),
+                "b_q": _sds((Hkv, dh, rk), dt),
+                "a_v": _sds((Hkv, dh, rv), dt),
+                "c_v": _sds((Hkv, rv, m * D), dt)}
+
+    kinds = cfg.layer_kinds()
+    prefix_attn = [i for i in model.prefix if kinds[i] in ("attn", "mla")]
+    body_attn = [i for i in model.attn_layers if i not in prefix_attn]
+    pre = [layer_spec(kinds[i]) for i in prefix_attn]
+    steps = None
+    if body_attn:
+        one = layer_spec(kinds[body_attn[0]])
+        n = len(body_attn)
+        steps = jax.tree.map(
+            lambda s: _sds((n,) + s.shape, s.dtype), one)
+    return {"prefix": pre, "steps": steps}
+
+
+def projection_shardings(proj_tree, mesh: Mesh):
+    msize = mesh.shape.get("model", 1)
+
+    def spec_for(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        nd = len(leaf.shape)
+        parts = [None] * nd
+        # head dim is at -3 for all four factor kinds
+        if nd >= 3 and leaf.shape[-3] % msize == 0 and msize > 1:
+            parts[-3] = "model"
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree_util.tree_map_with_path(spec_for, proj_tree)
+
+
+# ---------------------------------------------------------------------------
+# Full per-cell spec bundles
+# ---------------------------------------------------------------------------
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def tree_replicated(tree, mesh: Mesh):
+    return jax.tree.map(lambda _: replicated(mesh), tree)

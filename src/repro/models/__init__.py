@@ -1,0 +1,4 @@
+"""Model zoo: dense/GQA/SWA attention, MLA, Mamba-2 SSD, MoE, hybrid."""
+from repro.models.model import LM, build_model
+
+__all__ = ["LM", "build_model"]

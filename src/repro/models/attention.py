@@ -1,0 +1,469 @@
+"""Attention: blockwise-causal training/prefill, cached decode, compression.
+
+Three execution paths:
+
+* ``blockwise_attention`` — flash-style attention in pure ``lax.scan`` with
+  online softmax; used for train/prefill lowering (the Pallas kernel in
+  ``repro.kernels.flash`` is the TPU runtime twin, validated against the
+  same reference).  Two schedules:
+    - masked:   every (q-block, k-block) pair is computed and masked
+                (2x FLOPs for causal — the naive baseline);
+    - packed:   triangular block packing — only pairs with k <= q (and
+                within the sliding window) are executed; exactly the
+                useful FLOPs.  ``cfg.causal_block_skip`` selects it.
+* ``decode_attention`` — one-token attention over a (possibly compressed)
+  cache; bandwidth-bound, the paper's target.
+* compressed variants — scores via (qB)(kA)^T, values via (p (vA)) C with
+  C absorbing W^O (KQ-SVD factors from ``repro.core``).
+
+All softmax statistics are f32 regardless of activation dtype.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models.layers import apply_rope, init_dense
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention in pure lax
+# ---------------------------------------------------------------------------
+
+
+def _gqa_expand(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """(B, Hkv, ...) -> (B, H, ...) by repeating each kv head m times."""
+    m = n_heads // k.shape[1]
+    if m == 1:
+        return k
+    return jnp.repeat(k, m, axis=1)
+
+
+def reference_attention(q, k, v, *, causal=True, window=0,
+                        scale: Optional[float] = None,
+                        pos0_q: int = 0):
+    """O(S^2)-memory oracle (tests + tiny shapes). q:(B,H,S,dh)."""
+    B, H, Sq, dh = q.shape
+    Sk = k.shape[2]
+    k = _gqa_expand(k, H)
+    v = _gqa_expand(v, H)
+    scale = scale or 1.0 / math.sqrt(dh)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    qpos = jnp.arange(Sq) + pos0_q
+    kpos = jnp.arange(Sk)
+    mask = kpos[None, :] <= qpos[:, None] if causal else jnp.ones(
+        (Sq, Sk), bool)
+    if window:
+        mask = mask & (qpos[:, None] - kpos[None, :] < window)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
+
+
+def blockwise_attention(q, k, v, *, causal=True, window=0,
+                        block_q=512, block_k=512,
+                        packed=True, scale=None):
+    """Flash-style blockwise attention.  q:(B,H,S,dh), k/v:(B,Hkv,S,dh).
+
+    ``packed=True`` uses triangular block packing (causal only, requires
+    block_q == block_k): the scan runs over exactly the lower-triangle
+    (q-block, k-block) pairs so no masked-out block is ever computed.
+    """
+    B, H, S, dh = q.shape
+    scale = scale or 1.0 / math.sqrt(dh)
+    k = _gqa_expand(k, H)
+    v = _gqa_expand(v, H)
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    if S % bq or S % bk:
+        return reference_attention(q, k, v, causal=causal, window=window,
+                                   scale=scale)
+    if packed and causal and bq == bk:
+        return _packed_causal(q, k, v, bq, window, scale)
+    return _masked_blockwise(q, k, v, bq, bk, causal, window, scale)
+
+
+def _masked_blockwise(q, k, v, bq, bk, causal, window, scale):
+    B, H, S, dh = q.shape
+    dv = v.shape[-1]
+    Nq, Nk = S // bq, S // bk
+    qb = q.reshape(B, H, Nq, bq, dh)
+    kb = k.reshape(B, H, Nk, bk, dh)
+    vb = v.reshape(B, H, Nk, bk, dv)
+
+    def q_block(i):
+        qi = qb[:, :, i]                                    # (B,H,bq,dh)
+        qpos = i * bq + jnp.arange(bq)
+
+        def kv_step(carry, j):
+            m, l, acc = carry
+            kj = jax.lax.dynamic_index_in_dim(kb, j, 2, keepdims=False)
+            vj = jax.lax.dynamic_index_in_dim(vb, j, 2, keepdims=False)
+            s = jnp.einsum("bhqd,bhkd->bhqk", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            kpos = j * bk + jnp.arange(bk)
+            mask = jnp.ones((bq, bk), bool)
+            if causal:
+                mask = kpos[None, :] <= qpos[:, None]
+            if window:
+                mask = mask & (qpos[:, None] - kpos[None, :] < window)
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, vj.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, H, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, bq), jnp.float32)
+        a0 = jnp.zeros((B, H, bq, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      jnp.arange(Nk))
+        return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+    out = jax.lax.map(q_block, jnp.arange(Nq))              # (Nq,B,H,bq,dv)
+    return out.transpose(1, 2, 0, 3, 4).reshape(B, H, S, dv)
+
+
+def _packed_causal(q, k, v, b, window, scale):
+    """Triangular block packing: scan over exactly the needed pairs."""
+    B, H, S, dh = q.shape
+    dv = v.shape[-1]
+    N = S // b
+    wblocks = N if not window else int(math.ceil(window / b))
+    pairs = [(i, j) for i in range(N) for j in range(max(0, i - wblocks),
+                                                     i + 1)]
+    qi_arr = jnp.asarray(np.array([p[0] for p in pairs], np.int32))
+    kj_arr = jnp.asarray(np.array([p[1] for p in pairs], np.int32))
+    qb = q.reshape(B, H, N, b, dh)
+    kb = k.reshape(B, H, N, b, dh)
+    vb = v.reshape(B, H, N, b, dv)
+    ar = jnp.arange(b)
+
+    def step(carry, idx):
+        m, l, acc = carry                                   # (B,H,N,b[,dh])
+        i, j = idx
+        qi = jax.lax.dynamic_index_in_dim(qb, i, 2, keepdims=False)
+        kj = jax.lax.dynamic_index_in_dim(kb, j, 2, keepdims=False)
+        vj = jax.lax.dynamic_index_in_dim(vb, j, 2, keepdims=False)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qi, kj,
+                       preferred_element_type=jnp.float32) * scale
+        qpos = i * b + ar
+        kpos = j * b + ar
+        mask = kpos[None, :] <= qpos[:, None]
+        if window:
+            mask = mask & (qpos[:, None] - kpos[None, :] < window)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        mi = jax.lax.dynamic_index_in_dim(m, i, 2, keepdims=False)
+        li = jax.lax.dynamic_index_in_dim(l, i, 2, keepdims=False)
+        ai = jax.lax.dynamic_index_in_dim(acc, i, 2, keepdims=False)
+        m_new = jnp.maximum(mi, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(mi - m_new)
+        li = li * corr + p.sum(-1)
+        ai = ai * corr[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p, vj.astype(jnp.float32))
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, i, 2)
+        l = jax.lax.dynamic_update_index_in_dim(l, li, i, 2)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, ai, i, 2)
+        return (m, l, acc), None
+
+    m0 = jnp.full((B, H, N, b), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, N, b), jnp.float32)
+    a0 = jnp.zeros((B, H, N, b, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (qi_arr, kj_arr))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype).reshape(B, H, S, dv)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention over a cache (full or compressed)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(q, cache_k, cache_v, valid_mask, scale):
+    """q: (B,H,1,dk); cache_k/v: (B,Hkv,T,*); valid_mask: (T,) or (B,T)."""
+    B, H, _, dk = q.shape
+    Hkv = cache_k.shape[1]
+    m = H // Hkv
+    qg = q.reshape(B, Hkv, m, dk)
+    s = jnp.einsum("bgmd,bgtd->bgmt", qg, cache_k,
+                   preferred_element_type=jnp.float32) * scale
+    if valid_mask.ndim == 1:
+        vm = valid_mask[None, None, None, :]
+    else:
+        vm = valid_mask[:, None, None, :]
+    s = jnp.where(vm, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    agg = jnp.einsum("bgmt,bgtr->bgmr", p.astype(cache_v.dtype), cache_v)
+    return agg                                              # (B,Hkv,m,rv)
+
+
+# ---------------------------------------------------------------------------
+# Attention layer (params + modes)
+# ---------------------------------------------------------------------------
+
+
+def padded_heads(cfg: ModelConfig) -> int:
+    return cfg.qhead_pad or cfg.n_heads
+
+
+def head_mask(cfg: ModelConfig) -> Optional[jnp.ndarray]:
+    """(Hp,) mask of real query heads under group-preserving padding.
+
+    With qhead_pad, each kv group is padded from m to m_p query heads so
+    the padded total divides the TP axis.  Pad heads have zero weights and
+    their outputs are masked, so the function (and its gradients) equal
+    the unpadded model exactly while every attention tensor shards.
+    """
+    Hp, H = padded_heads(cfg), cfg.n_heads
+    if Hp == H:
+        return None
+    Hkv = cfg.n_kv_heads
+    m, m_p = H // Hkv, Hp // Hkv
+    mask = (jnp.arange(Hp) % m_p) < m
+    return mask.astype(jnp.float32)
+
+
+def init_attention(key, cfg: ModelConfig, dtype) -> Dict[str, jnp.ndarray]:
+    D, Hkv, dh = cfg.d_model, cfg.n_kv_heads, cfg.d_head
+    Hp = padded_heads(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": init_dense(k1, (D, Hp, dh), D, dtype),
+        "wk": init_dense(k2, (D, Hkv, dh), D, dtype),
+        "wv": init_dense(k3, (D, Hkv, dh), D, dtype),
+        "wo": init_dense(k4, (Hp, dh, D), Hp * dh, dtype),
+    }
+    mask = head_mask(cfg)
+    if mask is not None:
+        p["wq"] = p["wq"] * mask[None, :, None].astype(dtype)
+        p["wo"] = p["wo"] * mask[:, None, None].astype(dtype)
+    return p
+
+
+def _qkv(p, x, cfg: ModelConfig, positions):
+    """Project + rope.  x: (B,S,D) -> q (B,H,S,dh), k/v (B,Hkv,S,dh)."""
+    q = jnp.einsum("bsd,dhe->bhse", x, p["wq"])
+    k = jnp.einsum("bsd,dhe->bhse", x, p["wk"])
+    v = jnp.einsum("bsd,dhe->bhse", x, p["wv"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_train(p, x, cfg: ModelConfig, pos0: int = 0) -> jnp.ndarray:
+    S = x.shape[1]
+    positions = jnp.arange(S) + pos0
+    q, k, v = _qkv(p, x, cfg, positions)
+    out = blockwise_attention(
+        q, k, v, causal=True, window=cfg.sliding_window,
+        block_q=cfg.attn_block_q, block_k=cfg.attn_block_k,
+        packed=cfg.causal_block_skip)
+    mask = head_mask(cfg)
+    if mask is not None:    # zero pad-head outputs => their grads stay 0
+        out = out * mask[None, :, None, None].astype(out.dtype)
+    return jnp.einsum("bhse,hed->bsd", out, p["wo"])
+
+
+def attn_calibrate(p, x, cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict]:
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    q, k, v = _qkv(p, x, cfg, positions)
+    out = blockwise_attention(
+        q, k, v, causal=True, window=cfg.sliding_window,
+        block_q=cfg.attn_block_q, block_k=cfg.attn_block_k,
+        packed=cfg.causal_block_skip)
+    y = jnp.einsum("bhse,hed->bsd", out, p["wo"])
+    if padded_heads(cfg) != cfg.n_heads:     # drop pad heads from stats
+        Hkv = cfg.n_kv_heads
+        m = cfg.n_heads // Hkv
+        m_p = padded_heads(cfg) // Hkv
+        B_, _, S_, dh_ = q.shape
+        q = q.reshape(B_, Hkv, m_p, S_, dh_)[:, :, :m].reshape(
+            B_, cfg.n_heads, S_, dh_)
+    captures = {"k": k, "q": q, "v": v}      # (B,Hkv,S,dh)/(B,H,S,dh)
+    return y, captures
+
+
+def group_output_weights(p, cfg: ModelConfig) -> np.ndarray:
+    """W^O stacked per kv group: (Hkv, dh, m*D) for the value-path solve.
+
+    Pad query heads (qhead_pad) are excluded: their weights are zero and
+    their caches do not exist."""
+    wo = np.asarray(p["wo"], np.float64)                     # (Hp, dh, D)
+    Hp, dh, D = wo.shape
+    Hkv = cfg.n_kv_heads
+    m = cfg.n_heads // Hkv
+    m_p = Hp // Hkv
+    wo = wo.reshape(Hkv, m_p, dh, D)[:, :m]
+    return wo.transpose(0, 2, 1, 3).reshape(Hkv, dh, m * D)
+
+
+def quantize_int8(x: jnp.ndarray, axis: int = -1):
+    """Symmetric per-vector int8 quantization: returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32)
+                           / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def make_attn_cache(cfg: ModelConfig, batch: int, max_len: int,
+                    proj_rank: Tuple[int, int] = (0, 0), dtype=jnp.bfloat16):
+    """Empty cache pytree for one attention layer."""
+    W = cfg.sliding_window or 0
+    T = min(max_len, W) if W else max_len
+    Hkv = cfg.n_kv_heads
+    rk, rv = proj_rank
+    int8 = rk and cfg.cache_quant == "int8"
+    if rk:
+        cdt = jnp.int8 if int8 else dtype
+        cache = {"kc": jnp.zeros((batch, Hkv, T, rk), cdt),
+                 "vc": jnp.zeros((batch, Hkv, T, rv), cdt)}
+        if int8:
+            cache["kscale"] = jnp.zeros((batch, Hkv, T), jnp.bfloat16)
+            cache["vscale"] = jnp.zeros((batch, Hkv, T), jnp.bfloat16)
+    else:
+        cache = {"k": jnp.zeros((batch, Hkv, T, cfg.d_head), dtype),
+                 "v": jnp.zeros((batch, Hkv, T, cfg.d_head), dtype)}
+    if W:
+        cache["slot_pos"] = jnp.full((T,), -1, jnp.int32)
+    return cache
+
+
+def attn_prefill(p, x, cfg: ModelConfig, max_len: int,
+                 proj: Optional[Dict] = None):
+    """Full-sequence attention; returns output and a length-max_len cache."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    q, k, v = _qkv(p, x, cfg, positions)
+    out = blockwise_attention(
+        q, k, v, causal=True, window=cfg.sliding_window,
+        block_q=cfg.attn_block_q, block_k=cfg.attn_block_k,
+        packed=cfg.causal_block_skip)
+    y = jnp.einsum("bhse,hed->bsd", out, p["wo"])
+    cache = make_attn_cache(
+        cfg, B, max_len,
+        (proj["a_k"].shape[-1], proj["a_v"].shape[-1]) if proj else (0, 0),
+        dtype=x.dtype)
+    W = cfg.sliding_window or 0
+    if W and S > W:
+        k_st, v_st, kept = k[:, :, S - W:], v[:, :, S - W:], W
+        kept_pos = jnp.arange(S - W, S)
+    else:
+        k_st, v_st, kept = k, v, S
+        kept_pos = jnp.arange(S)
+    if proj is not None:
+        k_st = jnp.einsum("bhtd,hdr->bhtr", k_st, proj["a_k"])
+        v_st = jnp.einsum("bhtd,hdr->bhtr", v_st, proj["a_v"])
+        if cfg.cache_quant == "int8":
+            k_st, ks = quantize_int8(k_st)
+            v_st, vs = quantize_int8(v_st)
+            updates = [("kc", k_st), ("vc", v_st), ("kscale", ks),
+                       ("vscale", vs)]
+        else:
+            updates = [("kc", k_st), ("vc", v_st)]
+    else:
+        updates = [("k", k_st), ("v", v_st)]
+    if W:
+        slots = kept_pos % W
+        for name, val in updates:
+            cache[name] = cache[name].at[:, :, slots].set(
+                val.astype(cache[name].dtype))
+        cache["slot_pos"] = cache["slot_pos"].at[slots].set(kept_pos)
+    else:
+        for name, val in updates:
+            cache[name] = jax.lax.dynamic_update_slice_in_dim(
+                cache[name], val.astype(cache[name].dtype), 0, 2)
+    return y, cache
+
+
+def attn_decode(p, x, cache: Dict, pos, cfg: ModelConfig,
+                proj: Optional[Dict] = None):
+    """One-token decode.  x: (B,1,D); pos: scalar int32 (current index)."""
+    B = x.shape[0]
+    dh = cfg.d_head
+    scale = 1.0 / math.sqrt(dh)
+    positions = jnp.full((1,), pos, jnp.int32)
+    q, k_new, v_new = _qkv(p, x, cfg, positions)            # S=1
+    W = cfg.sliding_window or 0
+    T = (cache["kc"] if proj is not None else cache["k"]).shape[2]
+    slot = (pos % W) if W else pos
+    if proj is not None:
+        k_st = jnp.einsum("bhtd,hdr->bhtr", k_new, proj["a_k"])
+        v_st = jnp.einsum("bhtd,hdr->bhtr", v_new, proj["a_v"])
+        int8 = cfg.cache_quant == "int8"
+        if int8:
+            k_st, ks_new = quantize_int8(k_st)
+            v_st, vs_new = quantize_int8(v_st)
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            cache["kc"], k_st.astype(cache["kc"].dtype), slot, 2)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            cache["vc"], v_st.astype(cache["vc"].dtype), slot, 2)
+        new_cache = dict(cache, kc=kc, vc=vc)
+        if int8:
+            new_cache["kscale"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["kscale"], ks_new.astype(jnp.bfloat16), slot, 2)
+            new_cache["vscale"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["vscale"], vs_new.astype(jnp.bfloat16), slot, 2)
+        # compress query with the group's B factor
+        Hkv = cfg.n_kv_heads
+        Hp = padded_heads(cfg)
+        m_p = Hp // Hkv
+        qg = q.reshape(B, Hkv, m_p, dh)
+        qc = jnp.einsum("bgmd,gdr->bgmr", qg, proj["b_q"]).reshape(
+            B, Hp, 1, -1)
+        keys, vals = kc, vc
+        qq = qc
+    else:
+        kk = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k_new.astype(cache["k"].dtype), slot, 2)
+        vv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v_new.astype(cache["v"].dtype), slot, 2)
+        new_cache = dict(cache, k=kk, v=vv)
+        keys, vals = kk, vv
+        qq = q
+    if W:
+        slot_pos = cache["slot_pos"].at[slot].set(pos)
+        new_cache["slot_pos"] = slot_pos
+        valid = (slot_pos >= 0) & (slot_pos > pos - W)
+    else:
+        valid = jnp.arange(T) <= pos
+    if proj is not None and cfg.cache_quant == "int8":
+        # dequantize on the fly: HBM reads stay int8
+        Hkv = cfg.n_kv_heads
+        m = padded_heads(cfg) // Hkv
+        qg8 = qq.reshape(B, Hkv, m, -1)
+        s = jnp.einsum("bgmr,bgtr->bgmt", qg8.astype(jnp.float32),
+                       keys.astype(jnp.float32)) * scale
+        s = s * new_cache["kscale"].astype(jnp.float32)[:, :, None, :]
+        vm = valid[None, None, None, :] if valid.ndim == 1 \
+            else valid[:, None, None, :]
+        s = jnp.where(vm, s, NEG_INF)
+        prob = jax.nn.softmax(s, axis=-1)
+        pv = prob * new_cache["vscale"].astype(jnp.float32)[:, :, None, :]
+        agg = jnp.einsum("bgmt,bgtr->bgmr", pv.astype(jnp.bfloat16),
+                         vals.astype(jnp.bfloat16))
+    else:
+        agg = decode_attention(qq, keys, vals, valid, scale)  # (B,Hkv,m,rv)
+    if proj is not None:
+        Hkv = cfg.n_kv_heads
+        m = cfg.n_heads // Hkv                  # real heads (c_v is real-m)
+        D = cfg.d_model
+        c_v = proj["c_v"].reshape(Hkv, -1, m, D)
+        y = jnp.einsum("bgmr,grmd->bd", agg[:, :, :m], c_v)[:, None, :]
+    else:
+        out = agg.reshape(B, padded_heads(cfg), dh)
+        y = jnp.einsum("bhe,hed->bd", out, p["wo"])[:, None, :]
+    return y.astype(x.dtype), new_cache

@@ -1,0 +1,161 @@
+"""Decoder blocks and the scan-step grouping.
+
+A *step* is the unit of ``lax.scan`` over depth: one layer for homogeneous
+stacks, one hybrid period (e.g. Jamba's [ssm x4, attn, ssm x3]) for hybrid
+stacks.  Every step in the scanned body has an identical pytree structure;
+heterogeneous leading layers (DeepSeek-V2's first dense layer) live in an
+unrolled prefix.
+
+Layer pytree:
+    {"ln1", "attn"|"ssm": {...}, ["ln2", "ffn": {...}]}
+FFN is absent when d_ff == 0 and the layer is not MoE (pure Mamba-2).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import mla as mla_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import init_rms, init_swiglu, rms_norm, swiglu
+from repro.models.moe import init_moe, moe_ffn
+from repro.sharding.partition import shard
+
+
+# ---------------------------------------------------------------------------
+# Step specification
+# ---------------------------------------------------------------------------
+
+
+def step_layout(cfg: ModelConfig) -> Tuple[List[int], List[List[int]]]:
+    """(prefix_layer_ids, steps) where each step is a list of layer ids."""
+    prefix = []
+    if cfg.moe is not None and cfg.moe.first_k_dense:
+        prefix = list(range(cfg.moe.first_k_dense))
+    body = [i for i in range(cfg.n_layers) if i not in prefix]
+    period = cfg.hybrid.period if cfg.hybrid is not None else 1
+    assert len(body) % period == 0, (cfg.name, len(body), period)
+    steps = [body[i: i + period] for i in range(0, len(body), period)]
+    # every step must be structurally identical
+    sig0 = [(cfg.layer_kinds()[l], cfg.ffn_kind(l)) for l in steps[0]]
+    for st in steps[1:]:
+        sig = [(cfg.layer_kinds()[l], cfg.ffn_kind(l)) for l in st]
+        assert sig == sig0, f"inhomogeneous steps in {cfg.name}"
+    return prefix, steps
+
+
+def attn_sublayer_index(cfg: ModelConfig, step: List[int]) -> Optional[int]:
+    """Index within the step of its (single) attention-ish sublayer."""
+    idxs = [j for j, l in enumerate(step)
+            if cfg.layer_kinds()[l] in ("attn", "mla")]
+    assert len(idxs) <= 1, "at most one attention layer per scan step"
+    return idxs[0] if idxs else None
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key, cfg: ModelConfig, layer_idx: int, dtype) -> Dict:
+    kind = cfg.layer_kinds()[layer_idx]
+    fk = cfg.ffn_kind(layer_idx)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Dict[str, Any] = {"ln1": init_rms(cfg.d_model, dtype)}
+    if kind == "attn":
+        p["attn"] = attn_mod.init_attention(k1, cfg, dtype)
+    elif kind == "mla":
+        p["attn"] = mla_mod.init_mla(k1, cfg, dtype)
+    else:
+        p["ssm"] = ssm_mod.init_ssm(k1, cfg.d_model, cfg.ssm, dtype)
+    has_ffn = (fk == "moe") or cfg.d_ff > 0
+    if has_ffn:
+        p["ln2"] = init_rms(cfg.d_model, dtype)
+        if fk == "moe":
+            p["ffn"] = init_moe(k2, cfg.d_model, cfg.moe, dtype)
+        else:
+            ff = cfg.d_ff
+            if cfg.moe is not None and layer_idx < cfg.moe.first_k_dense:
+                ff = cfg.moe.first_dense_ff or cfg.d_ff
+            p["ffn"] = init_swiglu(k2, cfg.d_model, ff, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Apply (one layer, all modes)
+# ---------------------------------------------------------------------------
+
+
+def _ffn_apply(p: Dict, x, cfg: ModelConfig, layer_idx: int, mode: str):
+    """Post-mixer FFN with residual; returns (x, aux)."""
+    aux = {}
+    if "ffn" not in p:
+        return x, aux
+    h = rms_norm(x, p["ln2"], cfg.rms_eps)
+    if cfg.ffn_kind(layer_idx) == "moe":
+        y, aux = moe_ffn(p["ffn"], h, cfg.moe, mode)
+    else:
+        y = swiglu(p["ffn"], h)
+    return x + y, aux
+
+
+def apply_layer(p: Dict, x, cfg: ModelConfig, layer_idx: int, mode: str,
+                cache: Optional[Dict] = None, pos=None,
+                proj: Optional[Dict] = None, max_len: int = 0):
+    """Returns (x, new_cache, captures, aux)."""
+    kind = cfg.layer_kinds()[layer_idx]
+    x = shard(x, ("pod", "data"), None, None)
+    h = rms_norm(x, p["ln1"], cfg.rms_eps)
+    new_cache, captures = None, None
+    if kind == "attn":
+        if mode == "train":
+            y = attn_mod.attn_train(p["attn"], h, cfg)
+        elif mode == "calibrate":
+            y, captures = attn_mod.attn_calibrate(p["attn"], h, cfg)
+        elif mode == "prefill":
+            y, new_cache = attn_mod.attn_prefill(p["attn"], h, cfg,
+                                                 max_len, proj)
+        else:
+            y, new_cache = attn_mod.attn_decode(p["attn"], h, cache, pos,
+                                                cfg, proj)
+    elif kind == "mla":
+        if mode == "train":
+            y = mla_mod.mla_train(p["attn"], h, cfg)
+        elif mode == "calibrate":
+            y, captures = mla_mod.mla_calibrate(p["attn"], h, cfg)
+        elif mode == "prefill":
+            y, new_cache = mla_mod.mla_prefill(p["attn"], h, cfg,
+                                               max_len, proj)
+        else:
+            y, new_cache = mla_mod.mla_decode(p["attn"], h, cache, pos,
+                                              cfg, proj)
+    else:  # ssm
+        if mode in ("train", "calibrate"):
+            y, _ = ssm_mod.ssm_forward(p["ssm"], h, cfg.ssm)
+        elif mode == "prefill":
+            y, new_cache = ssm_mod.ssm_forward(p["ssm"], h, cfg.ssm,
+                                               return_state=True)
+        else:
+            y, new_cache = ssm_mod.ssm_decode(p["ssm"], h, cache, cfg.ssm)
+    x = x + y
+    x, aux = _ffn_apply(p, x, cfg, layer_idx, mode)
+    return x, new_cache, captures, aux
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+
+def init_layer_cache(cfg: ModelConfig, layer_idx: int, batch: int,
+                     max_len: int, ranks: Tuple[int, int], dtype):
+    kind = cfg.layer_kinds()[layer_idx]
+    if kind == "attn":
+        return attn_mod.make_attn_cache(cfg, batch, max_len, ranks, dtype)
+    if kind == "mla":
+        return mla_mod.make_mla_cache(cfg, batch, max_len, ranks, dtype)
+    return ssm_mod.make_ssm_state(cfg.ssm, cfg.d_model, batch, dtype)

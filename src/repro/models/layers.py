@@ -1,0 +1,84 @@
+"""Shared neural layers: RMSNorm, SwiGLU, rotary embeddings, init."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, gain: jnp.ndarray,
+             eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * gain.astype(jnp.float32)).astype(dt)
+
+
+def init_rms(d: int, dtype) -> jnp.ndarray:
+    return jnp.ones((d,), dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (llama rotate-half convention)
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(d_head: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, d_head, 2, dtype=np.float64)
+                            / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., T, d) with positions (..., T) or (T,)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(d, theta), dtype=jnp.float32)
+    angles = positions.astype(jnp.float32)[..., None] * freqs   # (..., T, d/2)
+    cos = jnp.cos(angles)
+    sin = jnp.sin(angles)
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def swiglu(params: Dict[str, jnp.ndarray], x: jnp.ndarray) -> jnp.ndarray:
+    h = jnp.einsum("...d,df->...f", x, params["wi"])
+    g = jnp.einsum("...d,df->...f", x, params["wg"])
+    h = h * jax.nn.sigmoid(g.astype(jnp.float32)).astype(h.dtype) * g
+    # NOTE: silu(g) * h == h * g * sigmoid(g); fused above.
+    return jnp.einsum("...f,fd->...d", h, params["wo"])
+
+
+def init_swiglu(key, d: int, ff: int, dtype) -> Dict[str, jnp.ndarray]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / np.sqrt(d)
+    s_out = 1.0 / np.sqrt(ff)
+    return {
+        "wi": (jax.random.normal(k1, (d, ff)) * s_in).astype(dtype),
+        "wg": (jax.random.normal(k2, (d, ff)) * s_in).astype(dtype),
+        "wo": (jax.random.normal(k3, (ff, d)) * s_out).astype(dtype),
+    }
+
+
+def init_dense(key, shape: Tuple[int, ...], fan_in: int, dtype):
+    return (jax.random.normal(key, shape) / np.sqrt(fan_in)).astype(dtype)

@@ -1,0 +1,345 @@
+"""The language model: embed -> (scanned) blocks -> norm -> head.
+
+Public entry points (all pure functions of pytrees, pjit-able):
+    init(rng)                                   -> params
+    train_logits(params, batch)                 -> (logits, aux)
+    prefill(params, batch, max_len, proj)       -> (logits, cache)
+    decode_step(params, cache, tokens, pos, proj) -> (logits, cache)
+    calibrate(params, tokens)                   -> per-attn-layer captures
+    group_output_weights(params)                -> stacked W^O per kv group
+
+Depth is executed with ``lax.scan`` over structurally identical steps
+(``blocks.step_layout``); heterogeneous leading layers run unrolled in a
+prefix.  ``cfg.scan_layers=False`` unrolls everything (debug/calibration).
+The KQ-SVD projections enter as a separate pytree ``proj`` with
+``{"prefix": [...], "steps": stacked}`` mirroring the cache structure.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.core.calibration import ModelProjections
+from repro.models import attention as attn_mod
+from repro.models import mla as mla_mod
+from repro.models.blocks import (apply_layer, attn_sublayer_index,
+                                 init_layer, init_layer_cache, step_layout)
+from repro.models.layers import dtype_of, init_rms, rms_norm
+from repro.sharding.partition import shard
+
+AUX_KEYS = ("load_balance", "router_z", "dropped_frac")
+
+
+def _zero_aux() -> Dict[str, jnp.ndarray]:
+    d = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
+    d["n_moe"] = jnp.zeros((), jnp.float32)
+    return d
+
+
+def _add_aux(acc, aux):
+    if not aux:
+        return acc
+    out = dict(acc)
+    for k in AUX_KEYS:
+        if k in aux:
+            out[k] = acc[k] + aux[k]
+    out["n_moe"] = acc["n_moe"] + (1.0 if "load_balance" in aux else 0.0)
+    return out
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = dtype_of(cfg.dtype)
+        self.prefix, self.steps = step_layout(cfg)
+        self.step_template = self.steps[0] if self.steps else []
+        self.attn_j = (attn_sublayer_index(cfg, self.step_template)
+                       if self.steps else None)
+        # ordered list of attention layer ids (for projections/calibration)
+        self.attn_layers = [i for i in range(cfg.n_layers)
+                            if cfg.layer_kinds()[i] in ("attn", "mla")]
+
+    # -- init ---------------------------------------------------------------
+
+    def init(self, rng) -> Dict[str, Any]:
+        cfg = self.cfg
+        k_embed, k_head, k_pre, k_body = jax.random.split(rng, 4)
+        params: Dict[str, Any] = {
+            "embed": (jax.random.normal(k_embed,
+                                        (cfg.vocab_size, cfg.d_model))
+                      * 0.02).astype(self.dtype),
+            "final_norm": init_rms(cfg.d_model, self.dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = (jax.random.normal(
+                k_head, (cfg.d_model, cfg.vocab_size))
+                / np.sqrt(cfg.d_model)).astype(self.dtype)
+        params["prefix"] = [
+            init_layer(jax.random.fold_in(k_pre, i), cfg, i, self.dtype)
+            for i in self.prefix]
+        if self.steps:
+            def init_step(key):
+                ks = jax.random.split(key, len(self.step_template))
+                return {"layers": tuple(
+                    init_layer(ks[j], cfg, l, self.dtype)
+                    for j, l in enumerate(self.step_template))}
+            keys = jax.random.split(k_body, len(self.steps))
+            if cfg.scan_layers:
+                params["steps"] = jax.vmap(init_step)(keys)
+            else:
+                stepped = [init_step(k) for k in keys]
+                params["steps"] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *stepped)
+        return params
+
+    # -- embedding / head ----------------------------------------------------
+
+    def _embed(self, params, batch) -> jnp.ndarray:
+        cfg = self.cfg
+        if "embeds" in batch:
+            x = batch["embeds"].astype(self.dtype)
+        else:
+            x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        if "image_embeds" in batch:
+            x = jnp.concatenate(
+                [batch["image_embeds"].astype(self.dtype), x], axis=1)
+        return shard(x, ("pod", "data"), None, None)
+
+    def _logits(self, params, x) -> jnp.ndarray:
+        head = (params["embed"].T if self.cfg.tie_embeddings
+                else params["lm_head"])
+        logits = jnp.einsum("bsd,dv->bsv", x, head,
+                            preferred_element_type=jnp.float32)
+        return shard(logits, ("pod", "data"), None, "model")
+
+    # -- step application ----------------------------------------------------
+
+    def _apply_step(self, step_params, x, mode, step_cache=None, pos=None,
+                    step_proj=None, max_len=0):
+        cfg = self.cfg
+        new_caches, captures, aux_t = [], None, _zero_aux()
+        for j, layer_idx in enumerate(self.step_template):
+            lp = step_params["layers"][j]
+            lc = step_cache["layers"][j] if step_cache is not None else None
+            lproj = step_proj if (j == self.attn_j and step_proj is not None
+                                  and len(step_proj)) else None
+            x, nc, caps, aux = apply_layer(
+                lp, x, cfg, layer_idx, mode, lc, pos, lproj, max_len)
+            new_caches.append(nc)
+            if caps is not None:
+                captures = caps
+            aux_t = _add_aux(aux_t, aux)
+        cache_out = ({"layers": tuple(new_caches)}
+                     if mode in ("prefill", "decode") else None)
+        return x, cache_out, captures, aux_t
+
+    # -- full stack ----------------------------------------------------------
+
+    def _run_stack(self, params, x, mode, cache=None, pos=None, proj=None,
+                   max_len: int = 0):
+        """Returns (x, cache_out, captures_list, aux)."""
+        cfg = self.cfg
+        aux = _zero_aux()
+        captures_list: List = []
+        prefix_cache_out, attn_ord = [], 0
+        for n, layer_idx in enumerate(self.prefix):
+            lp = params["prefix"][n]
+            lc = cache["prefix"][n] if cache is not None else None
+            is_attn = cfg.layer_kinds()[layer_idx] in ("attn", "mla")
+            lproj = (proj["prefix"][attn_ord]
+                     if (proj is not None and is_attn) else None)
+            x, nc, caps, la = apply_layer(lp, x, cfg, layer_idx, mode,
+                                          lc, pos, lproj, max_len)
+            prefix_cache_out.append(nc)
+            if caps is not None:
+                captures_list.append(caps)
+            if is_attn:
+                attn_ord += 1
+            aux = _add_aux(aux, la)
+
+        steps_cache_out = None
+        if self.steps:
+            step_proj = proj["steps"] if proj is not None else None
+            if not cfg.scan_layers:
+                outs = []
+                for i in range(len(self.steps)):
+                    sp = jax.tree.map(lambda a: a[i], params["steps"])
+                    sc = (jax.tree.map(lambda a: a[i], cache["steps"])
+                          if cache is not None else None)
+                    spj = (jax.tree.map(lambda a: a[i], step_proj)
+                           if step_proj is not None else None)
+                    x, co, caps, sa = self._apply_step(
+                        sp, x, mode, sc, pos, spj, max_len)
+                    outs.append(co)
+                    if caps is not None:
+                        captures_list.append(caps)
+                    aux = jax.tree.map(lambda a, b: a + b, aux, sa)
+                if mode in ("prefill", "decode"):
+                    steps_cache_out = jax.tree.map(
+                        lambda *xs: jnp.stack(xs), *outs)
+            else:
+                x, steps_cache_out, caps_stacked, s_aux = self._scan_steps(
+                    params["steps"], x, mode, cache, pos, step_proj,
+                    max_len)
+                aux = jax.tree.map(lambda a, b: a + b, aux, s_aux)
+                if caps_stacked is not None:
+                    for i in range(len(self.steps)):
+                        captures_list.append(jax.tree.map(
+                            lambda a: a[i], caps_stacked))
+
+        cache_out = None
+        if mode in ("prefill", "decode"):
+            cache_out = {"prefix": prefix_cache_out,
+                         "steps": steps_cache_out}
+        return x, cache_out, captures_list, aux
+
+    def _scan_steps(self, steps_params, x, mode, cache, pos, step_proj,
+                    max_len):
+        cfg = self.cfg
+        has_cache_in = mode == "decode"
+        emit_cache = mode in ("prefill", "decode")
+        emit_caps = mode == "calibrate"
+
+        def body(carry, xs):
+            x, aux = carry
+            sp = xs[0]
+            sc = xs[1] if has_cache_in else None
+            spj = xs[-1] if step_proj is not None else None
+            x, co, caps, sa = self._apply_step(sp, x, mode, sc, pos, spj,
+                                               max_len)
+            aux = jax.tree.map(lambda a, b: a + b, aux, sa)
+            ys = []
+            if emit_cache:
+                ys.append(co)
+            if emit_caps:
+                ys.append(caps)
+            return (x, aux), tuple(ys) if ys else None
+
+        if mode == "train" and cfg.remat_policy != "none":
+            policy = {"nothing": jax.checkpoint_policies.nothing_saveable,
+                      "dots": jax.checkpoint_policies.dots_saveable,
+                      }.get(cfg.remat_policy,
+                            jax.checkpoint_policies.nothing_saveable)
+            body = jax.checkpoint(body, policy=policy)
+
+        xs = [steps_params]
+        if has_cache_in:
+            xs.append(cache["steps"])
+        if step_proj is not None:
+            xs.append(step_proj)
+        (x, aux), ys = jax.lax.scan(body, (x, _zero_aux()), tuple(xs))
+        cache_out = caps_out = None
+        if ys:
+            ys = list(ys)
+            if emit_cache:
+                cache_out = ys.pop(0)
+            if emit_caps:
+                caps_out = ys.pop(0)
+        return x, cache_out, caps_out, aux
+
+    # -- public entry points ---------------------------------------------------
+
+    def train_logits(self, params, batch):
+        x = self._embed(params, batch)
+        x, _, _, aux = self._run_stack(params, x, "train")
+        x = rms_norm(x, params["final_norm"], self.cfg.rms_eps)
+        return self._logits(params, x), aux
+
+    def prefill(self, params, batch, max_len: int, proj=None):
+        x = self._embed(params, batch)
+        x, cache, _, _ = self._run_stack(params, x, "prefill", proj=proj,
+                                         max_len=max_len)
+        x = rms_norm(x, params["final_norm"], self.cfg.rms_eps)
+        logits = self._logits(params, x[:, -1:])
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens, pos, proj=None):
+        """tokens: (B, 1) int32; pos: scalar index of the new token."""
+        x = self._embed(params, {"tokens": tokens})
+        x, cache, _, _ = self._run_stack(params, x, "decode", cache=cache,
+                                         pos=pos, proj=proj)
+        x = rms_norm(x, params["final_norm"], self.cfg.rms_eps)
+        return self._logits(params, x), cache
+
+    def calibrate(self, params, tokens):
+        """Returns per-attention-layer captures (k, q, v) as a list."""
+        batch = tokens if isinstance(tokens, dict) else {"tokens": tokens}
+        x = self._embed(params, batch)
+        _, _, captures, _ = self._run_stack(params, x, "calibrate")
+        return captures
+
+    def group_output_weights(self, params) -> List[np.ndarray]:
+        """Stacked per-group output weights for the value-path solve."""
+        cfg = self.cfg
+        out = []
+        for layer_idx in self.attn_layers:
+            lp = self._layer_params(params, layer_idx)
+            if cfg.layer_kinds()[layer_idx] == "mla":
+                out.append(mla_mod.mla_group_output_weights(lp["attn"], cfg))
+            else:
+                out.append(attn_mod.group_output_weights(lp["attn"], cfg))
+        return out
+
+    def _layer_params(self, params, layer_idx: int):
+        if layer_idx in self.prefix:
+            return params["prefix"][self.prefix.index(layer_idx)]
+        body = [l for st in self.steps for l in st]
+        flat = body.index(layer_idx)
+        step_i, j = divmod(flat, len(self.step_template))
+        return jax.tree.map(lambda a: a[step_i],
+                            params["steps"])["layers"][j]
+
+    # -- caches & projections ---------------------------------------------------
+
+    def init_cache(self, batch: int, max_len: int,
+                   ranks: Tuple[int, int] = (0, 0), dtype=None):
+        cfg = self.cfg
+        dtype = dtype or self.dtype
+        prefix = [init_layer_cache(cfg, i, batch, max_len, ranks, dtype)
+                  for i in self.prefix]
+        step_caches = []
+        for st in (self.steps[:1] if cfg.scan_layers else self.steps):
+            step_caches.append({"layers": tuple(
+                init_layer_cache(cfg, l, batch, max_len, ranks, dtype)
+                for l in st)})
+        if self.steps:
+            if cfg.scan_layers:
+                n = len(self.steps)
+                steps = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a[None], (n,) + a.shape),
+                    step_caches[0])
+            else:
+                steps = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                     *step_caches)
+        else:
+            steps = None
+        return {"prefix": prefix, "steps": steps}
+
+    def projections_pytree(self, mp: ModelProjections, dtype=None):
+        """Convert solved ModelProjections to the runtime pytree."""
+        dtype = dtype or self.dtype
+        arrays = {"a_k": mp.a_k, "b_q": mp.b_q}
+        if mp.a_v is not None:
+            arrays["a_v"] = mp.a_v
+            arrays["c_v"] = mp.c_v
+        per_layer = [
+            {k: jnp.asarray(v[i], dtype) for k, v in arrays.items()}
+            for i in range(len(self.attn_layers))]
+        prefix_attn = [i for i in self.prefix
+                       if self.cfg.layer_kinds()[i] in ("attn", "mla")]
+        n_pre = len(prefix_attn)
+        pre = per_layer[:n_pre]
+        body = per_layer[n_pre:]
+        steps = (jax.tree.map(lambda *xs: jnp.stack(xs), *body)
+                 if body else None)
+        return {"prefix": pre, "steps": steps}
+
+
+@functools.lru_cache(maxsize=None)
+def build_model(cfg: ModelConfig) -> LM:
+    return LM(cfg)

@@ -1,0 +1,152 @@
+"""Mixture-of-Experts FFN with grouped capacity dispatch (GShard-style).
+
+Design notes (roofline-driven):
+* Dispatch is *index-based* (scatter token-ids into capacity slots, gather
+  token activations, run batched expert GEMMs, gather back with combine
+  weights).  The classic one-hot dispatch einsum costs N*E*C*D MACs —
+  comparable to the expert GEMMs themselves at E=128 — so we avoid it
+  entirely; gathers count as bytes, not FLOPs.
+* Dispatch is GROUPED: tokens are split into G groups (= the data-parallel
+  shard count at trace time), each group gathers its expert buffers
+  LOCALLY, and only the (E, G, Cg, D) buffer is resharded data->model for
+  the expert GEMMs.  GSPMD lowers that single resharding to an
+  all-to-all.  The ungrouped formulation gathered straight from the
+  data-sharded token buffer, which GSPMD implements as partial-gather +
+  full-buffer ALL-REDUCE — 2(n-1)/n x the whole expert buffer on the wire
+  per MoE layer (16 GB/layer on Jamba prefill; found in the first
+  roofline pass, see EXPERIMENTS.md §Perf iteration J1).
+* Capacity C = ceil(top_k * Ng * cf / E) per group; overflow tokens are
+  dropped (contribute only through the shared/residual paths), matching
+  capacity-based MoE practice.  Mode-dependent floors in ``_capacity``.
+
+Supports DeepSeek-style shared experts and Arctic's parallel dense
+residual.  Router aux losses (load-balance + z-loss) are returned for the
+trainer.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import MoEConfig
+from repro.models.layers import init_dense, init_swiglu, swiglu
+from repro.sharding.partition import axis_size, shard
+
+
+def init_moe(key, d_model: int, mo: MoEConfig, dtype) -> Dict:
+    keys = jax.random.split(key, 8)
+    E, ff = mo.n_experts, mo.expert_ff
+    p = {
+        "router": init_dense(keys[0], (d_model, E), d_model, jnp.float32),
+        "wi_e": init_dense(keys[1], (E, d_model, ff), d_model, dtype),
+        "wg_e": init_dense(keys[2], (E, d_model, ff), d_model, dtype),
+        "wo_e": init_dense(keys[3], (E, ff, d_model), ff, dtype),
+    }
+    if mo.n_shared_experts:
+        p["shared"] = init_swiglu(keys[4], d_model,
+                                  mo.n_shared_experts * ff, dtype)
+    if mo.dense_residual:
+        p["residual"] = init_swiglu(keys[5], d_model,
+                                    mo.dense_residual_ff or ff, dtype)
+    return p
+
+
+def _capacity(n_tokens: int, mo: MoEConfig, mode: str) -> int:
+    """Expert capacity per dispatch group.
+
+    * decode: capacity_factor floored at 4.0 (capped at N) — near-dropless
+      with negligible FLOP padding.  The earlier C = N choice guaranteed
+      exactness but computed E/top_k x the active FLOPs on wide-expert
+      models (64x on Arctic's E=128); consistency tests pin
+      capacity_factor = E, which still yields C = N;
+    * prefill/calibrate: capacity_factor floored at 2.0 (drops are rare
+      and documented as the capacity-MoE serving approximation);
+    * train: the configured capacity_factor (GShard-style dropping).
+    """
+    floor = {"decode": 4.0, "train": 0.0}.get(mode, 2.0)
+    cf = max(mo.capacity_factor, floor)
+    c = int(math.ceil(mo.top_k * n_tokens * cf / mo.n_experts))
+    return max(1, min(c, n_tokens))
+
+
+def moe_ffn(p: Dict, x: jnp.ndarray, mo: MoEConfig, mode: str = "train",
+            n_groups: Optional[int] = None
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: (B, S, D) -> (y, aux_losses)."""
+    B, S, D = x.shape
+    N = B * S
+    E, K = mo.n_experts, mo.top_k
+    G = n_groups or axis_size(("pod", "data"))
+    if N % G:
+        G = 1
+    Ng = N // G
+    C = _capacity(Ng, mo, mode)
+    xg = x.reshape(G, Ng, D)
+    xg = shard(xg, ("pod", "data"), None, None)
+
+    logits = jnp.einsum("gnd,de->gne", xg.astype(jnp.float32),
+                        p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                  # (G, Ng, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)          # (G, Ng, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) within its expert's capacity slots,
+    # computed per group (local to the data shard)
+    flat_e = expert_idx.reshape(G, Ng * K)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)      # (G, NgK, E)
+    pos_in_e = (jnp.cumsum(onehot, axis=1) * onehot).sum(-1) - 1
+    keep = pos_in_e < C                                       # (G, NgK)
+
+    # scatter local token ids into (E, C) slots; sentinel row Ng is zeros
+    token_ids = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(Ng), K)[None], (G, Ng * K))
+    slot_ids = jnp.where(keep, flat_e * C + pos_in_e, E * C)
+    g_ix = jnp.arange(G)[:, None]
+    dispatch = jnp.full((G, E * C + 1), Ng, jnp.int32).at[
+        g_ix, slot_ids].set(token_ids, mode="drop")[:, : E * C]
+    xp = jnp.concatenate([xg, jnp.zeros((G, 1, D), xg.dtype)], axis=1)
+    expert_in = jnp.take_along_axis(
+        xp, dispatch[:, :, None], axis=1).reshape(G, E, C, D)
+    expert_in = shard(expert_in, ("pod", "data"), None, None, None)
+
+    # reshard group-major -> expert-major: ONE all-to-all under GSPMD
+    ein = expert_in.transpose(1, 0, 2, 3)                    # (E, G, C, D)
+    ein = shard(ein, "model", ("pod", "data"), None, None)
+    h = jnp.einsum("egcd,edf->egcf", ein, p["wi_e"])
+    g = jnp.einsum("egcd,edf->egcf", ein, p["wg_e"])
+    h = h * g * jax.nn.sigmoid(g.astype(jnp.float32)).astype(h.dtype)
+    eout = jnp.einsum("egcf,efd->egcd", h, p["wo_e"])
+    eout = shard(eout, "model", ("pod", "data"), None, None)
+
+    # back to group-major (second all-to-all), combine locally
+    out_g = eout.transpose(1, 0, 2, 3).reshape(G, E * C, D)
+    out_g = shard(out_g, ("pod", "data"), None, None)
+    out_p = jnp.concatenate(
+        [out_g, jnp.zeros((G, 1, D), out_g.dtype)], axis=1)
+    gathered = jnp.take_along_axis(
+        out_p, jnp.where(keep, slot_ids, E * C)[:, :, None], axis=1)
+    y = (gathered.reshape(G, Ng, K, D)
+         * gate_vals[..., None].astype(gathered.dtype)).sum(2)
+    y = y.reshape(B, S, D)
+
+    # aux losses (f32)
+    me = probs.mean((0, 1))                                  # (E,)
+    ce = (onehot * keep[..., None]).sum((0, 1)).astype(
+        jnp.float32) / (N * K)
+    aux = {
+        "load_balance": E * jnp.sum(me * ce),
+        "router_z": jnp.mean(
+            jax.scipy.special.logsumexp(logits, axis=-1) ** 2),
+        "dropped_frac": 1.0 - keep.mean(),
+    }
+
+    xf = x.reshape(N, D)
+    if "shared" in p:
+        y = y + swiglu(p["shared"], xf).reshape(B, S, D).astype(y.dtype)
+    if "residual" in p:
+        y = y + swiglu(p["residual"], xf).reshape(B, S, D).astype(y.dtype)
+    return y.astype(x.dtype), aux

@@ -1,0 +1,205 @@
+"""Mamba-2 SSD (state-space duality) blocks.
+
+Train/prefill use the chunked SSD algorithm (arXiv:2405.21060 §6):
+within-chunk quadratic attention-like term + cross-chunk recurrence over
+per-chunk states carried by a sequential ``lax.scan`` (chunks are few:
+S/chunk_size).  Decode is the O(1) recurrent update
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t^T,    y_t = C_t h_t + D x_t.
+
+The decode state (B, nheads, head_dim, d_state) is the whole cache — this
+is why KQ-SVD is inapplicable to this family (DESIGN.md): there is no
+per-token KV cache to compress.
+
+Layout: x (B, S, D) -> in_proj -> [z (d_in), xBC (d_in + 2*G*S_st), dt (nh)],
+causal conv over xBC, SSD over heads of size head_dim.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import SSMConfig
+from repro.models.layers import init_dense, rms_norm
+
+
+def _dims(s: SSMConfig, d_model: int):
+    d_in = s.d_inner(d_model)
+    nh = s.n_heads(d_model)
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return d_in, nh, conv_dim
+
+
+def init_ssm(key, d_model: int, s: SSMConfig, dtype) -> Dict:
+    d_in, nh, conv_dim = _dims(s, d_model)
+    keys = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * s.n_groups * s.d_state + nh
+    dt = np.exp(np.linspace(np.log(s.dt_min), np.log(s.dt_max), nh))
+    return {
+        "in_proj": init_dense(keys[0], (d_model, proj_out), d_model, dtype),
+        "conv": (jax.random.normal(keys[1], (conv_dim, s.d_conv))
+                 / np.sqrt(s.d_conv)).astype(dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "dt_bias": jnp.asarray(np.log(np.expm1(dt)), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm": jnp.ones((d_in,), dtype),
+        "out_proj": init_dense(keys[2], (d_in, d_model), d_in, dtype),
+    }
+
+
+def _split_proj(p, x, s: SSMConfig, d_model: int):
+    d_in, nh, _ = _dims(s, d_model)
+    gs = s.n_groups * s.d_state
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z = proj[..., :d_in]
+    xBC = proj[..., d_in: 2 * d_in + 2 * gs]
+    dt = proj[..., 2 * d_in + 2 * gs:]
+    return z, xBC, dt
+
+
+def _conv_apply(weight, xBC, state=None):
+    """Causal depthwise conv, width K.  xBC: (B, S, Cdim).
+
+    With ``state`` (B, Cdim, K-1) the convolution sees the carried context
+    (decode / chunked prefill); returns (out, new_state).
+    """
+    B, S, Cd = xBC.shape
+    K = weight.shape[1]
+    xt = xBC.transpose(0, 2, 1)                              # (B, Cd, S)
+    if state is None:
+        state = jnp.zeros((B, Cd, K - 1), xt.dtype)
+    full = jnp.concatenate([state, xt], axis=-1)             # (B,Cd,S+K-1)
+    idx = jnp.arange(S)[:, None] + jnp.arange(K)[None, :]
+    windows = full[:, :, idx]                                # (B,Cd,S,K)
+    out = jnp.einsum("bcsk,ck->bsc", windows, weight)
+    new_state = full[:, :, -(K - 1):]
+    return jax.nn.silu(out.astype(jnp.float32)).astype(xBC.dtype), new_state
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, h0=None):
+    """Chunked SSD: one sequential scan over chunks.
+
+    xh: (B,S,nh,hd); dt: (B,S,nh) (already softplus'ed);
+    A: (nh,) negative; Bm/Cm: (B,S,G,S_st); h0: optional carried state.
+    Returns y (B,S,nh,hd) and the final state (B,nh,S_st,hd).
+
+    Each scan step computes one chunk's intra-chunk quadratic term AND the
+    cross-chunk recurrence, so the (Lc x Lc x nh) decay tensor only ever
+    exists for a single chunk (the all-chunks-at-once formulation would
+    materialize B*S*Lc*nh f32 — hundreds of GB at production shapes).
+    """
+    B, S, nh, hd = xh.shape
+    G = Bm.shape[2]
+    rep = nh // G
+    nc = max(1, S // chunk)
+    Lc = S // nc
+    n_state = Bm.shape[-1]
+    # (nc, B, Lc, ...) scan layout
+    xc = xh.reshape(B, nc, Lc, nh, hd).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(B, nc, Lc, nh).transpose(1, 0, 2, 3)
+    Bc = Bm.reshape(B, nc, Lc, G, n_state).transpose(1, 0, 2, 3, 4)
+    Cc = Cm.reshape(B, nc, Lc, G, n_state).transpose(1, 0, 2, 3, 4)
+    Lmask = jnp.tril(jnp.ones((Lc, Lc), bool))
+
+    def chunk_step(h, inp):
+        xb, dtb, Bb, Cb = inp        # (B,Lc,nh,hd), (B,Lc,nh), (B,Lc,G,n)
+        Bb = jnp.repeat(Bb, rep, axis=2)                     # (B,Lc,nh,n)
+        Cb = jnp.repeat(Cb, rep, axis=2)
+        a = dtb * A[None, None, :]                           # (B,Lc,nh) <= 0
+        cum = jnp.cumsum(a, axis=1)
+        # intra-chunk quadratic term; mask BEFORE exp: the upper triangle
+        # has positive exponents that overflow to inf, and where(mask,
+        # inf, 0) poisons the backward pass with 0*inf = NaN.
+        diff = cum[:, :, None, :] - cum[:, None, :, :]
+        diff = jnp.where(Lmask[None, :, :, None], diff, -1e30)
+        decay = jnp.exp(diff)
+        cb = jnp.einsum("blhn,bkhn->blkh", Cb, Bb,
+                        preferred_element_type=jnp.float32)
+        w = cb * decay * dtb[:, None, :, :]
+        y = jnp.einsum("blkh,bkhd->blhd", w,
+                       xb.astype(jnp.float32))
+        # contribution of the carried state
+        y = y + jnp.einsum("blhn,blh,bhnd->blhd",
+                           Cb.astype(jnp.float32), jnp.exp(cum), h)
+        # update the carried state
+        wj = jnp.exp(cum[:, -1:, :] - cum) * dtb             # (B,Lc,nh)
+        s_c = jnp.einsum("blhn,blh,blhd->bhnd",
+                         Bb.astype(jnp.float32), wj,
+                         xb.astype(jnp.float32))
+        h = h * jnp.exp(cum[:, -1, :])[..., None, None] + s_c
+        return h, y
+
+    if h0 is None:
+        h0 = jnp.zeros((B, nh, n_state, hd), jnp.float32)
+    h_final, yc = jax.lax.scan(chunk_step, h0, (xc, dtc, Bc, Cc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(B, S, nh, hd)
+    return y, h_final
+
+
+def ssm_forward(p: Dict, x: jnp.ndarray, s: SSMConfig,
+                state: Dict = None, return_state: bool = False
+                ) -> Tuple[jnp.ndarray, Dict]:
+    """Full-sequence SSD.  x: (B,S,D)."""
+    B, S, D = x.shape
+    d_in, nh, conv_dim = _dims(s, D)
+    gs = s.n_groups * s.d_state
+    z, xBC, dt = _split_proj(p, x, s, D)
+    conv_state = state["conv"] if state else None
+    xBC, conv_state = _conv_apply(p["conv"], xBC, conv_state)
+    xs = xBC[..., :d_in].reshape(B, S, nh, s.head_dim)
+    Bm = xBC[..., d_in:d_in + gs].reshape(B, S, s.n_groups, s.d_state)
+    Cm = xBC[..., d_in + gs:].reshape(B, S, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["a_log"])
+    h0 = state["s"] if state else None
+    y, h = _ssd_chunked(xs, dt, A, Bm, Cm, s.chunk_size, h0=h0)
+    y = y + xs.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y, p["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    new_state = {"conv": conv_state, "s": h} if return_state else None
+    return out, new_state
+
+
+def ssm_decode(p: Dict, x: jnp.ndarray, state: Dict, s: SSMConfig
+               ) -> Tuple[jnp.ndarray, Dict]:
+    """Single-token recurrent step.  x: (B,1,D)."""
+    B, _, D = x.shape
+    d_in, nh, conv_dim = _dims(s, D)
+    gs = s.n_groups * s.d_state
+    z, xBC, dt = _split_proj(p, x, s, D)
+    xBC, conv_state = _conv_apply(p["conv"], xBC, state["conv"])
+    xs = xBC[:, 0, :d_in].reshape(B, nh, s.head_dim)
+    Bm = xBC[:, 0, d_in:d_in + gs].reshape(B, s.n_groups, s.d_state)
+    Cm = xBC[:, 0, d_in + gs:].reshape(B, s.n_groups, s.d_state)
+    rep = nh // s.n_groups
+    Bm = jnp.repeat(Bm, rep, axis=1)                         # (B,nh,S_st)
+    Cm = jnp.repeat(Cm, rep, axis=1)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt * A[None, :])                         # (B,nh)
+    h = state["s"]                                           # (B,nh,S_st,hd)
+    upd = jnp.einsum("bhn,bh,bhd->bhnd", Bm.astype(jnp.float32), dt,
+                     xs.astype(jnp.float32))
+    h = h * decay[..., None, None] + upd
+    y = jnp.einsum("bhn,bhnd->bhd", Cm.astype(jnp.float32), h)
+    y = y + xs.astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y, p["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, {"conv": conv_state, "s": h}
+
+
+def make_ssm_state(s: SSMConfig, d_model: int, batch: int,
+                   dtype=jnp.bfloat16) -> Dict:
+    d_in, nh, conv_dim = _dims(s, d_model)
+    return {
+        "conv": jnp.zeros((batch, conv_dim, s.d_conv - 1), dtype),
+        "s": jnp.zeros((batch, nh, s.d_state, s.head_dim), jnp.float32),
+    }

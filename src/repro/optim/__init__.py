@@ -1,0 +1,15 @@
+"""Optimizers: AdamW (bf16-moment option) and Adafactor (factored 2nd
+moments, for the >=100B configs)."""
+from repro.config import TrainConfig
+from repro.optim import adafactor, adamw
+from repro.optim.schedule import learning_rate
+
+
+def init_state(params, tc: TrainConfig):
+    mod = adafactor if tc.optimizer == "adafactor" else adamw
+    return mod.init_state(params, tc)
+
+
+def apply_updates(params, grads, state, tc: TrainConfig, lr):
+    mod = adafactor if tc.optimizer == "adafactor" else adamw
+    return mod.apply_updates(params, grads, state, tc, lr)

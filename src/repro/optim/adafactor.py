@@ -1,0 +1,84 @@
+"""Adafactor (Shazeer & Stern, 2018): factored second moments.
+
+The optimizer-state-compression trick for the >=100B assigned configs
+(Jamba-398B / Arctic-480B): second-moment statistics for a (n, m) matrix
+cost n + m instead of n*m, cutting optimizer state from 8 bytes/param
+(Adam f32 m+v) to ~4 bytes/param (first moment only) + O(n+m).
+
+Factoring applies to the trailing two dims of >=2-D parameters; 1-D
+parameters fall back to full second moments.  Update-clipping (RMS
+threshold d=1.0) and decoupled weight decay follow the paper.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+from repro.optim.adamw import _wd_mask, clip_by_global_norm
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def init_state(params, tc: TrainConfig) -> Dict[str, Any]:
+    def per_param(p):
+        if _factored(p.shape):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                "m": jnp.zeros(p.shape, jnp.bfloat16),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32),
+                "m": jnp.zeros(p.shape, jnp.bfloat16)}
+
+    return {
+        "slots": jax.tree.map(per_param, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def apply_updates(params, grads, state, tc: TrainConfig, lr
+                  ) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** -0.8                     # paper's schedule
+    eps = 1e-30
+
+    def upd(path, p, g, slot):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + eps
+        if "vr" in slot:
+            vr = beta2 * slot["vr"] + (1 - beta2) * g2.mean(-1)
+            vc = beta2 * slot["vc"] + (1 - beta2) * g2.mean(-2)
+            denom = vr.mean(-1, keepdims=True)
+            precond = (vr / jnp.maximum(denom, eps))[..., None] \
+                * vc[..., None, :]
+            update = g32 * jax.lax.rsqrt(jnp.maximum(precond, eps))
+            new_slot = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * slot["v"] + (1 - beta2) * g2
+            update = g32 * jax.lax.rsqrt(jnp.maximum(v, eps))
+            new_slot = {"v": v}
+        # update clipping at RMS threshold 1.0
+        rms = jnp.sqrt(jnp.mean(update * update) + eps)
+        update = update / jnp.maximum(1.0, rms)
+        m = tc.beta1 * slot["m"].astype(jnp.float32) + (1 - tc.beta1) \
+            * update
+        new_slot["m"] = m.astype(jnp.bfloat16)
+        if tc.weight_decay and _wd_mask(path):
+            m = m + tc.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * m
+        return {"__p": new_p.astype(p.dtype), "__slot": new_slot}
+
+    out = jax.tree_util.tree_map_with_path(upd, params, grads,
+                                           state["slots"])
+    is_cell = lambda x: isinstance(x, dict) and "__p" in x
+    new_params = jax.tree.map(lambda t: t["__p"], out, is_leaf=is_cell)
+    new_slots = jax.tree.map(lambda t: t["__slot"], out, is_leaf=is_cell)
+    return new_params, {"slots": new_slots, "step": step}, \
+        {"grad_norm": gnorm}

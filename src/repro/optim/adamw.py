@@ -1,0 +1,76 @@
+"""AdamW with decoupled weight decay, global-norm clipping, and optional
+reduced-precision moments (the ZeRO-friendly "bf16 moments" trick).
+
+State is a pytree mirroring params: {"m", "v", "step"}.  Under FSDP the
+state inherits the parameter shardings (same tree structure), so optimizer
+memory scales 1/dp_size.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+from repro.models.layers import dtype_of
+
+
+def init_state(params, tc: TrainConfig) -> Dict[str, Any]:
+    mdt = dtype_of(tc.adam_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+_DECAY_EXEMPT = ("ln1", "ln2", "norm", "final_norm", "a_log", "dt_bias",
+                 "d_skip")
+
+
+def _wd_mask(path) -> bool:
+    name = str(getattr(path[-1], "key", path[-1]))
+    return name not in _DECAY_EXEMPT
+
+
+def apply_updates(params, grads, state, tc: TrainConfig, lr
+                  ) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+    step = state["step"] + 1
+    b1, b2 = tc.beta1, tc.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(path, p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * b1 + g32 * (1 - b1)
+        v32 = v.astype(jnp.float32) * b2 + g32 * g32 * (1 - b2)
+        update = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + 1e-8)
+        if tc.weight_decay and _wd_mask(path):
+            update = update + tc.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * update
+        return {"__p": new_p.astype(p.dtype), "__m": m32.astype(m.dtype),
+                "__v": v32.astype(v.dtype)}
+
+    out = jax.tree_util.tree_map_with_path(upd, params, grads,
+                                           state["m"], state["v"])
+    is_cell = lambda t: isinstance(t, dict) and "__p" in t
+    new_params = jax.tree.map(lambda t: t["__p"], out, is_leaf=is_cell)
+    new_m = jax.tree.map(lambda t: t["__m"], out, is_leaf=is_cell)
+    new_v = jax.tree.map(lambda t: t["__v"], out, is_leaf=is_cell)
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    return new_params, new_state, {"grad_norm": gnorm}

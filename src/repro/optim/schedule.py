@@ -1,0 +1,15 @@
+"""LR schedules: linear warmup + cosine decay to 10%."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+def learning_rate(tc: TrainConfig, step) -> jnp.ndarray:
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(1.0, (step + 1) / max(1, tc.warmup_steps))
+    frac = jnp.clip((step - tc.warmup_steps)
+                    / max(1, tc.total_steps - tc.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return tc.learning_rate * warm * (0.1 + 0.9 * cos)

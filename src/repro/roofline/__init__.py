@@ -1,0 +1,6 @@
+from repro.roofline.analysis import (Roofline, model_flops_for,
+                                     parse_collectives, summarize)
+from repro.roofline.hlo_cost import HloCost, analyze
+
+__all__ = ["Roofline", "model_flops_for", "parse_collectives",
+           "summarize", "HloCost", "analyze"]

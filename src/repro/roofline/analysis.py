@@ -1,0 +1,320 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_wire_bytes / (chips x link_bw)
+
+``cost_analysis()`` supplies FLOPs/bytes (per-device post-SPMD numbers; we
+multiply back to totals).  Collective bytes are NOT in cost_analysis: we
+parse the optimized HLO and apply a ring cost model per op
+(all-reduce 2(n-1)/n, all-gather/reduce-scatter/all-to-all (n-1)/n,
+collective-permute 1x), with n = the replica-group size parsed from the
+op's replica_groups.
+
+Hardware constants (TPU v5e targets): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (3 links usable per chip on a 2-D torus per axis; we
+use the single-link figure as the conservative per-chip bound).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / chip (ICI, per link)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str, default: int) -> int:
+    # new format: replica_groups=[8,64]<=[...] -> groups of 64
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    # old format: replica_groups={{0,1,2,...},{...}}
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+@dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0               # per device, cost-model adjusted
+    raw_bytes: float = 0.0                # per device, sum of result shapes
+    count: int = 0
+    by_op: Dict[str, float] = field(default_factory=dict)
+    top: List[Tuple[str, float]] = field(default_factory=list)
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    stats = CollectiveStats()
+    tops: List[Tuple[str, float]] = []
+    for line in hlo_text.splitlines():
+        op = None
+        for c in _COLLECTIVES:
+            token = f" {c}("
+            token_s = f" {c}-start("
+            if token in line or token_s in line:
+                op = c
+                break
+        if op is None:
+            continue
+        head = line.split(f" {op}", 1)[0]
+        raw = sum(_shape_bytes(d, dims)
+                  for d, dims in _SHAPE_RE.findall(head))
+        if raw == 0:
+            continue
+        n = _group_size(line, n_devices)
+        if n <= 1:
+            continue
+        if op == "all-reduce":
+            wire = 2.0 * (n - 1) / n * raw
+        elif op == "reduce-scatter":
+            wire = float(n - 1) * raw            # raw is the scattered out
+        elif op in ("all-gather", "all-to-all"):
+            wire = (n - 1) / n * raw
+        else:                                     # collective-permute
+            wire = float(raw)
+        stats.count += 1
+        stats.raw_bytes += raw
+        stats.wire_bytes += wire
+        stats.by_op[op] = stats.by_op.get(op, 0.0) + wire
+        tops.append((f"{op} {raw/1e6:.1f}MB n={n}", wire))
+    tops.sort(key=lambda t: -t[1])
+    stats.top = tops[:8]
+    return stats
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    variant: str
+    n_devices: int
+    # raw measurements (totals across chips unless noted)
+    hlo_flops: float = 0.0
+    hlo_bytes: float = 0.0
+    collective_wire_bytes_per_dev: float = 0.0
+    model_flops: float = 0.0              # 6*N*D (active params)
+    useful_bytes: float = 0.0             # analytic min traffic (total)
+    hlo_bytes_kernel: float = 0.0         # after flash-kernel substitution
+    # terms (seconds)
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_memory_kernel: float = 0.0
+    t_memory_projected: float = 0.0
+    t_collective: float = 0.0
+    bottleneck: str = ""
+    bottleneck_projected: str = ""
+    useful_flops_frac: float = 0.0
+    useful_bytes_frac: float = 0.0
+    roofline_frac: float = 0.0            # vs stand-in bound
+    roofline_frac_kernel: float = 0.0     # vs kernel-substituted bound
+    roofline_frac_projected: float = 0.0  # vs projected TPU bound
+    # memory analysis (per device, bytes)
+    mem_args: float = 0.0
+    mem_out: float = 0.0
+    mem_temp: float = 0.0
+    collectives: Optional[Dict] = None
+
+    def finalize(self):
+        n = self.n_devices
+        self.t_compute = self.hlo_flops / (n * PEAK_FLOPS)
+        self.t_memory = self.hlo_bytes / (n * HBM_BW)
+        if not self.hlo_bytes_kernel:
+            self.hlo_bytes_kernel = self.hlo_bytes
+        self.t_memory_kernel = self.hlo_bytes_kernel / (n * HBM_BW)
+        self.t_collective = self.collective_wire_bytes_per_dev / LINK_BW
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        self.bottleneck = max(terms, key=terms.get)
+        if self.hlo_flops > 0:
+            self.useful_flops_frac = self.model_flops / self.hlo_flops
+        if self.hlo_bytes > 0:
+            self.useful_bytes_frac = self.useful_bytes / self.hlo_bytes
+        t_useful = max(self.model_flops / (n * PEAK_FLOPS),
+                       self.useful_bytes / (n * HBM_BW))
+        t_bound = max(terms.values())
+        self.roofline_frac = (t_useful / t_bound) if t_bound > 0 else 0.0
+        t_bound_k = max(self.t_compute, self.t_memory_kernel,
+                        self.t_collective)
+        self.roofline_frac_kernel = (t_useful / t_bound_k) \
+            if t_bound_k > 0 else 0.0
+        # projected TPU bound: walker compute + collectives (reliable) with
+        # the memory term at the analytic minimum (native bf16 + Pallas
+        # kernels; the walker memory number retains CPU-backend
+        # legalization traffic that the TPU target does not pay)
+        self.t_memory_projected = self.useful_bytes / (n * HBM_BW)
+        t_bound_p = max(self.t_compute, self.t_memory_projected,
+                        self.t_collective)
+        self.bottleneck_projected = max(
+            {"compute": self.t_compute,
+             "memory": self.t_memory_projected,
+             "collective": self.t_collective}.items(),
+            key=lambda kv: kv[1])[0]
+        self.roofline_frac_projected = (t_useful / t_bound_p) \
+            if t_bound_p > 0 else 0.0
+        return self
+
+    def to_dict(self) -> Dict:
+        return asdict(self)
+
+
+def useful_bytes_for(cfg, shape, variant: str) -> float:
+    """Analytic minimum HBM traffic (bytes, cluster total) — the
+    memory-roofline numerator.
+
+    decode: every active parameter read once + the whole cache read once
+    (+ SSM state read/write).  prefill: params + one activation stream
+    read/write per layer + cache write.  train: params x (fwd+bwd reads +
+    grad write + optimizer state read/write) x weight re-reads per
+    microbatch + saved activations.
+    """
+    P = cfg.active_param_count() * 2.0                    # bf16
+    B = shape.global_batch
+    L_attn = sum(1 for k in cfg.layer_kinds() if k in ("attn", "mla"))
+    L_ssm = sum(1 for k in cfg.layer_kinds() if k == "ssm")
+    T = min(shape.seq_len, cfg.sliding_window or shape.seq_len)
+    # cache bytes (whole cluster)
+    if cfg.mla is not None:
+        per_tok = (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim) * 2.0
+        if "kqsvd" in variant:
+            r = cfg.mla.kv_lora_rank // 4
+            per_tok = (2 * r + cfg.mla.qk_rope_dim) * 2.0
+    else:
+        per_tok = cfg.n_kv_heads * 2 * cfg.d_head * 2.0
+        if "kqsvd" in variant:
+            r = max(1, cfg.d_head // 2)
+            itm = 1.0 if "int8" in variant else 2.0
+            per_tok = cfg.n_kv_heads * (2 * r * itm
+                                        + (4.0 if itm == 1.0 else 0.0))
+    cache = L_attn * per_tok * T * B
+    ssm_state = 0.0
+    if cfg.ssm is not None:
+        s = cfg.ssm
+        d_in = s.d_inner(cfg.d_model)
+        ssm_state = L_ssm * B * 2.0 * (
+            s.n_heads(cfg.d_model) * s.d_state * s.head_dim * 4.0
+            + (d_in + 2 * s.n_groups * s.d_state) * s.d_conv * 2.0)
+    act_stream = 4.0 * shape.tokens * cfg.d_model * 2.0 * cfg.n_layers
+    if shape.kind == "decode":
+        return P + cache + ssm_state
+    if shape.kind == "prefill":
+        return P + act_stream + cache
+    # train: params fwd+bwd reads, grad write, adam m/v read+write (f32)
+    opt = 16.0 if cfg.param_count() <= 100e9 else 4.0     # adafactor small
+    accum = 1.0
+    n = cfg.param_count()
+    accum = 16.0 if n > 30e9 else (4.0 if n > 8e9 else 1.0)
+    return (P * (2.0 * accum + 1.0) + cfg.param_count() * opt
+            + 3.0 * act_stream)
+
+
+def model_flops_for(cfg, shape, variant: str) -> float:
+    """MODEL_FLOPS = 6*N_active*D(tokens) for train; 2*N*D for inference."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.tokens
+    # decode: one new token per sequence + attention over the cache
+    flops = 2.0 * n_active * shape.global_batch
+    if not cfg.attention_free:
+        n_attn = sum(1 for k in cfg.layer_kinds() if k in ("attn", "mla"))
+        if cfg.mla is not None:
+            dk = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim
+            dv = cfg.mla.kv_lora_rank
+            heads_k = cfg.n_heads
+        else:
+            dk = dv = cfg.d_head
+            heads_k = cfg.n_heads
+        if "kqsvd" in variant and cfg.mla is None:
+            dk = dv = max(1, cfg.d_head // 2)
+        if "kqsvd" in variant and cfg.mla is not None:
+            dk = cfg.mla.kv_lora_rank // 2 + cfg.mla.qk_rope_dim
+            dv = cfg.mla.kv_lora_rank // 2
+        T = min(shape.seq_len, cfg.sliding_window or shape.seq_len)
+        flops += (2.0 * shape.global_batch * n_attn * heads_k * T
+                  * (dk + dv))
+    return flops
+
+
+def packed_pairs(seq_len: int, block: int, window: int = 0) -> int:
+    """Trip count of the packed-causal attention scan (attention.py)."""
+    n = max(1, seq_len // min(block, seq_len))
+    wb = n if not window else -(-window // min(block, seq_len))
+    return sum(min(i, wb) + 1 for i in range(n))
+
+
+def attn_substitution(cfg, shape, while_summary, accum: int,
+                      n_model_shards: int, n_dp: int):
+    """Kernel-substitution costing for train/prefill memory terms.
+
+    The lax blockwise attention materializes per-block softmax state to
+    HBM each scan step; the deployed TPU path is the Pallas flash kernel
+    (kernels/flash) which keeps it in VMEM and touches q/k/v/out exactly
+    once per pass.  This identifies the attention scan loops in the
+    compiled HLO by their trip count (the packed-pairs count is unique in
+    practice) and swaps their measured per-device bytes for the kernel's
+    analytic traffic (x1.75 to average forward and backward passes).
+
+    Returns (bytes_removed, bytes_added, n_loops) — per device.
+    """
+    if cfg.attention_free or shape.kind == "decode":
+        return 0.0, 0.0, 0
+    S = shape.seq_len + (cfg.num_patch_tokens or 0)
+    P = packed_pairs(S, cfg.attn_block_q, cfg.sliding_window)
+    removed = added = 0.0
+    n = 0
+    Hq = (cfg.qhead_pad or cfg.n_heads)
+    Hq_dev = Hq // n_model_shards if Hq % n_model_shards == 0 else Hq
+    Hkv_dev = (cfg.n_kv_heads // n_model_shards
+               if cfg.n_kv_heads % n_model_shards == 0 else cfg.n_kv_heads)
+    if cfg.mla is not None:
+        dh = cfg.mla.qk_nope_dim + cfg.mla.qk_rope_dim
+        dv = cfg.mla.v_head_dim
+        Hkv_dev = Hq_dev                      # MLA materializes per-head
+    else:
+        dh = dv = cfg.d_head
+    B_dev = max(1, shape.global_batch // n_dp)
+    B_mb = max(1, B_dev // accum)
+    kernel_pass = B_mb * S * (Hq_dev * (dh + dv)
+                              + 2 * Hkv_dev * dh) * 2.0
+    for loop in while_summary:
+        if loop["trip"] == P and P > 4:
+            removed += loop["mult"] * loop["trip"] * loop["bytes"]
+            added += loop["mult"] * kernel_pass * 1.75
+            n += 1
+    return removed, added, n
+
+
+def summarize(r: Roofline) -> str:
+    return (f"{r.arch:26s} {r.shape:12s} {r.variant:10s} "
+            f"comp={r.t_compute*1e3:9.2f}ms mem={r.t_memory*1e3:9.2f}ms "
+            f"mem_proj={r.t_memory_projected*1e3:8.2f}ms "
+            f"coll={r.t_collective*1e3:8.2f}ms -> "
+            f"{r.bottleneck_projected:10s} "
+            f"useful={r.useful_flops_frac*100:5.1f}% "
+            f"roof={r.roofline_frac_projected*100:5.1f}%")

@@ -1,0 +1,416 @@
+"""Trip-count-aware FLOP/byte accounting over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE, which
+undercounts scanned programs (scan-over-layers, grad-accumulation,
+blockwise attention) by the trip count.  This walker re-derives both
+quantities with loop awareness:
+
+* FLOPs: ``dot`` = 2 * prod(result dims) * prod(contracting dims);
+  elementwise arithmetic = result elements; transcendentals tracked
+  separately.  ``while`` cost = trip_count x (body + cond);
+  ``fusion``/``call`` recurse; ``conditional`` takes the max branch.
+* Bytes (HBM traffic, XLA HloCostAnalysis convention): operands + result
+  for every materializing instruction; instructions inside a fusion
+  computation are free (fused intermediates never touch HBM) — the fusion
+  call site pays its operands + result.  ``while`` bodies pay per
+  iteration.
+* Trip counts: parsed from the loop condition's integer constant (all
+  repro scans are canonical 0..N counters); a loop with no parsable bound
+  counts once and is recorded in ``warnings``.
+
+Validated against cost_analysis() on loop-free graphs (tests).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT )?%?([\w.\-]+)\s*=\s*(.+?)\s+([a-z][\w\-]*)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "compare", "select", "and", "or", "xor", "negate", "abs", "clamp",
+    "floor", "ceil", "round-nearest-afz", "sign", "remainder",
+}
+_TRANSCENDENTAL = {"exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+                   "logistic", "expm1", "log1p", "cosine", "sine",
+                   "erf", "atan2", "cbrt"}
+_FREE = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+         "after-all", "opt-barrier", "partition-id", "replica-id"}
+
+
+def _shape_info(type_str: str) -> Tuple[int, int]:
+    """(total elements, total bytes) over possibly-tuple type string."""
+    elems = 0
+    nbytes = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str
+    is_root: bool = False
+
+    def operand_refs(self) -> List[str]:
+        arglist = self.rest.split(")", 1)[0]
+        return re.findall(r"%([\w.\-]+)", arglist)
+
+
+@dataclass
+class CostTotals:
+    flops: float = 0.0            # dot + elementwise
+    dot_flops: float = 0.0
+    transcendentals: float = 0.0
+    bytes: float = 0.0
+    warnings: List[str] = field(default_factory=list)
+
+    def add(self, other: "CostTotals", mult: float = 1.0):
+        self.flops += mult * other.flops
+        self.dot_flops += mult * other.dot_flops
+        self.transcendentals += mult * other.transcendentals
+        self.bytes += mult * other.bytes
+        self.warnings.extend(other.warnings)
+
+
+class HloCost:
+    def __init__(self, hlo_text: str):
+        self.comps: Dict[str, List[Instr]] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self._memo: Dict[Tuple[str, bool], CostTotals] = {}
+
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        for line in text.splitlines():
+            m = _COMP_RE.match(line)
+            if m:
+                cur = m.group(1)
+                self.comps[cur] = []
+                if line.startswith("ENTRY"):
+                    self.entry = cur
+                continue
+            if cur is None:
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            mi = _INSTR_RE.match(line)
+            if mi:
+                self.comps[cur].append(
+                    Instr(mi.group(1), mi.group(2), mi.group(3),
+                          mi.group(4),
+                          is_root=line.lstrip().startswith("ROOT ")))
+
+    # -- helpers -------------------------------------------------------------
+
+    def _symbols(self, comp: str) -> Dict[str, str]:
+        return {i.name: i.type_str for i in self.comps[comp]}
+
+    def _called(self, rest: str, attr: str) -> Optional[str]:
+        m = re.search(attr + r"=%?([\w.\-]+)", rest)
+        return m.group(1) if m else None
+
+    def _trip_count(self, cond_comp: str) -> Optional[int]:
+        """Largest integer constant in the condition computation chain."""
+        best = None
+        seen = set()
+        stack = [cond_comp]
+        while stack:
+            c = stack.pop()
+            if c in seen or c not in self.comps:
+                continue
+            seen.add(c)
+            for i in self.comps[c]:
+                if i.op == "constant":
+                    m = re.match(r"(-?\d+)\)?", i.rest)
+                    if m and i.type_str.startswith(("s32", "s64", "u32",
+                                                    "u64")):
+                        v = int(m.group(1))
+                        if best is None or v > best:
+                            best = v
+                for attr in ("calls", "to_apply"):
+                    sub = self._called(i.rest, attr)
+                    if sub:
+                        stack.append(sub)
+        return best
+
+    def _dot_flops(self, instr: Instr, syms: Dict[str, str]) -> float:
+        out_elems, _ = _shape_info(instr.type_str)
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.rest)
+        contract = 1
+        if m:
+            ops = re.findall(r"%([\w.\-]+)", instr.rest.split(")", 1)[0])
+            if ops:
+                lhs_type = syms.get(ops[0], "")
+                shapes = _SHAPE_RE.findall(lhs_type)
+                if shapes:
+                    dims = [int(d) for d in shapes[0][1].split(",") if d]
+                    for ci in m.group(1).split(","):
+                        if ci and int(ci) < len(dims):
+                            contract *= dims[int(ci)]
+        return 2.0 * out_elems * contract
+
+    # -- in-place-aware fusion access analysis -------------------------------
+
+    def _fusion_access(self, comp: str) -> Tuple[Dict[int, float],
+                                                 Optional[float]]:
+        """Per-parameter HBM read bytes + output write bytes for a fusion.
+
+        In-place rules (mirrors XLA HloCostAnalysis + buffer aliasing):
+        * a parameter consumed ONLY by dynamic-slice reads just the slices;
+        * a parameter that is the TARGET of a dynamic-update-slice (and not
+          otherwise read in full) is aliased in place — reads the update
+          footprint only;
+        * if the fusion ROOT is a DUS (or a tuple of them), the output
+          write is the update footprint, not the full tensor.
+        Returns ({param_idx: read_bytes or None for full}, out_bytes or
+        None for full).
+        """
+        if comp not in self.comps:
+            return {}, None
+        syms = self._symbols(comp)
+        param_idx: Dict[str, int] = {}
+        for i in self.comps[comp]:
+            if i.op == "parameter":
+                m = re.match(r"(\d+)", i.rest)
+                if m:
+                    param_idx[i.name] = int(m.group(1))
+        # resolve aliases (bitcast/copy/reshape/convert of a param) so the
+        # in-place analysis sees through them.  convert is included because
+        # the CPU backend legalizes bf16 by round-tripping through f32 —
+        # an artifact the TPU target (native bf16) does not pay.
+        alias: Dict[str, str] = {n: n for n in param_idx}
+        for i in self.comps[comp]:
+            if i.op in ("bitcast", "copy", "reshape", "convert"):
+                ops = i.operand_refs()
+                if len(ops) == 1 and ops[0] in alias:
+                    alias[i.name] = alias[ops[0]]
+        uses: Dict[str, List[Tuple[str, Instr, int]]] = {
+            n: [] for n in param_idx}
+        for i in self.comps[comp]:
+            if i.op == "parameter" or i.name in alias:
+                continue
+            for slot, ref in enumerate(i.operand_refs()):
+                if ref in alias:
+                    uses[alias[ref]].append((i.op, i, slot))
+        reads: Dict[int, float] = {}
+        for name, ulist in uses.items():
+            idx = param_idx[name]
+            if not ulist:
+                reads[idx] = 0.0
+                continue
+            # sliced access: every use is a dynamic-slice read or a
+            # dynamic-update-slice with this param as the in-place target
+            if all(op == "dynamic-slice"
+                   or (op == "dynamic-update-slice" and slot == 0)
+                   for op, _, slot in ulist):
+                total = 0.0
+                for op, ins, _ in ulist:
+                    if op == "dynamic-slice":
+                        total += _shape_info(ins.type_str)[1]
+                    else:
+                        ops = ins.operand_refs()
+                        if len(ops) >= 2 and ops[1] in syms:
+                            total += _shape_info(syms[ops[1]])[1]
+                reads[idx] = total
+            # else: full read (None -> default)
+        out_bytes: Optional[float] = None
+        root = next((i for i in self.comps[comp] if i.is_root), None)
+        if root is not None:
+            by_name = {i.name: i for i in self.comps[comp]}
+
+            def resolve(ins):
+                while ins.op in ("copy", "bitcast", "convert") \
+                        and ins.operand_refs() \
+                        and ins.operand_refs()[0] in by_name:
+                    ins = by_name[ins.operand_refs()[0]]
+                return ins
+
+            elems = [resolve(root)]
+            if root.op == "tuple":
+                elems = [resolve(by_name[r]) for r in root.operand_refs()
+                         if r in by_name]
+            total = 0.0
+            any_dus = False
+            for e in elems:
+                if e.op == "dynamic-update-slice":
+                    any_dus = True
+                    ops = e.operand_refs()
+                    if len(ops) >= 2 and ops[1] in syms:
+                        total += _shape_info(syms[ops[1]])[1]
+                else:
+                    total += _shape_info(e.type_str)[1]
+            if any_dus:
+                out_bytes = total
+        return reads, out_bytes
+
+    # -- main walk -----------------------------------------------------------
+
+    def comp_cost(self, comp: str, in_fusion: bool = False) -> CostTotals:
+        key = (comp, in_fusion)
+        if key in self._memo:
+            return self._memo[key]
+        total = CostTotals()
+        if comp not in self.comps:
+            return total
+        syms = self._symbols(comp)
+        for i in self.comps[comp]:
+            out_elems, out_bytes = _shape_info(i.type_str)
+            op_bytes = 0.0
+            if not in_fusion and i.op not in _FREE:
+                operand_bytes = 0
+                arglist = i.rest.split(")", 1)[0]
+                for ref in re.findall(r"%([\w.\-]+)", arglist):
+                    if ref in syms:
+                        operand_bytes += _shape_info(syms[ref])[1]
+                op_bytes = operand_bytes + out_bytes
+            if i.op == "dot":
+                df = self._dot_flops(i, syms)
+                total.dot_flops += df
+                total.flops += df
+                total.bytes += op_bytes
+            elif i.op == "fusion":
+                sub = self._called(i.rest, "calls")
+                if sub:
+                    inner = self.comp_cost(sub, in_fusion=True)
+                    total.flops += inner.flops
+                    total.dot_flops += inner.dot_flops
+                    total.transcendentals += inner.transcendentals
+                if not in_fusion and sub:
+                    reads, outb = self._fusion_access(sub)
+                    fb = outb if outb is not None \
+                        else _shape_info(i.type_str)[1]
+                    for slot, ref in enumerate(i.operand_refs()):
+                        if ref not in syms:
+                            continue
+                        r = reads.get(slot)
+                        fb += (r if r is not None
+                               else _shape_info(syms[ref])[1])
+                    total.bytes += fb
+                else:
+                    total.bytes += op_bytes
+            elif i.op == "dynamic-slice" and not in_fusion:
+                total.bytes += 2.0 * out_bytes
+            elif i.op == "dynamic-update-slice" and not in_fusion:
+                ops = i.operand_refs()
+                upd = (_shape_info(syms[ops[1]])[1]
+                       if len(ops) >= 2 and ops[1] in syms else out_bytes)
+                total.bytes += 2.0 * upd
+            elif i.op == "gather" and not in_fusion:
+                idx_b = 0.0
+                ops = i.operand_refs()
+                if len(ops) >= 2 and ops[1] in syms:
+                    idx_b = _shape_info(syms[ops[1]])[1]
+                total.bytes += 2.0 * out_bytes + idx_b
+            elif i.op == "while":
+                body = self._called(i.rest, "body")
+                cond = self._called(i.rest, "condition")
+                trip = self._trip_count(cond) if cond else None
+                if trip is None or trip <= 0:
+                    trip = 1
+                    total.warnings.append(f"while {i.name}: unknown trip")
+                if body:
+                    total.add(self.comp_cost(body), trip)
+                if cond:
+                    total.add(self.comp_cost(cond), trip)
+            elif i.op in ("call", "async-start"):
+                sub = self._called(i.rest, "to_apply") \
+                    or self._called(i.rest, "calls")
+                if sub:
+                    total.add(self.comp_cost(sub, in_fusion))
+                total.bytes += op_bytes
+            elif i.op == "conditional":
+                branches = re.findall(r"branch_computations=\{([^}]*)\}",
+                                      i.rest)
+                subs = []
+                if branches:
+                    subs = [b.strip().lstrip("%")
+                            for b in branches[0].split(",")]
+                else:
+                    for attr in ("true_computation", "false_computation"):
+                        s = self._called(i.rest, attr)
+                        if s:
+                            subs.append(s)
+                if subs:
+                    costs = [self.comp_cost(s, in_fusion) for s in subs]
+                    total.add(max(costs, key=lambda c: c.flops))
+                total.bytes += op_bytes
+            elif i.op in _ELEMENTWISE:
+                total.flops += out_elems
+                total.bytes += op_bytes
+            elif i.op in _TRANSCENDENTAL:
+                total.transcendentals += out_elems
+                total.bytes += op_bytes
+            elif i.op in _FREE:
+                pass
+            else:
+                # data movement (copy, transpose, gather, dus, collectives,
+                # custom-call, reduce, ...): bytes only; reduce adds flops
+                if i.op in ("reduce", "reduce-window"):
+                    total.flops += out_elems
+                total.bytes += op_bytes
+        self._memo[key] = total
+        return total
+
+    def totals(self) -> CostTotals:
+        assert self.entry, "no ENTRY computation found"
+        return self.comp_cost(self.entry)
+
+    # -- per-loop breakdown (kernel-substitution costing) --------------------
+
+    def while_summary(self) -> List[Dict]:
+        """All while loops with absolute multiplicity and per-iteration
+        cost: [{body, trip, mult, flops, bytes}].  ``mult`` is the product
+        of enclosing trip counts, so mult*trip*per-iteration = absolute.
+        Used to substitute the lax blockwise-attention stand-in's traffic
+        with the Pallas kernel's true HBM traffic (see launch/dryrun)."""
+        out: List[Dict] = []
+
+        def walk(comp: str, mult: float):
+            if comp not in self.comps:
+                return
+            for i in self.comps[comp]:
+                if i.op == "while":
+                    body = self._called(i.rest, "body")
+                    cond = self._called(i.rest, "condition")
+                    trip = (self._trip_count(cond) or 1) if cond else 1
+                    per = self.comp_cost(body) if body else CostTotals()
+                    out.append({"body": body, "trip": trip, "mult": mult,
+                                "flops": per.flops, "bytes": per.bytes})
+                    if body:
+                        walk(body, mult * trip)
+                elif i.op in ("call", "fusion"):
+                    sub = self._called(i.rest, "to_apply") \
+                        or self._called(i.rest, "calls")
+                    if sub and i.op == "call":
+                        walk(sub, mult)
+
+        walk(self.entry, 1.0)
+        return out
+
+
+def analyze(hlo_text: str) -> CostTotals:
+    return HloCost(hlo_text).totals()

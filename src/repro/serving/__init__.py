@@ -1,0 +1,3 @@
+from repro.serving.engine import Request, ServingEngine, sample_token
+
+__all__ = ["Request", "ServingEngine", "sample_token"]

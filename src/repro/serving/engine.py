@@ -1,0 +1,113 @@
+"""Batched serving engine with full or KQ-SVD-compressed KV cache.
+
+A deliberately small continuous-batching core: requests are admitted up to
+``max_batch``, prefilled (left-padded into a shared cache), then decoded in
+lock-step; finished requests free their slots for waiting ones.  The cache
+is allocated once at (max_batch, max_seq_len) — with KQ-SVD compression the
+same HBM budget admits ~d/(R_k+R_v) x more concurrent sequences
+(``capacity_gain``), which is the serving-level payoff of the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, ServeConfig
+from repro.core.calibration import ModelProjections
+from repro.core.compressed import cache_footprint
+from repro.models.model import LM, build_model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (S,) int32
+    max_new_tokens: int = 16
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def sample_token(logits: jnp.ndarray, temperature: float, rng) -> jnp.ndarray:
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    return jax.random.categorical(rng, logits / temperature, axis=-1)
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, sc: ServeConfig,
+                 projections: Optional[ModelProjections] = None):
+        self.cfg = cfg
+        self.sc = sc
+        self.model = build_model(cfg)
+        self.params = params
+        self.proj = (self.model.projections_pytree(projections)
+                     if projections is not None else None)
+        self.ranks = ((projections.rank_k, projections.rank_v)
+                      if projections is not None else (0, 0))
+        self._decode = jax.jit(self._decode_impl)
+        self._prefill = jax.jit(self._prefill_impl)
+        self.rng = jax.random.PRNGKey(sc.seed)
+
+    # -- jitted internals ---------------------------------------------------
+
+    def _prefill_impl(self, params, proj, tokens):
+        batch = {"tokens": tokens}
+        if self.proj is not None:
+            return self.model.prefill(params, batch, self.sc.max_seq_len,
+                                      proj=proj)
+        return self.model.prefill(params, batch, self.sc.max_seq_len)
+
+    def _decode_impl(self, params, proj, cache, tokens, pos):
+        if self.proj is not None:
+            return self.model.decode_step(params, cache, tokens, pos,
+                                          proj=proj)
+        return self.model.decode_step(params, cache, tokens, pos)
+
+    # -- capacity accounting --------------------------------------------------
+
+    def capacity_gain(self) -> float:
+        """How many x more sequences fit in the same cache HBM."""
+        if self.ranks[0] == 0:
+            return 1.0
+        fp = cache_footprint(self.cfg.n_kv_heads, self.cfg.d_head,
+                             *self.ranks)
+        return 1.0 / fp.ratio
+
+    # -- serving ------------------------------------------------------------
+
+    def generate(self, requests: List[Request]) -> List[Request]:
+        """Serve a list of requests to completion (batched decode)."""
+        pending = list(requests)
+        active: List[Request] = []
+        while pending or active:
+            while pending and len(active) < self.sc.max_batch:
+                active.append(pending.pop(0))
+            # all active requests must share prompt length per prefill
+            # batch; group by length for simplicity
+            plen = len(active[0].prompt)
+            group = [r for r in active if len(r.prompt) == plen]
+            toks = jnp.asarray(np.stack([r.prompt for r in group]))
+            logits, cache = self._prefill(self.params, self.proj, toks)
+            max_new = max(r.max_new_tokens for r in group)
+            pos = plen                     # position of the next new token
+            for t in range(max_new):
+                self.rng, sub = jax.random.split(self.rng)
+                nxt = sample_token(logits[:, -1], self.sc.temperature, sub)
+                nxt_np = np.asarray(nxt)
+                for i, r in enumerate(group):
+                    if len(r.out_tokens) < r.max_new_tokens:
+                        r.out_tokens.append(int(nxt_np[i]))
+                if t == max_new - 1 or pos >= self.sc.max_seq_len:
+                    break
+                last = nxt[:, None].astype(jnp.int32)
+                logits, cache = self._decode(self.params, self.proj, cache,
+                                             last, jnp.int32(pos))
+                pos += 1
+            for r in group:
+                r.done = True
+                active.remove(r)
+        return requests

@@ -1,0 +1,6 @@
+from repro.sharding.partition import (active_mesh, dp_axes, named,
+                                      param_spec, params_shardings, shard,
+                                      use_mesh)
+
+__all__ = ["active_mesh", "dp_axes", "named", "param_spec",
+           "params_shardings", "shard", "use_mesh"]

@@ -1,0 +1,189 @@
+"""Logical->physical sharding rules (DP/FSDP/TP/EP/SP).
+
+A process-global "active mesh" contextvar lets model code place activation
+constraints without threading the mesh through every call; with no active
+mesh every helper is a no-op, so single-device unit tests run the exact
+same model code.
+
+Conventions (see DESIGN.md §5):
+* ``data-parallel axes``: ("pod", "data") when present — batch and FSDP.
+* ``model axis``: "model" — TP (heads / d_ff / vocab) and EP (experts).
+* Dims that don't divide the axis size are replicated
+  (``shard_if_divisible``), e.g. 8 kv heads on a 16-way model axis.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE_MESH: contextvars.ContextVar[Optional[Mesh]] = \
+    contextvars.ContextVar("repro_active_mesh", default=None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    token = _ACTIVE_MESH.set(mesh)
+    try:
+        if mesh is not None:
+            with mesh:
+                yield mesh
+        else:
+            yield None
+    finally:
+        _ACTIVE_MESH.reset(token)
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH.get()
+
+
+def dp_axes(mesh: Optional[Mesh] = None) -> Tuple[str, ...]:
+    mesh = mesh or active_mesh()
+    if mesh is None:
+        return ("data",)
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def axis_size(name, mesh: Optional[Mesh] = None) -> int:
+    mesh = mesh or active_mesh()
+    if mesh is None:
+        return 1
+    names = name if isinstance(name, tuple) else (name,)
+    n = 1
+    for a in names:
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+def maybe_axis(dim_size: int, name, mesh: Optional[Mesh] = None):
+    """Return the axis name if dim_size divides its size, else None."""
+    sz = axis_size(name, mesh)
+    if sz > 1 and dim_size % sz == 0:
+        return name
+    return None
+
+
+def shard(x, *spec):
+    """Activation sharding constraint against the active mesh (no-op
+    without one).  spec entries: axis name, tuple of names, or None."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    cleaned = []
+    for dim, s in zip(x.shape, spec):
+        if s is None:
+            cleaned.append(None)
+            continue
+        names = s if isinstance(s, tuple) else (s,)
+        names = tuple(n for n in names if n in mesh.axis_names)
+        if not names:
+            cleaned.append(None)
+            continue
+        size = int(np.prod([mesh.shape[n] for n in names]))
+        cleaned.append(names if (size > 1 and dim % size == 0) else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*cleaned)))
+
+
+def named(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter partition rules
+# ---------------------------------------------------------------------------
+
+
+# model-axis dim, counted FROM THE END of the shape (robust to any number
+# of leading scan-stacking dims).  None => replicated on the model axis.
+_MODEL_DIM_FROM_END = {
+    "wq": -2, "wk": -2, "wv": -2,            # (D, H[kv], dh) -> head dim
+    "wuk": -2, "wuv": -2,                     # (lora, H, e)   -> head dim
+    "wi": -1, "wg": -1,                       # (D, ff)        -> ff dim
+    "wi_e": -3, "wg_e": -3, "wo_e": -3,       # (E, D, ff)     -> expert dim
+    "embed": -2,                              # (V, D)         -> vocab dim
+    "lm_head": -1,                            # (D, V)         -> vocab dim
+    "in_proj": -1,                            # (D, inner)
+    "out_proj": -2,                           # (inner, D)
+    "conv": -2,                               # (conv_dim, K)
+}
+
+# forward-contracted dim per weight: serve-mode "resident" sharding puts
+# the data axes HERE instead of FSDP's largest-dim rule, so decode never
+# all-gathers weights — each shard consumes its slice in place and GSPMD
+# all-reduces the (tiny at S=1) activations instead (§Perf iteration D4).
+_CONTRACT_DIM_FROM_END = {
+    "wq": -3, "wk": -3, "wv": -3,             # contract D
+    "wuk": -3, "wuv": -3,                     # contract lora
+    "wd": -2,                                 # contract D
+    "wi": -2, "wg": -2,                       # contract D
+    "wi_e": -2, "wg_e": -2,                   # contract D
+    "wo_e": -2,                               # contract ff
+    "embed": -1,                              # shard D (row residency)
+    "lm_head": -2,                            # contract D
+    "in_proj": -2,                            # contract D
+    "out_proj": -2,                           # contract inner
+}
+
+
+def param_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
+               mesh: Mesh, fsdp: bool, serve: bool = False) -> P:
+    """PartitionSpec for a parameter identified by its pytree path.
+
+    TP on the model axis per ``_MODEL_DIM_FROM_END`` (``wo`` is contextual:
+    attention output (H, dh, D) shards heads at -3; SwiGLU output (ff, D)
+    shards ff at -2).  Data axes: ``serve`` shards the forward-contracted
+    dim (resident weights, activation all-reduce); otherwise FSDP shards
+    the largest remaining divisible dim (gather-at-use, reduce-scatter
+    grads).  Non-divisible dims replicate.
+    """
+    name = path[-1]
+    parts: list = [None] * len(shape)
+
+    def setm(from_end: int):
+        d = len(shape) + from_end
+        if 0 <= d < len(shape) and maybe_axis(shape[d], "model", mesh):
+            parts[d] = "model"
+
+    if name == "wo":
+        setm(-3 if "attn" in path else -2)
+    elif name in _MODEL_DIM_FROM_END:
+        setm(_MODEL_DIM_FROM_END[name])
+
+    dp = dp_axes(mesh)
+    dpsize = int(np.prod([mesh.shape[a] for a in dp]))
+    if dpsize > 1 and serve:
+        tgt = -2 if name == "wo" else _CONTRACT_DIM_FROM_END.get(name)
+        if tgt is not None:
+            d = len(shape) + tgt
+            if 0 <= d < len(shape):
+                if parts[d] is None and shape[d] % dpsize == 0:
+                    parts[d] = dp
+                elif parts[d] == "model" and \
+                        shape[d] % (dpsize * mesh.shape["model"]) == 0:
+                    parts[d] = ("model",) + dp
+    if fsdp and not serve and dpsize > 1:
+        order = sorted(range(len(shape)), key=lambda d: -shape[d])
+        for d in order:
+            if parts[d] is None and shape[d] % dpsize == 0:
+                parts[d] = dp
+                break
+    return P(*parts)
+
+
+def params_shardings(params_shape, mesh: Mesh, fsdp: bool,
+                     serve: bool = False):
+    """NamedShardings for a (possibly abstract) params pytree."""
+    def spec_for(path, leaf):
+        keys = tuple(getattr(p, "key", getattr(p, "idx", p))
+                     for p in path)
+        keys = tuple(str(k) for k in keys)
+        return NamedSharding(mesh, param_spec(keys, leaf.shape, mesh,
+                                              fsdp, serve))
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)

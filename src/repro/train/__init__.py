@@ -1,0 +1,8 @@
+from repro.train.losses import cross_entropy, total_loss
+from repro.train.steps import (make_decode_step, make_loss_fn,
+                               make_prefill_step, make_train_step)
+from repro.train.trainer import Trainer, TrainerReport
+
+__all__ = ["cross_entropy", "total_loss", "make_train_step",
+           "make_loss_fn", "make_prefill_step", "make_decode_step",
+           "Trainer", "TrainerReport"]

@@ -1,0 +1,41 @@
+"""Cross-entropy with z-loss and ignore-index masking; MoE aux mixing."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+IGNORE = -100
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  z_weight: float = 0.0) -> Tuple[jnp.ndarray, Dict]:
+    """logits (B,S,V) f32, labels (B,S) int32 (IGNORE masks)."""
+    mask = (labels != IGNORE).astype(jnp.float32)
+    safe = jnp.where(labels == IGNORE, 0, labels)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = nll.sum() / denom
+    metrics = {"ce": loss, "tokens": mask.sum()}
+    if z_weight:
+        zl = z_weight * jnp.sum((lse * mask) ** 2) / denom
+        loss = loss + zl
+        metrics["z_loss"] = zl
+    return loss, metrics
+
+
+def total_loss(logits, labels, aux, train_cfg, moe_cfg=None):
+    loss, metrics = cross_entropy(logits, labels, train_cfg.z_loss)
+    if moe_cfg is not None and aux is not None:
+        n = jnp.maximum(aux["n_moe"], 1.0)
+        lb = aux["load_balance"] / n
+        rz = aux["router_z"] / n
+        loss = loss + moe_cfg.router_aux_weight * lb \
+            + moe_cfg.router_z_weight * rz
+        metrics.update({"moe_lb": lb, "moe_rz": rz,
+                        "moe_dropped": aux["dropped_frac"] / n})
+    metrics["loss"] = loss
+    return loss, metrics

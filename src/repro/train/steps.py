@@ -1,0 +1,96 @@
+"""pjit-able step functions (shared by the trainer and the dry-run).
+
+``make_train_step``: loss -> grads (with optional lax.scan gradient
+accumulation over microbatches) -> clipped update.  Gradients live in the
+parameter dtype (bf16) so FSDP reduce-scatters run compressed; the
+accumulator is f32.
+
+``make_prefill_step`` / ``make_decode_step``: serving steps, full-cache or
+KQ-SVD-compressed variants.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.config import ModelConfig, TrainConfig
+from repro.models.model import LM
+from repro.optim.schedule import learning_rate
+from repro.train.losses import total_loss
+
+
+def make_loss_fn(model: LM, tc: TrainConfig) -> Callable:
+    cfg = model.cfg
+
+    def loss_fn(params, batch):
+        logits, aux = model.train_logits(params, batch)
+        return total_loss(logits, batch["labels"], aux, tc, cfg.moe)
+
+    return loss_fn
+
+
+def make_train_step(model: LM, tc: TrainConfig) -> Callable:
+    loss_fn = make_loss_fn(model, tc)
+
+    def train_step(params, opt_state, batch):
+        if tc.grad_accum > 1:
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                (loss, metrics), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + metrics["loss"]), None
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape((tc.grad_accum,
+                                     x.shape[0] // tc.grad_accum)
+                                    + x.shape[1:]), batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (g_acc, loss_sum), _ = jax.lax.scan(
+                micro, (g0, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(
+                lambda g, p: (g / tc.grad_accum).astype(p.dtype),
+                g_acc, params)
+            metrics = {"loss": loss_sum / tc.grad_accum}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        lr = learning_rate(tc, opt_state["step"])
+        params, opt_state, om = optim.apply_updates(
+            params, grads, opt_state, tc, lr)
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["lr"] = lr
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: LM, max_len: int,
+                      compressed: bool = False) -> Callable:
+    if compressed:
+        def prefill_step_c(params, proj, batch):
+            return model.prefill(params, batch, max_len, proj=proj)
+        return prefill_step_c
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_len)
+
+    return prefill_step
+
+
+def make_decode_step(model: LM, compressed: bool = False) -> Callable:
+    if compressed:
+        def decode_step_c(params, proj, cache, tokens, pos):
+            return model.decode_step(params, cache, tokens, pos, proj=proj)
+        return decode_step_c
+
+    def decode_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    return decode_step

@@ -1,0 +1,139 @@
+"""Training loop with fault tolerance, straggler detection, elastic resume.
+
+Production posture (DESIGN.md §5):
+* checkpoint every N steps + on SIGTERM (preemption) + on crash-retry;
+* step retry: a transient step failure (injected in tests via
+  ``failure_hook``) restores the last checkpoint and continues — the same
+  code path a node failure takes after the job restarts on spare capacity;
+* straggler watchdog: per-step wall time EMA; steps slower than
+  ``straggler_factor`` x EMA are counted and surfaced so the cluster layer
+  can drain the slow host (on this single-process container the detection
+  path is what's exercised);
+* elastic: checkpoints store global arrays, so ``resume`` re-places them
+  under whatever mesh the restarted job has.
+"""
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import jax
+import numpy as np
+
+from repro import optim
+from repro.checkpoint.manager import CheckpointManager
+from repro.config import ModelConfig, TrainConfig
+from repro.models.model import LM, build_model
+from repro.sharding.partition import use_mesh
+from repro.train.steps import make_train_step
+
+
+@dataclass
+class TrainerReport:
+    steps_done: int = 0
+    final_loss: float = float("nan")
+    losses: List[float] = field(default_factory=list)
+    retries: int = 0
+    straggler_steps: int = 0
+    step_times: List[float] = field(default_factory=list)
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tc: TrainConfig,
+                 ckpt_dir: Optional[str] = None, mesh=None,
+                 failure_hook: Optional[Callable[[int], None]] = None,
+                 straggler_factor: float = 3.0):
+        self.cfg = cfg
+        self.tc = tc
+        self.mesh = mesh
+        self.model = build_model(cfg)
+        self.train_step = jax.jit(make_train_step(self.model, tc),
+                                  donate_argnums=(0, 1))
+        self.ckpt = (CheckpointManager(ckpt_dir, keep=tc.keep_checkpoints)
+                     if ckpt_dir else None)
+        self.failure_hook = failure_hook
+        self.straggler_factor = straggler_factor
+        self._stop = False
+
+    # -- state --------------------------------------------------------------
+
+    def init_state(self, rng=None):
+        rng = rng if rng is not None else jax.random.PRNGKey(self.tc.seed)
+        params = self.model.init(rng)
+        opt_state = optim.init_state(params, self.tc)
+        return {"params": params, "opt": opt_state, "step": 0}
+
+    def resume_or_init(self):
+        if self.ckpt and self.ckpt.latest_step() is not None:
+            template = self.init_state()
+            tree, meta = self.ckpt.restore(
+                {"params": template["params"], "opt": template["opt"]})
+            return {"params": tree["params"], "opt": tree["opt"],
+                    "step": int(meta["extra"].get("train_step",
+                                                  meta["step"]))}
+        return self.init_state()
+
+    def _save(self, state) -> None:
+        if self.ckpt:
+            self.ckpt.save(state["step"],
+                           {"params": state["params"], "opt": state["opt"]},
+                           extra={"train_step": state["step"]})
+
+    # -- loop ---------------------------------------------------------------
+
+    def run(self, data: Iterator[Dict[str, np.ndarray]],
+            num_steps: int, state: Optional[Dict] = None) -> TrainerReport:
+        report = TrainerReport()
+        state = state or self.resume_or_init()
+        old_handler = None
+        try:
+            old_handler = signal.signal(
+                signal.SIGTERM, lambda *_: setattr(self, "_stop", True))
+        except ValueError:
+            pass                                  # non-main thread (tests)
+        ema: Optional[float] = None
+        with use_mesh(self.mesh):
+            while state["step"] < num_steps and not self._stop:
+                batch = next(data)
+                t0 = time.perf_counter()
+                try:
+                    if self.failure_hook:
+                        self.failure_hook(state["step"])
+                    params, opt, metrics = self.train_step(
+                        state["params"], state["opt"], batch)
+                    loss = float(metrics["loss"])
+                    if not np.isfinite(loss):
+                        raise FloatingPointError(f"loss={loss}")
+                except (RuntimeError, FloatingPointError, ValueError) as e:
+                    # node-failure path: restore last checkpoint, retry
+                    report.retries += 1
+                    if self.ckpt and self.ckpt.latest_step() is not None:
+                        state = self.resume_or_init()
+                        continue
+                    raise
+                dt = time.perf_counter() - t0
+                report.step_times.append(dt)
+                if ema is not None and dt > self.straggler_factor * ema:
+                    report.straggler_steps += 1
+                # the first step includes XLA compile — keep it out of the
+                # EMA so it doesn't mask genuine stragglers
+                if len(report.step_times) >= 2:
+                    ema = dt if ema is None else 0.9 * ema + 0.1 * dt
+                state = {"params": params, "opt": opt,
+                         "step": state["step"] + 1}
+                report.losses.append(loss)
+                report.steps_done = state["step"]
+                report.final_loss = loss
+                if (self.tc.checkpoint_every
+                        and state["step"] % self.tc.checkpoint_every == 0):
+                    self._save(state)
+        if self._stop:                            # preemption: final save
+            self._save(state)
+        if self.ckpt:
+            self.ckpt.wait()
+        if old_handler is not None:
+            signal.signal(signal.SIGTERM, old_handler)
+        self.state = state                        # donated inputs are dead;
+        return report                             # callers read this

@@ -1,0 +1,39 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see the
+single real CPU device; multi-device coverage runs in subprocesses
+(test_multidevice.py) that set --xla_force_host_platform_device_count
+themselves."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def dropless(cfg):
+    """Reduced config with capacity high enough that no token drops
+    (required for exact train/decode consistency checks)."""
+    if cfg.moe is None:
+        return cfg
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe,
+                                     capacity_factor=float(cfg.moe.n_experts)))
+
+
+def make_batch(cfg, B, S, seed=1):
+    key = jax.random.PRNGKey(seed)
+    if cfg.inputs_embeds:
+        batch = {"embeds": jax.random.normal(key, (B, S, cfg.d_model))
+                 * 0.1}
+    else:
+        batch = {"tokens": jax.random.randint(key, (B, S), 0,
+                                              cfg.vocab_size)}
+    if cfg.num_patch_tokens:
+        batch["image_embeds"] = jax.random.normal(
+            jax.random.fold_in(key, 1),
+            (B, cfg.num_patch_tokens, cfg.d_model)) * 0.1
+    return batch

@@ -1,0 +1,123 @@
+"""Blockwise attention (masked & packed) and decode paths vs reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (blockwise_attention, decode_attention,
+                                    reference_attention)
+
+
+@pytest.mark.parametrize("packed", [False, True])
+@pytest.mark.parametrize("B,H,Hkv,S,dh,b,window", [
+    (2, 4, 4, 64, 16, 16, 0),
+    (1, 8, 2, 128, 32, 32, 0),
+    (2, 4, 2, 64, 16, 16, 24),     # sliding window
+    (1, 2, 1, 96, 8, 32, 0),       # S not multiple of default block
+])
+def test_blockwise_matches_reference(B, H, Hkv, S, dh, b, window, packed):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, S, dh))
+    k = jax.random.normal(ks[1], (B, Hkv, S, dh))
+    v = jax.random.normal(ks[2], (B, Hkv, S, dh))
+    out = blockwise_attention(q, k, v, causal=True, window=window,
+                              block_q=b, block_k=b, packed=packed)
+    ref = reference_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_packed_equals_masked():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (2, 4, 128, 16))
+    k = jax.random.normal(ks[1], (2, 2, 128, 16))
+    v = jax.random.normal(ks[2], (2, 2, 128, 16))
+    a = blockwise_attention(q, k, v, block_q=32, block_k=32, packed=True)
+    b = blockwise_attention(q, k, v, block_q=32, block_k=32, packed=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_different_value_head_dim():
+    """MLA-style: dv != dk."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (1, 4, 64, 24))
+    k = jax.random.normal(ks[1], (1, 4, 64, 24))
+    v = jax.random.normal(ks[2], (1, 4, 64, 16))
+    out = blockwise_attention(q, k, v, block_q=16, block_k=16, packed=True)
+    ref = reference_attention(q, k, v)
+    assert out.shape == (1, 4, 64, 16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_masks_invalid_slots():
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    B, H, Hkv, T, d = 2, 4, 2, 32, 8
+    q = jax.random.normal(ks[0], (B, H, 1, d))
+    kc = jax.random.normal(ks[1], (B, Hkv, T, d))
+    vc = jax.random.normal(ks[2], (B, Hkv, T, d))
+    pos = 10
+    valid = jnp.arange(T) <= pos
+    agg = decode_attention(q, kc, vc, valid, 1.0)
+    # manual: attention over only the first pos+1 slots
+    ref = reference_attention(q, kc[:, :, : pos + 1], vc[:, :, : pos + 1],
+                              causal=False, scale=1.0)
+    np.testing.assert_allclose(np.asarray(agg.reshape(B, H, d)),
+                               np.asarray(ref[:, :, 0]), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_qhead_padding_exact():
+    """qhead_pad: padded model == unpadded model exactly (same weights)."""
+    import dataclasses
+    import jax
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config("tinyllama-1.1b").reduced()     # H=4, Hkv=2, m=2
+    cfg_p = dataclasses.replace(cfg, qhead_pad=8)    # m_p = 4
+    m0 = build_model(cfg)
+    mp = build_model(cfg_p)
+    p0 = m0.init(jax.random.PRNGKey(0))
+    pp = mp.init(jax.random.PRNGKey(1))
+
+    # embed the unpadded weights into the padded layout (group-preserving)
+    def embed(lp, l0):
+        lp = dict(lp)
+        if "attn" in lp and "wq" in lp["attn"]:
+            a = dict(lp["attn"])
+            D, Hp, dh = a["wq"].shape[-3:]
+            wq = jnp.zeros_like(a["wq"])
+            wo = jnp.zeros_like(a["wo"])
+            Hkv, m, m_p = cfg.n_kv_heads, 2, 4
+            for g in range(Hkv):
+                for j in range(m):
+                    wq = wq.at[..., :, g * m_p + j, :].set(
+                        l0["attn"]["wq"][..., :, g * m + j, :])
+                    wo = wo.at[..., g * m_p + j, :, :].set(
+                        l0["attn"]["wo"][..., g * m + j, :, :])
+            a.update(wq=wq, wo=wo, wk=l0["attn"]["wk"], wv=l0["attn"]["wv"])
+            lp["attn"] = a
+        for k in ("ln1", "ln2", "ffn"):
+            if k in l0:
+                lp[k] = l0[k]
+        return lp
+
+    pp = dict(pp)
+    pp["embed"], pp["final_norm"] = p0["embed"], p0["final_norm"]
+    if "lm_head" in p0:
+        pp["lm_head"] = p0["lm_head"]
+    pp["steps"] = jax.tree.map(
+        lambda *x: x[0],
+        {"layers": tuple(
+            embed(jax.tree.map(lambda a: a, pp["steps"]["layers"][j]),
+                  jax.tree.map(lambda a: a, p0["steps"]["layers"][j]))
+            for j in range(len(pp["steps"]["layers"])))})
+
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0,
+                              cfg.vocab_size)
+    l0_, _ = m0.train_logits(p0, {"tokens": toks})
+    lp_, _ = mp.train_logits(pp, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(lp_), np.asarray(l0_),
+                               rtol=2e-5, atol=2e-5)

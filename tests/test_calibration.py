@@ -1,0 +1,103 @@
+"""Streaming Gram calibration: batching invariance, GQA stacking, solve."""
+import jax
+import numpy as np
+
+from repro.config import CompressionConfig
+from repro.core.calibration import GramAccumulator
+from repro.core.projections import key_projection_from_caches
+from repro.core.theory import score_error
+
+
+def test_streaming_equals_oneshot(rng):
+    B, Hkv, H, T, d = 4, 2, 4, 32, 8
+    k = rng.normal(size=(B, Hkv, T, d))
+    q = rng.normal(size=(B, H, T, d))
+    v = rng.normal(size=(B, Hkv, T, d))
+    acc1 = GramAccumulator(1)
+    acc1.update(0, k, q, v)
+    acc2 = GramAccumulator(1)
+    for i in range(B):
+        acc2.update(0, k[i:i+1], q[i:i+1], v[i:i+1])
+    np.testing.assert_allclose(acc1.layers[0].g_k, acc2.layers[0].g_k,
+                               rtol=1e-10)
+    np.testing.assert_allclose(acc1.layers[0].g_q, acc2.layers[0].g_q,
+                               rtol=1e-10)
+    assert acc1.layers[0].tokens == acc2.layers[0].tokens
+
+
+def test_gqa_group_stacking_matches_thm5(rng):
+    """Accumulator's grouped G_Q equals explicit query stacking."""
+    B, Hkv, m, T, d = 2, 2, 3, 64, 8
+    H = Hkv * m
+    k = rng.normal(size=(B, Hkv, T, d))
+    q = rng.normal(size=(B, H, T, d))
+    v = rng.normal(size=(B, Hkv, T, d))
+    acc = GramAccumulator(1)
+    acc.update(0, k, q, v)
+    for g in range(Hkv):
+        qs = np.concatenate([q[b, g * m + j] for b in range(B)
+                             for j in range(m)], axis=0)
+        np.testing.assert_allclose(acc.layers[0].g_q[g], qs.T @ qs,
+                                   rtol=1e-8)
+
+
+def test_solve_produces_padded_uniform_ranks(rng):
+    B, Hkv, H, T, d = 2, 2, 4, 64, 8
+    acc = GramAccumulator(2)
+    for l in range(2):
+        acc.update(l, rng.normal(size=(B, Hkv, T, d)),
+                   rng.normal(size=(B, H, T, d)),
+                   rng.normal(size=(B, Hkv, T, d)))
+    w_out = [rng.normal(size=(Hkv, d, (H // Hkv) * 16)) for _ in range(2)]
+    cfg = CompressionConfig(method="kqsvd", rank_k=4, rank_v=3)
+    mp = acc.solve(cfg, w_out)
+    assert mp.a_k.shape == (2, Hkv, d, 4)
+    assert mp.c_v.shape == (2, Hkv, 3, (H // Hkv) * 16)
+    assert mp.ranks_k == [4, 4]
+
+
+def test_energy_rank_selection_varies_with_spectrum(rng):
+    B, Hkv, H, T, d = 2, 1, 1, 256, 16
+    acc = GramAccumulator(1)
+    k = rng.normal(size=(B, Hkv, T, d)) @ np.diag(
+        np.exp(-4.0 * np.arange(d) / d))
+    acc.update(0, k, rng.normal(size=(B, H, T, d)),
+               rng.normal(size=(B, Hkv, T, d)))
+    w_out = [rng.normal(size=(Hkv, d, 16))]
+    r_loose = acc.solve(CompressionConfig(method="kqsvd", epsilon=0.3),
+                        w_out).ranks_k[0]
+    r_tight = acc.solve(CompressionConfig(method="kqsvd", epsilon=0.01),
+                        w_out).ranks_k[0]
+    assert r_tight > r_loose
+
+
+def test_device_calibrate_step_matches_host():
+    """pjit-able Gram accumulation == host GramAccumulator path."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.core.calibration import (accumulator_from_grams,
+                                        make_calibrate_step)
+    from repro.models import build_model
+
+    cfg = get_config("tinyllama-1.1b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    init_grams, step = make_calibrate_step(model)
+    grams = init_grams(cfg.d_head, cfg.d_head, cfg.n_kv_heads)
+    step_j = jax.jit(step)
+    host = GramAccumulator(len(model.attn_layers))
+    for i in range(3):
+        toks = jax.random.randint(jax.random.PRNGKey(40 + i), (2, 32), 0,
+                                  cfg.vocab_size)
+        grams = step_j(params, grams, toks)
+        caps = model.calibrate(params, toks)
+        host.update_from_captures(
+            [jax.tree.map(np.asarray, c) for c in caps])
+    dev = accumulator_from_grams(grams)
+    for l in range(len(model.attn_layers)):
+        np.testing.assert_allclose(dev.layers[l].g_k, host.layers[l].g_k,
+                                   rtol=2e-4, atol=2e-3)
+        np.testing.assert_allclose(dev.layers[l].g_q, host.layers[l].g_q,
+                                   rtol=2e-4, atol=2e-3)
+    assert dev.layers[0].tokens == host.layers[0].tokens

@@ -1,0 +1,70 @@
+"""HLO cost walker: exactness on loop-free graphs, trip-count correction."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.roofline.analysis import parse_collectives
+from repro.roofline.hlo_cost import analyze
+
+
+def compile_(f, *specs):
+    return jax.jit(f).lower(*specs).compile()
+
+
+def test_matches_xla_on_unrolled():
+    def f(x, w):
+        for _ in range(4):
+            x = jnp.tanh(x @ w)
+        return x
+    s = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    c = compile_(f, s, s)
+    t = analyze(c.as_text())
+    xla = c.cost_analysis()
+    assert np.isclose(t.flops, xla["flops"], rtol=0.05)
+    assert np.isclose(t.bytes, xla["bytes accessed"], rtol=0.2)
+
+
+def test_scan_trip_count_correction():
+    def scan_f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        return jax.lax.scan(body, x, None, length=7)[0]
+
+    def unroll_f(x, w):
+        for _ in range(7):
+            x = jnp.tanh(x @ w)
+        return x
+
+    s = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    t_scan = analyze(compile_(scan_f, s, s).as_text())
+    t_unroll = analyze(compile_(unroll_f, s, s).as_text())
+    assert np.isclose(t_scan.dot_flops, t_unroll.dot_flops, rtol=1e-6)
+    assert t_scan.dot_flops == 7 * 2 * 64**3
+
+
+def test_dot_flops_with_batch_dims():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+    c = compile_(f, jax.ShapeDtypeStruct((4, 8, 16), jnp.float32),
+                 jax.ShapeDtypeStruct((4, 16, 32), jnp.float32))
+    t = analyze(c.as_text())
+    assert t.dot_flops == 2 * 4 * 8 * 16 * 32
+
+
+def test_parse_collectives_cost_model():
+    hlo = """
+HloModule m
+ENTRY %main () -> f32[] {
+  %ar = f32[1024]{0} all-reduce(%x), replica_groups=[4,16]<=[64]
+  %ag = bf16[2048,8]{1,0} all-gather(%y), replica_groups=[8,8]<=[64]
+  %cp = f32[512]{0} collective-permute(%z), source_target_pairs={{0,1}}
+}
+"""
+    st = parse_collectives(hlo, 64)
+    assert st.count == 3
+    ar = 2 * 15 / 16 * 1024 * 4
+    ag = 7 / 8 * 2048 * 8 * 2
+    cp = 512 * 4
+    assert np.isclose(st.wire_bytes, ar + ag + cp)
+    assert set(st.by_op) == {"all-reduce", "all-gather",
+                             "collective-permute"}

@@ -1,0 +1,97 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
+(interpret mode — assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash import flash_attention_op, flash_attention_ref
+from repro.kernels.kq_decode import (kq_decode_attention_op,
+                                     kq_decode_attention_ref)
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("B,H,Hkv,S,dh,b,window", [
+    (1, 2, 2, 64, 16, 16, 0),
+    (2, 4, 2, 128, 32, 32, 0),
+    (1, 4, 1, 64, 8, 16, 0),
+    (1, 2, 2, 64, 16, 16, 24),
+    (2, 2, 2, 64, 16, 32, 0),
+])
+def test_flash_kernel_sweep(B, H, Hkv, S, dh, b, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, S, dh)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, S, dh)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, S, dh)).astype(dtype)
+    out = flash_attention_op(q, k, v, causal=True, window=window,
+                             block_q=b, block_k=b)
+    ref = flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("B,H,Hkv,T,Rk,Rv,bt,pos", [
+    (1, 4, 2, 64, 16, 16, 16, 63),
+    (2, 8, 2, 128, 32, 16, 32, 100),
+    (1, 4, 1, 256, 8, 8, 64, 5),
+    (2, 4, 4, 64, 16, 32, 16, 31),
+])
+def test_kq_decode_kernel_sweep(B, H, Hkv, T, Rk, Rv, bt, pos, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    qc = jax.random.normal(ks[0], (B, H, Rk)).astype(dtype)
+    kc = jax.random.normal(ks[1], (B, Hkv, T, Rk)).astype(dtype)
+    vc = jax.random.normal(ks[2], (B, Hkv, T, Rv)).astype(dtype)
+    out = kq_decode_attention_op(qc, kc, vc, pos, block_t=bt, scale=0.25)
+    ref = kq_decode_attention_ref(qc, kc, vc, pos, scale=0.25)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol(dtype))
+
+
+def test_kernel_agrees_with_model_decode_math():
+    """Kernel output == models.attention.decode_attention (the compiled
+    serving path) on the same compressed cache."""
+    from repro.models.attention import decode_attention
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    B, H, Hkv, T, Rk, Rv = 2, 4, 2, 64, 16, 16
+    qc = jax.random.normal(ks[0], (B, H, Rk))
+    kc = jax.random.normal(ks[1], (B, Hkv, T, Rk))
+    vc = jax.random.normal(ks[2], (B, Hkv, T, Rv))
+    pos = 40
+    out_k = kq_decode_attention_op(qc, kc, vc, pos, block_t=16, scale=0.5)
+    valid = jnp.arange(T) <= pos
+    out_m = decode_attention(qc[:, :, None, :], kc, vc, valid, 0.5)
+    np.testing.assert_allclose(np.asarray(out_k),
+                               np.asarray(out_m.reshape(B, H, Rv)),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("B,nh,G,S,hd,n,ck", [
+    (2, 4, 2, 64, 8, 16, 16),
+    (1, 2, 1, 128, 16, 8, 32),
+    (2, 2, 2, 64, 8, 8, 64),
+])
+def test_ssd_kernel_sweep(B, nh, G, S, hd, n, ck, dtype):
+    from repro.kernels.ssd import ssd_chunk_scan_op, ssd_chunk_scan_ref
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    x = jax.random.normal(ks[0], (B, nh, S, hd)).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, nh, S)))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.5)
+    a = (dt * A[None, :, None]).astype(jnp.float32)
+    Bm = jax.random.normal(ks[3], (B, G, S, n)).astype(dtype)
+    Cm = jax.random.normal(ks[4], (B, G, S, n)).astype(dtype)
+    out = ssd_chunk_scan_op(x, a, dt.astype(jnp.float32), Bm, Cm,
+                            chunk=ck)
+    ref = ssd_chunk_scan_ref(x, a, dt, Bm, Cm)
+    tol_ = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol_)

@@ -1,0 +1,73 @@
+"""Losses, optimizers, schedule unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import TrainConfig
+from repro.optim import adamw, adafactor
+from repro.optim.schedule import learning_rate
+from repro.train.losses import IGNORE, cross_entropy
+
+
+def test_cross_entropy_matches_manual():
+    logits = jnp.asarray(np.random.default_rng(0).normal(
+        size=(2, 4, 8)), jnp.float32)
+    labels = jnp.asarray([[1, 2, 3, IGNORE], [0, IGNORE, 5, 7]])
+    loss, m = cross_entropy(logits, labels)
+    lp = jax.nn.log_softmax(np.asarray(logits), axis=-1)
+    vals = []
+    for b in range(2):
+        for t in range(4):
+            l = int(labels[b, t])
+            if l != IGNORE:
+                vals.append(-lp[b, t, l])
+    assert np.isclose(float(loss), np.mean(vals), rtol=1e-5)
+    assert float(m["tokens"]) == len(vals)
+
+
+def test_adamw_first_step_matches_reference():
+    tc = TrainConfig(learning_rate=0.1, weight_decay=0.0, grad_clip=1e9,
+                     beta1=0.9, beta2=0.999)
+    p = {"wq": jnp.asarray([1.0, -2.0])}
+    g = {"wq": jnp.asarray([0.5, 0.5])}
+    st = adamw.init_state(p, tc)
+    p2, st2, _ = adamw.apply_updates(p, g, st, tc, 0.1)
+    # bias-corrected first step: update = g/(|g|+eps) = sign(g)
+    np.testing.assert_allclose(np.asarray(p2["wq"]),
+                               [1.0 - 0.1, -2.0 - 0.1], rtol=1e-4)
+    assert int(st2["step"]) == 1
+
+
+def test_adamw_weight_decay_mask():
+    tc = TrainConfig(learning_rate=0.1, weight_decay=0.5, grad_clip=1e9)
+    p = {"wq": jnp.asarray([1.0]), "ln1": jnp.asarray([1.0])}
+    g = {"wq": jnp.asarray([0.0]), "ln1": jnp.asarray([0.0])}
+    st = adamw.init_state(p, tc)
+    p2, _, _ = adamw.apply_updates(p, g, st, tc, 0.1)
+    assert float(p2["wq"][0]) < 1.0           # decayed
+    assert float(p2["ln1"][0]) == 1.0          # norm gain exempt
+
+
+def test_adafactor_factored_state_shapes():
+    tc = TrainConfig(optimizer="adafactor")
+    p = {"w": jnp.zeros((8, 16)), "b": jnp.zeros((8,))}
+    st = adafactor.init_state(p, tc)
+    assert st["slots"]["w"]["vr"].shape == (8,)
+    assert st["slots"]["w"]["vc"].shape == (16,)
+    assert "v" in st["slots"]["b"]
+
+
+def test_grad_clip():
+    g = {"w": jnp.asarray([3.0, 4.0])}
+    clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+    assert np.isclose(float(norm), 5.0)
+    assert np.isclose(float(jnp.linalg.norm(clipped["w"])), 1.0)
+
+
+def test_schedule_warmup_and_decay():
+    tc = TrainConfig(learning_rate=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(learning_rate(tc, jnp.int32(s))) for s in
+           (0, 5, 10, 50, 100)]
+    assert lrs[0] < lrs[1] < lrs[2]            # warmup
+    assert lrs[2] >= lrs[3] >= lrs[4]          # decay
+    assert lrs[4] >= 0.099                     # floor at 10%

@@ -1,0 +1,138 @@
+"""Closed-form solver tests against the paper's theorems (Thm 2/3/4/5)."""
+import numpy as np
+import pytest
+
+from repro.core.projections import (Factors, key_projection_from_caches,
+                                    kq_singular_values, solve_kq_svd,
+                                    value_projection_from_caches)
+from repro.core.theory import (ksvd_error, opt_error, score_error,
+                               thm3_gap)
+
+
+def low_rank_ish(rng, T, d, decay=3.0):
+    return rng.normal(size=(T, d)) @ np.diag(
+        np.exp(-decay * np.arange(d) / d))
+
+
+@pytest.fixture
+def kq(rng):
+    T, d = 256, 32
+    return low_rank_ish(rng, T, d), rng.normal(size=(T, d))
+
+
+def test_thm2_matches_bruteforce_svd(kq):
+    K, Q = kq
+    for R in (2, 8, 16):
+        pk = key_projection_from_caches("kqsvd", K, Q, R)
+        err = score_error(K, Q, pk)
+        s = np.linalg.svd(K @ Q.T, compute_uv=False)
+        assert np.isclose(err, np.sum(s[R:] ** 2), rtol=1e-8)
+
+
+def test_kqsvd_is_optimal_among_methods(kq):
+    K, Q = kq
+    for R in (4, 8, 16):
+        errs = {m: score_error(K, Q,
+                               key_projection_from_caches(m, K, Q, R))
+                for m in ("kqsvd", "ksvd", "eigen")}
+        assert errs["kqsvd"] <= errs["ksvd"] + 1e-9
+        assert errs["kqsvd"] <= errs["eigen"] + 1e-9
+
+
+def test_thm3_identity_and_nonnegative_gap(kq):
+    K, Q = kq
+    for R in (4, 12):
+        g = thm3_gap(K, Q, R)
+        assert np.isclose(g["lhs"], g["rhs"], rtol=1e-6, atol=1e-8)
+        assert g["lhs"] >= -1e-8
+
+
+def test_thm4_eigen_degenerates_to_ksvd(kq):
+    """beta -> inf: Eigen's subspace converges to K-SVD's."""
+    K, Q = kq
+    R = 8
+    e_ksvd = ksvd_error(K, Q, R)
+    gaps = []
+    for beta in (1.0, 10.0, 100.0, 1000.0):
+        pe = key_projection_from_caches("eigen", K * beta, Q / beta, R)
+        # rescaling leaves K Q^T unchanged; evaluate on original K, Q
+        err = score_error(K * beta, Q / beta, pe)
+        gaps.append(abs(err - e_ksvd))
+    assert gaps[-1] < gaps[0]
+    assert gaps[-1] / max(e_ksvd, 1e-12) < 1e-3
+
+
+def test_kqsvd_invariant_to_rescaling(kq):
+    K, Q = kq
+    R = 8
+    base = score_error(K, Q, key_projection_from_caches("kqsvd", K, Q, R))
+    for beta in (0.1, 10.0, 1000.0):
+        p = key_projection_from_caches("kqsvd", K * beta, Q / beta, R)
+        err = score_error(K * beta, Q / beta, p)
+        assert np.isclose(err, base, rtol=1e-6)
+
+
+def test_thm5_gqa_stacking(rng):
+    """Stacked-queries solution is optimal for the group objective."""
+    T, d, R, m = 128, 16, 5, 4
+    K = low_rank_ish(rng, T, d)
+    Qs = [rng.normal(size=(T, d)) for _ in range(m)]
+    Qstack = np.concatenate(Qs, axis=0)
+    p = key_projection_from_caches("kqsvd", K, Qstack, R)
+    group_err = sum(score_error(K, Qi, p) for Qi in Qs)
+    assert np.isclose(group_err, score_error(K, Qstack, p), rtol=1e-9)
+    s = np.linalg.svd(K @ Qstack.T, compute_uv=False)
+    assert np.isclose(group_err, np.sum(s[R:] ** 2), rtol=1e-7)
+
+
+def test_gram_path_equals_exact_path(kq):
+    K, Q = kq
+    for method in ("kqsvd", "ksvd", "eigen"):
+        pg = key_projection_from_caches(method, K, Q, 8, use_gram=True)
+        pe = key_projection_from_caches(method, K, Q, 8, use_gram=False)
+        assert np.isclose(score_error(K, Q, pg), score_error(K, Q, pe),
+                          rtol=1e-6)
+
+
+def test_value_output_optimality(rng):
+    T, d, D, R = 200, 16, 48, 6
+    V = low_rank_ish(rng, T, d)
+    W = rng.normal(size=(d, D))
+    pv = value_projection_from_caches("kqsvd", V, W, R)
+    err = np.linalg.norm((V @ pv.A) @ pv.C - V @ W, "fro") ** 2
+    s = np.linalg.svd(V @ W, compute_uv=False)
+    assert np.isclose(err, np.sum(s[R:] ** 2), rtol=1e-7)
+    pb = value_projection_from_caches("ksvd", V, W, R)
+    errb = np.linalg.norm((V @ pb.A) @ pb.C - V @ W, "fro") ** 2
+    assert err <= errb + 1e-9
+
+
+def test_efficient_kq_singular_values(rng):
+    K = low_rank_ish(rng, 100, 12)
+    Q = rng.normal(size=(80, 12))
+    s_fast = kq_singular_values(Factors.from_matrix(K),
+                                Factors.from_matrix(Q))
+    s_true = np.linalg.svd(K @ Q.T, compute_uv=False)
+    np.testing.assert_allclose(s_fast, s_true[: len(s_fast)], rtol=1e-8,
+                               atol=1e-10)
+
+
+def test_thm1_upper_bound_holds(rng):
+    """Thm 1: the output-error bound dominates the actual error
+    (single-head instance, spectral norm)."""
+    from repro.core.theory import mha_outputs, thm1_bound
+    T, d, D, R = 64, 16, 24, 6
+    K = low_rank_ish(rng, T, d)
+    Q = rng.normal(size=(T, d))
+    V = low_rank_ish(rng, T, d)
+    W = rng.normal(size=(d, D))
+    kp = key_projection_from_caches("kqsvd", K, Q, R)
+    vp = value_projection_from_caches("kqsvd", V, W, R)
+    o = mha_outputs(K, Q, V, W, kp, vp)
+    actual = np.linalg.norm(o["out"] - o["out_approx"], 2)
+    K_approx = K @ kp.A @ kp.B.T
+    # the value path approximates V W directly; bound it via an effective
+    # V_tilde = V A C W^+ (pseudo-inverse pullback)
+    V_approx = (V @ vp.A) @ vp.C @ np.linalg.pinv(W)
+    bound = thm1_bound(K, Q, V, W, K_approx, V_approx)
+    assert actual <= bound + 1e-8, (actual, bound)

@@ -1,0 +1,60 @@
+"""Roofline analytics: packed pairs, useful bytes, flops model, terms."""
+import numpy as np
+
+from repro.config import SHAPES
+from repro.configs import get_config
+from repro.roofline.analysis import (Roofline, model_flops_for,
+                                     packed_pairs, useful_bytes_for)
+
+
+def test_packed_pairs_counts():
+    assert packed_pairs(4096, 512) == 36          # 8 blocks -> 8*9/2
+    assert packed_pairs(32768, 512) == 2080       # 64 blocks
+    assert packed_pairs(512, 512) == 1
+    # window restricts the band
+    assert packed_pairs(4096, 512, window=512) < 36
+
+
+def test_model_flops_train_matches_6nd():
+    cfg = get_config("deepseek-67b")
+    sh = SHAPES["train_4k"]
+    f = model_flops_for(cfg, sh, "baseline")
+    assert abs(f - 6 * cfg.active_param_count() * sh.tokens) / f < 1e-6
+
+
+def test_decode_flops_shrink_with_compression():
+    cfg = get_config("deepseek-67b")
+    sh = SHAPES["decode_32k"]
+    base = model_flops_for(cfg, sh, "baseline")
+    comp = model_flops_for(cfg, sh, "kqsvd")
+    assert comp < base
+
+
+def test_useful_bytes_orderings():
+    cfg = get_config("deepseek-67b")
+    sh = SHAPES["decode_32k"]
+    full = useful_bytes_for(cfg, sh, "baseline")
+    kq = useful_bytes_for(cfg, sh, "kqsvd")
+    i8 = useful_bytes_for(cfg, sh, "kqsvd_int8")
+    assert i8 < kq < full
+    # cache dominates params for this cell
+    assert full > cfg.active_param_count() * 2
+
+
+def test_swa_bounds_cache_bytes():
+    cfg = get_config("h2o-danube-1.8b")             # window 4096
+    long = useful_bytes_for(cfg, SHAPES["long_500k"], "baseline")
+    short = useful_bytes_for(cfg, SHAPES["decode_32k"], "baseline")
+    # long_500k has B=1 vs decode_32k B=128, both capped at window 4096
+    assert long < short
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(arch="x", shape="train_4k", mesh="m", variant="baseline",
+                 n_devices=256, hlo_flops=1e18, hlo_bytes=1e15,
+                 collective_wire_bytes_per_dev=1e9, model_flops=5e17,
+                 useful_bytes=5e14).finalize()
+    assert r.t_compute > 0 and r.t_memory > 0 and r.t_collective > 0
+    assert r.bottleneck in ("compute", "memory", "collective")
+    assert 0 < r.useful_flops_frac <= 1
+    assert 0 < r.roofline_frac_projected <= 1.0 + 1e-9

@@ -1,0 +1,88 @@
+"""Hypothesis property tests for the system's core invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.projections import key_projection_from_caches
+from repro.core.svd import energy_rank, gram, gram_factors, right_factors
+from repro.core.theory import ksvd_error, opt_error, score_error
+
+sizes = st.tuples(st.integers(20, 80), st.integers(4, 16),
+                  st.integers(1, 8))
+
+
+def _mats(T, d, seed):
+    rng = np.random.default_rng(seed)
+    K = rng.normal(size=(T, d)) @ np.diag(
+        np.exp(-2.0 * np.arange(d) / d))
+    Q = rng.normal(size=(T, d))
+    return K, Q
+
+
+@settings(max_examples=25, deadline=None)
+@given(sizes, st.integers(0, 2**31 - 1))
+def test_optimality_ordering(size, seed):
+    T, d, R = size
+    R = min(R, d - 1) or 1
+    K, Q = _mats(T, d, seed)
+    opt = opt_error(K, Q, R)
+    for m in ("ksvd", "eigen"):
+        err = score_error(K, Q, key_projection_from_caches(m, K, Q, R))
+        assert err >= opt - 1e-6 * max(1.0, opt)
+    ekq = score_error(K, Q, key_projection_from_caches("kqsvd", K, Q, R))
+    assert np.isclose(ekq, opt, rtol=1e-6, atol=1e-8)
+
+
+@settings(max_examples=25, deadline=None)
+@given(sizes, st.floats(0.01, 100.0), st.integers(0, 2**31 - 1))
+def test_scale_invariance(size, beta, seed):
+    T, d, R = size
+    R = min(R, d - 1) or 1
+    K, Q = _mats(T, d, seed)
+    e1 = score_error(K, Q, key_projection_from_caches("kqsvd", K, Q, R))
+    e2 = score_error(K * beta, Q / beta,
+                     key_projection_from_caches("kqsvd", K * beta,
+                                                Q / beta, R))
+    assert np.isclose(e1, e2, rtol=1e-5, atol=1e-8)
+
+
+@settings(max_examples=25, deadline=None)
+@given(sizes, st.integers(0, 2**31 - 1))
+def test_thm3_gap_nonnegative(size, seed):
+    T, d, R = size
+    R = min(R, d - 1) or 1
+    K, Q = _mats(T, d, seed)
+    gap = ksvd_error(K, Q, R) - opt_error(K, Q, R)
+    assert gap >= -1e-6 * max(1.0, opt_error(K, Q, R))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 64), st.floats(0.001, 0.9),
+       st.integers(0, 2**31 - 1))
+def test_energy_rank_properties(d, eps, seed):
+    rng = np.random.default_rng(seed)
+    sigma = np.sort(np.abs(rng.normal(size=d)))[::-1]
+    R = energy_rank(sigma, eps)
+    assert 1 <= R <= d
+    s2 = sigma ** 2
+    assert s2[:R].sum() >= (1 - eps) * s2.sum() - 1e-12
+    if R > 1:
+        assert s2[: R - 1].sum() < (1 - eps) * s2.sum() + 1e-12
+    # monotone: smaller eps -> rank at least as large
+    assert energy_rank(sigma, eps / 2) >= R
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(10, 60), st.integers(3, 12),
+       st.integers(0, 2**31 - 1))
+def test_gram_factors_match_svd(T, d, seed):
+    rng = np.random.default_rng(seed)
+    M = rng.normal(size=(T, d))
+    Vg, sg = gram_factors(gram(M))
+    Ve, se = right_factors(M)
+    np.testing.assert_allclose(sg[: len(se)], se, rtol=1e-6, atol=1e-8)
+    # compare projectors (signs/rotations of V may differ)
+    Pg = Vg[:, :3] @ Vg[:, :3].T
+    Pe = Ve[:, :3] @ Ve[:, :3].T
+    gap = se[2] - se[3] if len(se) > 3 else 1.0
+    if gap > 1e-3 * se[0]:                     # well-separated subspace
+        np.testing.assert_allclose(Pg, Pe, atol=1e-5 / max(gap, 1e-3))

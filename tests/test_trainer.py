@@ -1,0 +1,74 @@
+"""Trainer: convergence, checkpoint/restart fault tolerance, straggler
+detection, preemption save."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.config import TrainConfig
+from repro.configs import get_config
+from repro.data import DataConfig, batches
+from repro.train import Trainer
+
+
+def small():
+    return get_config("smollm-360m").reduced()
+
+
+def data(cfg, bs=4):
+    return batches(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                              batch_size=bs))
+
+
+def test_loss_decreases():
+    tc = TrainConfig(learning_rate=1e-2, warmup_steps=2, total_steps=25,
+                     checkpoint_every=0)
+    rep = Trainer(small(), tc).run(data(small()), 25)
+    assert rep.steps_done == 25
+    assert rep.losses[-1] < rep.losses[0]
+
+
+def test_failure_injection_retries_from_checkpoint(tmp_path):
+    tc = TrainConfig(learning_rate=1e-3, warmup_steps=1, total_steps=20,
+                     checkpoint_every=2, keep_checkpoints=2)
+    crashes = {"n": 0}
+
+    def failure_hook(step):
+        if step == 5 and crashes["n"] == 0:
+            crashes["n"] += 1
+            raise RuntimeError("injected node failure")
+
+    tr = Trainer(small(), tc, ckpt_dir=str(tmp_path),
+                 failure_hook=failure_hook)
+    rep = tr.run(data(small()), 8)
+    assert crashes["n"] == 1
+    assert rep.retries == 1
+    assert rep.steps_done == 8
+    assert np.isfinite(rep.final_loss)
+
+
+def test_resume_from_checkpoint_continues_step(tmp_path):
+    tc = TrainConfig(learning_rate=1e-3, warmup_steps=1, total_steps=20,
+                     checkpoint_every=2)
+    tr = Trainer(small(), tc, ckpt_dir=str(tmp_path))
+    tr.run(data(small()), 4)
+    tr2 = Trainer(small(), tc, ckpt_dir=str(tmp_path))
+    state = tr2.resume_or_init()
+    assert state["step"] == 4
+    rep = tr2.run(data(small()), 6, state=state)
+    assert rep.steps_done == 6
+
+
+def test_straggler_detection():
+    tc = TrainConfig(learning_rate=1e-3, warmup_steps=1, total_steps=20,
+                     checkpoint_every=0)
+    slow = {8}
+
+    def failure_hook(step):          # reuse hook as a delay injector
+        if step in slow:
+            time.sleep(1.0)
+
+    tr = Trainer(small(), tc, failure_hook=failure_hook,
+                 straggler_factor=3.0)
+    rep = tr.run(data(small()), 12)
+    assert rep.straggler_steps >= 1
