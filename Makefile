@@ -1,0 +1,18 @@
+# Single entry point for CI / pre-merge verification:
+#   make verify   — tier-1 test suite + quick decode benchmark smoke
+# (ROADMAP.md "Tier-1 verify" is the pytest line below, verbatim.)
+
+PY := PYTHONPATH=src python
+
+.PHONY: verify test bench-quick bench
+
+verify: test bench-quick
+
+test:
+	$(PY) -m pytest -x -q
+
+bench-quick:
+	$(PY) -m benchmarks.run --quick
+
+bench:
+	$(PY) -m benchmarks.run

@@ -1,12 +1,18 @@
-"""Decode-step cost: full vs KQ-SVD-compressed cache.
+"""Decode-step cost: full vs KQ-SVD-compressed cache, fixed vs
+variable-length.
 
 Wall time on this CPU container is not the scored metric (TPU is the
-target); the derived columns are the cache bytes/token and the measured
-lax decode-step latency ratio, plus the kernel's analytic HBM traffic.
+target); the derived columns are the cache bytes/token, the analytic HBM
+traffic of each variant (computed from the *actual* cache dtype widths —
+2 bytes for bf16, 1 byte for the int8 path plus its scales) and the
+measured step-latency ratios.  The ``decode_varlen_*`` rows drive the
+lengths-aware kernel at several occupancy levels of the same allocated
+cache: the time grid is bounded by the actual max length, so the cost of
+a decode step tracks ``max(lengths)``, not ``max_seq_len``
+(DESIGN.md §decode).
 """
 from __future__ import annotations
 
-import time
 from typing import List
 
 import jax
@@ -15,20 +21,32 @@ import numpy as np
 
 from benchmarks.common import Row, timed
 from repro.core.compressed import cache_footprint
-from repro.models.attention import decode_attention
+from repro.kernels.kq_decode import kq_decode_attention_op
+from repro.models.attention import (decode_attention,
+                                    int8_decode_attention, quantize_int8)
+
+
+def _hbm_bytes(*arrays) -> int:
+    """Analytic HBM traffic of one decode step: every cache byte read
+    once, at its real dtype width."""
+    return int(sum(a.size * a.dtype.itemsize for a in arrays))
 
 
 def run(B: int = 4, Hkv: int = 8, m: int = 8, T: int = 4096,
-        d: int = 128, R: int = 64) -> List[Row]:
+        d: int = 128, R: int = 64, quick: bool = False) -> List[Row]:
+    if quick:
+        B, Hkv, m, T, d, R = 2, 2, 2, 512, 64, 32
     H = Hkv * m
+    dt = jnp.bfloat16
     ks = jax.random.split(jax.random.PRNGKey(0), 4)
-    q_full = jax.random.normal(ks[0], (B, H, 1, d))
-    k_full = jax.random.normal(ks[1], (B, Hkv, T, d))
-    v_full = jax.random.normal(ks[2], (B, Hkv, T, d))
+    q_full = jax.random.normal(ks[0], (B, H, 1, d), dt)
+    k_full = jax.random.normal(ks[1], (B, Hkv, T, d), dt)
+    v_full = jax.random.normal(ks[2], (B, Hkv, T, d), dt)
     valid = jnp.ones((T,), bool)
+    scale = 0.1
 
     fn_full = jax.jit(lambda q, k, v: decode_attention(q, k, v, valid,
-                                                       0.1))
+                                                       scale))
     _, us_full = timed(fn_full, q_full, k_full, v_full)
 
     q_c = q_full[..., :R]
@@ -36,21 +54,55 @@ def run(B: int = 4, Hkv: int = 8, m: int = 8, T: int = 4096,
     v_c = v_full[..., :R]
     _, us_comp = timed(fn_full, q_c, k_c, v_c)
 
+    k8, kscale = quantize_int8(k_c)
+    v8, vscale = quantize_int8(v_c)
+    qg8 = q_c.reshape(B, Hkv, m, R)
+    fn_int8 = jax.jit(lambda q, k, v, ksc, vsc: int8_decode_attention(
+        q, k, v, ksc, vsc, valid, scale))
+    _, us_int8 = timed(fn_int8, qg8, k8, v8, kscale, vscale)
+
     fp = cache_footprint(Hkv, d, R, R)
+    hbm_full = _hbm_bytes(k_full, v_full)
+    hbm_comp = _hbm_bytes(k_c, v_c)
+    hbm_int8 = _hbm_bytes(k8, v8, kscale, vscale)
     print("\n== decode_costs: full vs compressed decode attention ==")
-    print(f"T={T} d={d} R={R}: lax step {us_full:.0f}us -> {us_comp:.0f}us "
-          f"({us_full/us_comp:.2f}x), cache bytes/token "
-          f"{fp.full_bytes} -> {fp.compressed_bytes} ({1/fp.ratio:.2f}x)")
-    hbm_full = B * Hkv * T * 2 * d * 2
-    hbm_comp = B * Hkv * T * 2 * R * 2
-    return [
+    print(f"T={T} d={d} R={R}: lax step {us_full:.0f}us -> {us_comp:.0f}us"
+          f" ({us_full/us_comp:.2f}x), int8 {us_int8:.0f}us; hbm/step "
+          f"{hbm_full} -> {hbm_comp} -> {hbm_int8} B")
+    rows: List[Row] = [
         ("decode_full_cache", us_full,
          f"hbm_bytes={hbm_full};bytes_per_tok={fp.full_bytes}"),
         ("decode_kqsvd_cache", us_comp,
          f"hbm_bytes={hbm_comp};bytes_per_tok={fp.compressed_bytes}"),
+        ("decode_kqsvd_int8", us_int8,
+         f"hbm_bytes={hbm_int8};bytes_per_tok="
+         f"{hbm_int8 // (B * T)}"),
         ("decode_speedup", us_full / us_comp,
          f"cache_reduction={1/fp.ratio:.3f}x"),
     ]
+
+    # -- variable-length decode: cost tracks actual max length, not the
+    # allocated max_seq_len (the kernel's time grid is ceil(L/bt)).
+    # Small (B, Hkv) slice: interpret-mode grids are walked per program
+    # on CPU, and the scaling story lives in the time grid, not the size.
+    bt = 128 if quick else 256
+    Bv, Gv = min(B, 2), min(Hkv, 4)
+    qc2 = jax.random.normal(ks[3], (Bv, Gv * m, R), dt)
+    k_v, v_v = k_c[:Bv, :Gv], v_c[:Bv, :Gv]
+    for frac, tag in ((1.0, "full"), (0.5, "half"), (0.125, "eighth")):
+        L = max(bt, int(T * frac))
+        lens = jnp.linspace(L // 2, L, Bv).astype(jnp.int32)
+        _, us = timed(kq_decode_attention_op, qc2, k_v, v_v, lens,
+                      block_t=bt, scale=scale, max_len=L)
+        grid_nt = -(-L // bt)
+        touched = int(np.sum(np.ceil(np.asarray(lens) / bt))) * bt \
+            * Gv * 2 * R * k_c.dtype.itemsize
+        rows.append((f"decode_varlen_{tag}", us,
+                     f"max_len={L};grid_nt={grid_nt};alloc_T={T};"
+                     f"hbm_bytes={touched}"))
+        print(f"varlen[{tag}]: max_len={L} grid_nt={grid_nt} "
+              f"{us:.0f}us hbm={touched}B")
+    return rows
 
 
 if __name__ == "__main__":

@@ -1,20 +1,28 @@
 """Benchmark orchestrator.  One module per paper table/figure; prints the
 ``name,us_per_call,derived`` CSV contract plus each module's own report.
+Decode rows are additionally written to ``BENCH_decode.json`` at the repo
+root so the perf trajectory is tracked across PRs.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig1,fig2,...]
+    PYTHONPATH=src python -m benchmarks.run --quick   # CI smoke target
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import traceback
 
 from benchmarks import (calibration_timing, decode_costs, fig1_methods,
                         fig2_unbalance, roofline, table_rank_energy)
 
+BENCH_DECODE_PATH = os.path.join(os.path.dirname(__file__), "..",
+                                 "BENCH_decode.json")
+
+
 def _roofline_both():
     rows = roofline.run("pod_16x16")
-    import os
     if os.path.isdir(os.path.join(roofline.ART, "multipod_2x16x16")):
         rows += roofline.run("multipod_2x16x16")
     return rows
@@ -30,23 +38,46 @@ MODULES = {
 }
 
 
+def _write_decode_json(rows, quick: bool) -> None:
+    decode_rows = [{"name": n, "us_per_call": us, "derived": derived}
+                   for n, us, derived in rows if n.startswith("decode")]
+    if not decode_rows:
+        return
+    # quick (reduced-shape) and full runs are not comparable: stamp the
+    # mode so cross-PR diffs never mix them silently
+    payload = {"mode": "quick" if quick else "full", "rows": decode_rows}
+    with open(BENCH_DECODE_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {len(decode_rows)} {payload['mode']} rows -> "
+          f"{os.path.normpath(BENCH_DECODE_PATH)}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(MODULES))
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke target: reduced decode_costs only")
     args = ap.parse_args()
-    names = (args.only.split(",") if args.only else list(MODULES))
+    if args.quick:
+        names = ["decode_costs"]
+    else:
+        names = (args.only.split(",") if args.only else list(MODULES))
     rows = []
     failed = []
     for name in names:
         try:
-            rows.extend(MODULES[name]() or [])
+            if name == "decode_costs":
+                rows.extend(decode_costs.run(quick=args.quick) or [])
+            else:
+                rows.extend(MODULES[name]() or [])
         except Exception as e:       # keep the suite running
             traceback.print_exc()
             failed.append((name, str(e)))
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    _write_decode_json(rows, args.quick)
     if failed:
         print(f"\nFAILED benchmarks: {failed}", file=sys.stderr)
         sys.exit(1)

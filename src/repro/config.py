@@ -361,6 +361,8 @@ class ServeConfig:
     max_batch: int = 8
     temperature: float = 0.0
     prefill_chunk: int = 512
+    decode_chunk: int = 8           # tokens per fused on-device decode scan
+    eos_token: Optional[int] = None  # stop generation on this token id
     seed: int = 0
 
 

@@ -11,3 +11,12 @@ wrapper) and ref.py (pure-jnp oracle); tests sweep shapes/dtypes in
 interpret mode.  The lax blockwise path in repro.models.attention is the
 dry-run/compile twin (Pallas TPU kernels do not lower on the CPU backend).
 """
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Kernel-wrapper default for ``interpret``: Mosaic-compile on TPU,
+    interpreter everywhere else (CPU/GPU backends cannot lower TPU
+    Pallas kernels)."""
+    return jax.default_backend() != "tpu"

@@ -1,4 +1,11 @@
-"""jit'd public wrapper for the compressed-decode kernel."""
+"""jit'd public wrapper for the compressed-decode kernel.
+
+``interpret=None`` (the default) resolves from the backend at trace
+time: real Mosaic compilation on TPU, interpreter everywhere else — TPU
+runs compile the real kernel with no call-site changes.  Pass a static
+``max_len`` bound on ``max(lengths)`` to keep the time grid
+length-bounded under jit (lengths is traced there).
+"""
 from __future__ import annotations
 
 import functools
@@ -9,8 +16,10 @@ from repro.kernels.kq_decode.kq_decode import kq_decode_attention
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("block_t", "scale", "interpret"))
-def kq_decode_attention_op(qc, kc, vc, pos, *, block_t=256, scale=1.0,
-                           interpret=True):
-    return kq_decode_attention(qc, kc, vc, pos, block_t=block_t,
-                               scale=scale, interpret=interpret)
+                   static_argnames=("block_t", "scale", "interpret",
+                                    "max_len"))
+def kq_decode_attention_op(qc, kc, vc, lengths, *, block_t=256, scale=1.0,
+                           interpret=None, max_len=None):
+    return kq_decode_attention(qc, kc, vc, lengths, block_t=block_t,
+                               scale=scale, interpret=interpret,
+                               max_len=max_len)

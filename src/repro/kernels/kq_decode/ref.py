@@ -7,16 +7,23 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
-def kq_decode_attention_ref(qc, kc, vc, pos, *, scale: float = 1.0):
-    """qc: (B,H,Rk); kc: (B,Hkv,T,Rk); vc: (B,Hkv,T,Rv) -> (B,H,Rv)."""
+def kq_decode_attention_ref(qc, kc, vc, lengths, *, scale: float = 1.0):
+    """qc: (B,H,Rk); kc: (B,Hkv,T,Rk); vc: (B,Hkv,T,Rv) -> (B,H,Rv).
+
+    ``lengths``: (B,) per-sequence count of live cache entries (scalar
+    broadcasts); position t of sequence b attends iff t < lengths[b].
+    """
     B, H, Rk = qc.shape
     Hkv, T = kc.shape[1], kc.shape[2]
     m = H // Hkv
+    lengths = jnp.asarray(lengths, jnp.int32)
+    if lengths.ndim == 0:
+        lengths = jnp.broadcast_to(lengths, (B,))
     qg = qc.reshape(B, Hkv, m, Rk)
     s = jnp.einsum("bgmr,bgtr->bgmt", qg, kc,
                    preferred_element_type=jnp.float32) * scale
-    valid = jnp.arange(T) <= pos
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    valid = jnp.arange(T)[None, :] < lengths[:, None]        # (B, T)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     agg = jnp.einsum("bgmt,bgtr->bgmr", p.astype(vc.dtype), vc)
     return agg.reshape(B, H, -1).astype(qc.dtype)

@@ -28,8 +28,12 @@ def main() -> None:
                     choices=["none", "ksvd", "eigen", "kqsvd"])
     ap.add_argument("--epsilon", type=float, default=0.1)
     ap.add_argument("--requests", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=16,
+                    help="max prompt length; requests draw mixed lengths "
+                         "in [4, prompt-len] (continuous batching)")
     ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--decode-chunk", type=int, default=8,
+                    help="tokens per fused on-device decode scan")
     ap.add_argument("--calib-seqs", type=int, default=8)
     ap.add_argument("--calib-len", type=int, default=64)
     args = ap.parse_args()
@@ -55,17 +59,21 @@ def main() -> None:
               f"v={proj.ranks_v}; cache ratio {fp.ratio:.3f}")
 
     sc = ServeConfig(max_seq_len=args.prompt_len + args.max_new_tokens
-                     + 8, max_batch=8)
+                     + 8, max_batch=8, decode_chunk=args.decode_chunk)
     eng = ServingEngine(cfg, params, sc, projections=proj)
     rng = np.random.default_rng(0)
+    lens = rng.integers(min(4, args.prompt_len), args.prompt_len + 1,
+                        args.requests)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab_size,
-                                        args.prompt_len).astype(np.int32),
+                                        int(lens[i])).astype(np.int32),
                     max_new_tokens=args.max_new_tokens)
             for i in range(args.requests)]
     eng.generate(reqs)
     for r in reqs:
-        print(f"req {r.rid}: {r.out_tokens}")
+        note = "  [truncated]" if r.truncated else ""
+        print(f"req {r.rid} (prompt {len(r.prompt):3d}): "
+              f"{r.out_tokens}{note}")
     print(f"capacity gain vs full cache: {eng.capacity_gain():.2f}x")
 
 

@@ -28,9 +28,52 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
+from repro.kernels.kq_decode.kq_decode import kq_decode_attention
 from repro.models.layers import apply_rope, init_dense
 
 NEG_INF = -1e30
+
+
+def batched_positions(pos, batch: int) -> jnp.ndarray:
+    """Normalize a decode position argument to (B,) int32.
+
+    Scalars broadcast (the legacy lock-step contract); (B,) arrays pass
+    through — every decode path downstream assumes per-sequence
+    positions (DESIGN.md §decode)."""
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (batch,))
+    assert pos.shape == (batch,), (pos.shape, batch)
+    return pos
+
+
+def scatter_time(cache: jnp.ndarray, val: jnp.ndarray, slot: jnp.ndarray,
+                 axis: int = 1) -> jnp.ndarray:
+    """Write one new time-slot per sequence.
+
+    cache: (B, ...); val: same with the time axis of size 1; slot: (B,)
+    per-sequence destination index; ``axis`` is the time axis *within a
+    batch element* (1 for (B, Hkv, T, R) caches, 0 for (B, T, R))."""
+    return jax.vmap(
+        lambda c, u, s: jax.lax.dynamic_update_slice_in_dim(
+            c, u.astype(c.dtype), s, axis))(cache, val, slot)
+
+
+def int8_decode_attention(qg, k8, v8, kscale, vscale, valid, scale):
+    """Dequantize-on-the-fly int8 decode: HBM reads stay int8.
+
+    qg: (B, Hkv, m, R); k8/v8: (B, Hkv, T, R) int8; k/vscale: (B, Hkv, T);
+    valid: (T,) or (B, T).  Returns (B, Hkv, m, R) group aggregates."""
+    s = jnp.einsum("bgmr,bgtr->bgmt", qg.astype(jnp.float32),
+                   k8.astype(jnp.float32)) * scale
+    s = s * kscale.astype(jnp.float32)[:, :, None, :]
+    vm = valid[None, None, None, :] if valid.ndim == 1 \
+        else valid[:, None, None, :]
+    s = jnp.where(vm, s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    pv = prob * vscale.astype(jnp.float32)[:, :, None, :]
+    return jnp.einsum("bgmt,bgtr->bgmr", pv.astype(jnp.bfloat16),
+                      v8.astype(jnp.bfloat16))
 
 
 # ---------------------------------------------------------------------------
@@ -338,7 +381,7 @@ def make_attn_cache(cfg: ModelConfig, batch: int, max_len: int,
         cache = {"k": jnp.zeros((batch, Hkv, T, cfg.d_head), dtype),
                  "v": jnp.zeros((batch, Hkv, T, cfg.d_head), dtype)}
     if W:
-        cache["slot_pos"] = jnp.full((T,), -1, jnp.int32)
+        cache["slot_pos"] = jnp.full((batch, T), -1, jnp.int32)
     return cache
 
 
@@ -381,7 +424,7 @@ def attn_prefill(p, x, cfg: ModelConfig, max_len: int,
         for name, val in updates:
             cache[name] = cache[name].at[:, :, slots].set(
                 val.astype(cache[name].dtype))
-        cache["slot_pos"] = cache["slot_pos"].at[slots].set(kept_pos)
+        cache["slot_pos"] = cache["slot_pos"].at[:, slots].set(kept_pos)
     else:
         for name, val in updates:
             cache[name] = jax.lax.dynamic_update_slice_in_dim(
@@ -391,15 +434,16 @@ def attn_prefill(p, x, cfg: ModelConfig, max_len: int,
 
 def attn_decode(p, x, cache: Dict, pos, cfg: ModelConfig,
                 proj: Optional[Dict] = None):
-    """One-token decode.  x: (B,1,D); pos: scalar int32 (current index)."""
+    """One-token decode.  x: (B,1,D); pos: (B,) per-sequence index of the
+    new token (a scalar broadcasts — legacy lock-step batches)."""
     B = x.shape[0]
     dh = cfg.d_head
     scale = 1.0 / math.sqrt(dh)
-    positions = jnp.full((1,), pos, jnp.int32)
-    q, k_new, v_new = _qkv(p, x, cfg, positions)            # S=1
+    pos = batched_positions(pos, B)
+    q, k_new, v_new = _qkv(p, x, cfg, pos[:, None, None])   # S=1
     W = cfg.sliding_window or 0
     T = (cache["kc"] if proj is not None else cache["k"]).shape[2]
-    slot = (pos % W) if W else pos
+    slot = (pos % W) if W else pos                          # (B,)
     if proj is not None:
         k_st = jnp.einsum("bhtd,hdr->bhtr", k_new, proj["a_k"])
         v_st = jnp.einsum("bhtd,hdr->bhtr", v_new, proj["a_v"])
@@ -407,16 +451,14 @@ def attn_decode(p, x, cache: Dict, pos, cfg: ModelConfig,
         if int8:
             k_st, ks_new = quantize_int8(k_st)
             v_st, vs_new = quantize_int8(v_st)
-        kc = jax.lax.dynamic_update_slice_in_dim(
-            cache["kc"], k_st.astype(cache["kc"].dtype), slot, 2)
-        vc = jax.lax.dynamic_update_slice_in_dim(
-            cache["vc"], v_st.astype(cache["vc"].dtype), slot, 2)
+        kc = scatter_time(cache["kc"], k_st, slot)
+        vc = scatter_time(cache["vc"], v_st, slot)
         new_cache = dict(cache, kc=kc, vc=vc)
         if int8:
-            new_cache["kscale"] = jax.lax.dynamic_update_slice_in_dim(
-                cache["kscale"], ks_new.astype(jnp.bfloat16), slot, 2)
-            new_cache["vscale"] = jax.lax.dynamic_update_slice_in_dim(
-                cache["vscale"], vs_new.astype(jnp.bfloat16), slot, 2)
+            new_cache["kscale"] = scatter_time(
+                cache["kscale"], ks_new.astype(jnp.bfloat16), slot)
+            new_cache["vscale"] = scatter_time(
+                cache["vscale"], vs_new.astype(jnp.bfloat16), slot)
         # compress query with the group's B factor
         Hkv = cfg.n_kv_heads
         Hp = padded_heads(cfg)
@@ -427,34 +469,30 @@ def attn_decode(p, x, cache: Dict, pos, cfg: ModelConfig,
         keys, vals = kc, vc
         qq = qc
     else:
-        kk = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k_new.astype(cache["k"].dtype), slot, 2)
-        vv = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], v_new.astype(cache["v"].dtype), slot, 2)
+        kk = scatter_time(cache["k"], k_new, slot)
+        vv = scatter_time(cache["v"], v_new, slot)
         new_cache = dict(cache, k=kk, v=vv)
         keys, vals = kk, vv
         qq = q
     if W:
-        slot_pos = cache["slot_pos"].at[slot].set(pos)
-        new_cache["slot_pos"] = slot_pos
-        valid = (slot_pos >= 0) & (slot_pos > pos - W)
+        slot_pos = cache["slot_pos"].at[jnp.arange(B), slot].set(pos)
+        new_cache["slot_pos"] = slot_pos                    # (B, T)
+        valid = (slot_pos >= 0) & (slot_pos > pos[:, None] - W)
     else:
-        valid = jnp.arange(T) <= pos
+        valid = jnp.arange(T)[None, :] <= pos[:, None]      # (B, T)
     if proj is not None and cfg.cache_quant == "int8":
-        # dequantize on the fly: HBM reads stay int8
         Hkv = cfg.n_kv_heads
         m = padded_heads(cfg) // Hkv
-        qg8 = qq.reshape(B, Hkv, m, -1)
-        s = jnp.einsum("bgmr,bgtr->bgmt", qg8.astype(jnp.float32),
-                       keys.astype(jnp.float32)) * scale
-        s = s * new_cache["kscale"].astype(jnp.float32)[:, :, None, :]
-        vm = valid[None, None, None, :] if valid.ndim == 1 \
-            else valid[:, None, None, :]
-        s = jnp.where(vm, s, NEG_INF)
-        prob = jax.nn.softmax(s, axis=-1)
-        pv = prob * new_cache["vscale"].astype(jnp.float32)[:, :, None, :]
-        agg = jnp.einsum("bgmt,bgtr->bgmr", pv.astype(jnp.bfloat16),
-                         vals.astype(jnp.bfloat16))
+        agg = int8_decode_attention(
+            qq.reshape(B, Hkv, m, -1), keys, vals, new_cache["kscale"],
+            new_cache["vscale"], valid, scale)
+    elif proj is not None and cfg.use_pallas and not W:
+        # TPU runtime hot path: the Pallas kernel streams the compressed
+        # cache with per-sequence lengths (interpret-mode on CPU)
+        Hkv = cfg.n_kv_heads
+        agg = kq_decode_attention(
+            qq.reshape(B, -1, qq.shape[-1]), keys, vals, pos + 1,
+            scale=scale, max_len=T).reshape(B, Hkv, -1, vals.shape[-1])
     else:
         agg = decode_attention(qq, keys, vals, valid, scale)  # (B,Hkv,m,rv)
     if proj is not None:

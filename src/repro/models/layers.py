@@ -43,7 +43,8 @@ def rope_frequencies(d_head: int, theta: float) -> np.ndarray:
 
 def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
                theta: float) -> jnp.ndarray:
-    """x: (..., T, d) with positions (..., T) or (T,)."""
+    """x: (..., T, d) with positions broadcastable to (..., T) — e.g.
+    (T,) for a shared sequence or (B, 1, 1) for per-sequence decode."""
     d = x.shape[-1]
     freqs = jnp.asarray(rope_frequencies(d, theta), dtype=jnp.float32)
     angles = positions.astype(jnp.float32)[..., None] * freqs   # (..., T, d/2)

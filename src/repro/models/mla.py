@@ -26,8 +26,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
-from repro.models.attention import NEG_INF, blockwise_attention
+import functools
+
+from repro.models.attention import (NEG_INF, batched_positions,
+                                    blockwise_attention, scatter_time)
 from repro.models.layers import apply_rope, init_dense
+
+# MLA caches are (B, T, R): the time axis within a batch element is 0
+_scatter_seq = functools.partial(scatter_time, axis=0)
 
 
 def init_mla(key, cfg: ModelConfig, dtype) -> Dict:
@@ -148,45 +154,42 @@ def mla_prefill(p, x, cfg: ModelConfig, max_len: int,
 
 def mla_decode(p, x, cache: Dict, pos, cfg: ModelConfig,
                proj: Optional[Dict] = None):
-    """One-token absorbed-form decode.  x: (B,1,D)."""
+    """One-token absorbed-form decode.  x: (B,1,D); pos: (B,) per-sequence
+    index of the new token (a scalar broadcasts)."""
     m = cfg.mla
     B = x.shape[0]
     H = cfg.n_heads
     scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
-    positions = jnp.full((1,), pos, jnp.int32)
-    q_nope, q_rope, c_new, kr_new = _project(p, x, cfg, positions)
+    pos = batched_positions(pos, B)
+    q_nope, q_rope, c_new, kr_new = _project(p, x, cfg, pos[:, None, None])
     q_abs = jnp.einsum("bhse,lhe->bhl", q_nope[:, :, :1], p["wuk"])
-    kr = jax.lax.dynamic_update_slice_in_dim(
-        cache["kr"], kr_new[:, 0].astype(cache["kr"].dtype), pos, 1)
+    kr = _scatter_seq(cache["kr"], kr_new[:, 0], pos)
     T = kr.shape[1]
-    valid = jnp.arange(T) <= pos
+    valid = jnp.arange(T)[None, :] <= pos[:, None]           # (B, T)
     s_rope = jnp.einsum("bhse,bte->bht", q_rope, kr,
                         preferred_element_type=jnp.float32)
     if proj is not None:
         cc_new = jnp.einsum("bsl,lr->bsr", c_new, proj["a_k"][0])
         ccv_new = jnp.einsum("bsl,lr->bsr", c_new, proj["a_v"][0])
-        cc = jax.lax.dynamic_update_slice_in_dim(
-            cache["cc"], cc_new.astype(cache["cc"].dtype), pos, 1)
-        ccv = jax.lax.dynamic_update_slice_in_dim(
-            cache["ccv"], ccv_new.astype(cache["ccv"].dtype), pos, 1)
+        cc = _scatter_seq(cache["cc"], cc_new, pos)
+        ccv = _scatter_seq(cache["ccv"], ccv_new, pos)
         new_cache = dict(cache, cc=cc, ccv=ccv, kr=kr)
         q_c = jnp.einsum("bhl,lr->bhr", q_abs, proj["b_q"][0])
         s_nope = jnp.einsum("bhr,btr->bht", q_c, cc,
                             preferred_element_type=jnp.float32)
         s = (s_nope + s_rope) * scale
-        s = jnp.where(valid[None, None, :], s, NEG_INF)
+        s = jnp.where(valid[:, None, :], s, NEG_INF)
         prob = jax.nn.softmax(s, axis=-1)
         agg = jnp.einsum("bht,btr->bhr", prob.astype(ccv.dtype), ccv)
         c_v = proj["c_v"][0].reshape(-1, H, cfg.d_model)     # (Rv,H,D)
         y = jnp.einsum("bhr,rhd->bd", agg, c_v)[:, None]
     else:
-        cc = jax.lax.dynamic_update_slice_in_dim(
-            cache["c"], c_new.astype(cache["c"].dtype), pos, 1)
+        cc = _scatter_seq(cache["c"], c_new, pos)
         new_cache = dict(cache, c=cc, kr=kr)
         s_nope = jnp.einsum("bhl,btl->bht", q_abs, cc,
                             preferred_element_type=jnp.float32)
         s = (s_nope + s_rope) * scale
-        s = jnp.where(valid[None, None, :], s, NEG_INF)
+        s = jnp.where(valid[:, None, :], s, NEG_INF)
         prob = jax.nn.softmax(s, axis=-1)
         agg = jnp.einsum("bht,btl->bhl", prob.astype(cc.dtype), cc)
         v = jnp.einsum("bhl,lhe->bhe", agg, p["wuv"])

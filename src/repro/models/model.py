@@ -5,6 +5,7 @@ Public entry points (all pure functions of pytrees, pjit-able):
     train_logits(params, batch)                 -> (logits, aux)
     prefill(params, batch, max_len, proj)       -> (logits, cache)
     decode_step(params, cache, tokens, pos, proj) -> (logits, cache)
+        (pos: per-sequence (B,) positions; scalars broadcast)
     calibrate(params, tokens)                   -> per-attn-layer captures
     group_output_weights(params)                -> stacked W^O per kv group
 
@@ -259,7 +260,9 @@ class LM:
         return logits, cache
 
     def decode_step(self, params, cache, tokens, pos, proj=None):
-        """tokens: (B, 1) int32; pos: scalar index of the new token."""
+        """tokens: (B, 1) int32; pos: per-sequence (B,) index of each new
+        token (a scalar broadcasts — legacy lock-step decode)."""
+        pos = attn_mod.batched_positions(pos, tokens.shape[0])
         x = self._embed(params, {"tokens": tokens})
         x, cache, _, _ = self._run_stack(params, x, "decode", cache=cache,
                                          pos=pos, proj=proj)

@@ -1,11 +1,22 @@
-"""Batched serving engine with full or KQ-SVD-compressed KV cache.
+"""Continuous-batching serving engine with full or KQ-SVD-compressed cache.
 
-A deliberately small continuous-batching core: requests are admitted up to
-``max_batch``, prefilled (left-padded into a shared cache), then decoded in
-lock-step; finished requests free their slots for waiting ones.  The cache
-is allocated once at (max_batch, max_seq_len) — with KQ-SVD compression the
-same HBM budget admits ~d/(R_k+R_v) x more concurrent sequences
-(``capacity_gain``), which is the serving-level payoff of the paper.
+True continuous batching over fixed cache slots (DESIGN.md §decode):
+
+* the batched cache is allocated once at (max_batch, max_seq_len); each
+  request prefills alone at its exact prompt length and is inserted into
+  a free slot — no grouping by prompt length, no draining;
+* decode runs as a fused ``lax.scan`` of ``decode_chunk`` steps entirely
+  on device: sampling, EOS / ``max_new_tokens`` / capacity masking and
+  per-slot position increments all live inside the scan, so the host
+  syncs once per chunk instead of once per token;
+* slots whose request finished are refilled from the pending queue at
+  the next chunk boundary while the other slots keep decoding.
+
+Every sequence carries its own position: the decode stack (and on TPU
+the Pallas kernel) masks per-sequence lengths, so a mixed-length batch
+pays for the cache it occupies, not for ``max_seq_len``.  With KQ-SVD
+compression the same HBM budget admits ~d/(R_k+R_v) x more concurrent
+sequences (``capacity_gain``) — the serving-level payoff of the paper.
 """
 from __future__ import annotations
 
@@ -29,6 +40,7 @@ class Request:
     max_new_tokens: int = 16
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    truncated: bool = False            # hit max_seq_len before max_new_tokens
 
 
 def sample_token(logits: jnp.ndarray, temperature: float, rng) -> jnp.ndarray:
@@ -48,24 +60,90 @@ class ServingEngine:
                      if projections is not None else None)
         self.ranks = ((projections.rank_k, projections.rank_v)
                       if projections is not None else (0, 0))
-        self._decode = jax.jit(self._decode_impl)
         self._prefill = jax.jit(self._prefill_impl)
+        self._insert = jax.jit(self._insert_impl)
+        self._decode_chunk = jax.jit(self._decode_chunk_impl)
         self.rng = jax.random.PRNGKey(sc.seed)
 
     # -- jitted internals ---------------------------------------------------
 
     def _prefill_impl(self, params, proj, tokens):
+        """One request at its exact prompt length -> (logits, slot cache)."""
         batch = {"tokens": tokens}
         if self.proj is not None:
             return self.model.prefill(params, batch, self.sc.max_seq_len,
                                       proj=proj)
         return self.model.prefill(params, batch, self.sc.max_seq_len)
 
-    def _decode_impl(self, params, proj, cache, tokens, pos):
-        if self.proj is not None:
-            return self.model.decode_step(params, cache, tokens, pos,
-                                          proj=proj)
-        return self.model.decode_step(params, cache, tokens, pos)
+    def _insert_impl(self, cache, slot_cache, slot):
+        """Write a single-sequence cache into batch slot ``slot``."""
+        def at_batch0(big, small):
+            return jax.lax.dynamic_update_slice_in_dim(
+                big, small.astype(big.dtype), slot, 0)
+
+        def at_batch1(big, small):          # scanned steps: (n_steps, B, ...)
+            return jax.lax.dynamic_update_slice_in_dim(
+                big, small.astype(big.dtype), slot, 1)
+
+        out = {"prefix": jax.tree.map(at_batch0, cache["prefix"],
+                                      slot_cache["prefix"])}
+        out["steps"] = (jax.tree.map(at_batch1, cache["steps"],
+                                     slot_cache["steps"])
+                        if cache["steps"] is not None else None)
+        return out
+
+    def _decode_chunk_impl(self, params, proj, cache, logits, pos, emitted,
+                           max_new, done, trunc, rng):
+        """Fused ``decode_chunk``-step decode, fully on device.
+
+        logits: (B, V) next-token logits per slot; pos: (B,) index where
+        each slot's next token will be written (== live length); the
+        sampled-token / emit-mask streams come back (N, B)."""
+        T = self.sc.max_seq_len
+        temp = self.sc.temperature
+        eos = self.sc.eos_token
+
+        def decode(cache, tokens, fpos):
+            if self.proj is not None:
+                return self.model.decode_step(params, cache, tokens, fpos,
+                                              proj=proj)
+            return self.model.decode_step(params, cache, tokens, fpos)
+
+        def body(carry, _):
+            logits, cache, pos, emitted, done, trunc, rng = carry
+            rng, sub = jax.random.split(rng)
+            nxt = sample_token(logits, temp, sub).astype(jnp.int32)  # (B,)
+            emit = ~done
+            out_tok = jnp.where(emit, nxt, 0)
+            emitted = emitted + emit.astype(jnp.int32)
+            done = done | (emitted >= max_new)
+            if eos is not None:
+                done = done | (emit & (nxt == eos))
+            # the sampled token was emitted but there is no cache slot
+            # left to decode from it: surface truncation, stop the slot
+            full = ~done & (pos >= T)
+            trunc = trunc | full
+            done = done | full
+            active = ~done
+            feed_pos = jnp.minimum(pos, T - 1)  # done slots: harmless write
+
+            def step(ops):
+                lg, new_cache = decode(ops[0], ops[1][:, None], ops[2])
+                return lg[:, 0], new_cache
+
+            def skip(ops):
+                return logits, ops[0]
+
+            new_logits, cache = jax.lax.cond(
+                jnp.any(active), step, skip, (cache, nxt, feed_pos))
+            pos = jnp.where(active, pos + 1, pos)
+            return ((new_logits, cache, pos, emitted, done, trunc, rng),
+                    (out_tok, emit))
+
+        carry = (logits, cache, pos, emitted, done, trunc, rng)
+        carry, (toks, emits) = jax.lax.scan(
+            body, carry, None, length=self.sc.decode_chunk)
+        return carry, toks, emits
 
     # -- capacity accounting --------------------------------------------------
 
@@ -80,34 +158,65 @@ class ServingEngine:
     # -- serving ------------------------------------------------------------
 
     def generate(self, requests: List[Request]) -> List[Request]:
-        """Serve a list of requests to completion (batched decode)."""
+        """Serve a list of requests to completion (continuous batching)."""
+        sc = self.sc
+        B, T, N = sc.max_batch, sc.max_seq_len, sc.decode_chunk
+        # validate before any work: a mid-serve raise would abandon
+        # already-admitted in-flight requests
+        for r in requests:
+            if len(r.prompt) > T:
+                raise ValueError(
+                    f"request {r.rid}: prompt length {len(r.prompt)}"
+                    f" exceeds max_seq_len {T}")
         pending = list(requests)
-        active: List[Request] = []
-        while pending or active:
-            while pending and len(active) < self.sc.max_batch:
-                active.append(pending.pop(0))
-            # all active requests must share prompt length per prefill
-            # batch; group by length for simplicity
-            plen = len(active[0].prompt)
-            group = [r for r in active if len(r.prompt) == plen]
-            toks = jnp.asarray(np.stack([r.prompt for r in group]))
-            logits, cache = self._prefill(self.params, self.proj, toks)
-            max_new = max(r.max_new_tokens for r in group)
-            pos = plen                     # position of the next new token
-            for t in range(max_new):
-                self.rng, sub = jax.random.split(self.rng)
-                nxt = sample_token(logits[:, -1], self.sc.temperature, sub)
-                nxt_np = np.asarray(nxt)
-                for i, r in enumerate(group):
-                    if len(r.out_tokens) < r.max_new_tokens:
-                        r.out_tokens.append(int(nxt_np[i]))
-                if t == max_new - 1 or pos >= self.sc.max_seq_len:
-                    break
-                last = nxt[:, None].astype(jnp.int32)
-                logits, cache = self._decode(self.params, self.proj, cache,
-                                             last, jnp.int32(pos))
-                pos += 1
-            for r in group:
-                r.done = True
-                active.remove(r)
+        cache = self.model.init_cache(B, T, self.ranks)
+        logits = jnp.zeros((B, self.cfg.vocab_size), jnp.float32)
+        pos = jnp.zeros((B,), jnp.int32)
+        emitted = jnp.zeros((B,), jnp.int32)
+        max_new = jnp.zeros((B,), jnp.int32)
+        done = jnp.ones((B,), bool)
+        trunc = jnp.zeros((B,), bool)
+        slot_req: List[Optional[Request]] = [None] * B
+
+        def admit_into_free_slots():
+            nonlocal cache, logits, pos, emitted, max_new, done, trunc
+            for b in range(B):
+                if slot_req[b] is not None or not pending:
+                    continue
+                r = pending.pop(0)
+                prompt = np.asarray(r.prompt, np.int32)
+                plogits, slot_cache = self._prefill(
+                    self.params, self.proj, jnp.asarray(prompt)[None])
+                cache = self._insert(cache, slot_cache, np.int32(b))
+                logits = logits.at[b].set(plogits[0, -1])
+                pos = pos.at[b].set(prompt.shape[0])
+                emitted = emitted.at[b].set(0)
+                max_new = max_new.at[b].set(r.max_new_tokens)
+                done = done.at[b].set(r.max_new_tokens <= 0)
+                trunc = trunc.at[b].set(False)
+                slot_req[b] = r
+                if r.max_new_tokens <= 0:
+                    r.done = True
+                    slot_req[b] = None
+
+        while pending or any(r is not None for r in slot_req):
+            admit_into_free_slots()
+            carry, toks, emits = self._decode_chunk(
+                self.params, self.proj, cache, logits, pos, emitted,
+                max_new, done, trunc, self.rng)
+            (logits, cache, pos, emitted, done, trunc, self.rng) = carry
+            toks_np = np.asarray(toks)            # (N, B)
+            emits_np = np.asarray(emits)
+            done_np = np.asarray(done)
+            trunc_np = np.asarray(trunc)
+            for b in range(B):
+                r = slot_req[b]
+                if r is None:
+                    continue
+                r.out_tokens.extend(
+                    int(toks_np[t, b]) for t in range(N) if emits_np[t, b])
+                if done_np[b]:
+                    r.done = True
+                    r.truncated = bool(trunc_np[b])
+                    slot_req[b] = None
         return requests

@@ -121,3 +121,71 @@ def test_qhead_padding_exact():
     lp_, _ = mp.train_logits(pp, {"tokens": toks})
     np.testing.assert_allclose(np.asarray(lp_), np.asarray(l0_),
                                rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Variable-length batched decode (per-sequence positions)
+# ---------------------------------------------------------------------------
+
+
+def merge_slot_caches(caches):
+    """Stack single-sequence caches into one batch (the engine's insert)."""
+    prefix = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0),
+                          *[c["prefix"] for c in caches]) \
+        if caches[0]["prefix"] else []
+    steps = (jax.tree.map(lambda *xs: jnp.concatenate(xs, 1),
+                          *[c["steps"] for c in caches])
+             if caches[0]["steps"] is not None else None)
+    return {"prefix": prefix, "steps": steps}
+
+
+def _varlen_vs_individual(cfg, lens, extra=3, proj=None, rtol=1e-4):
+    """Batched per-sequence-position decode == per-request scalar decode."""
+    from repro.models import build_model
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    T = max(lens) + extra + 2
+    B = len(lens)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, max(lens) + extra),
+                              0, cfg.vocab_size)
+    kw = {"proj": proj} if proj is not None else {}
+    caches, singles = [], []
+    for b, L in enumerate(lens):
+        _, c1 = model.prefill(params, {"tokens": toks[b: b + 1, :L]}, T,
+                              **kw)
+        caches.append(c1)
+        singles.append(c1)
+    cache = merge_slot_caches(caches)
+    pos = jnp.asarray(list(lens), jnp.int32)
+    for t in range(extra):
+        feed = jnp.stack([toks[b, lens[b] + t] for b in range(B)])[:, None]
+        lg, cache = model.decode_step(params, cache, feed, pos + t, **kw)
+        for b, L in enumerate(lens):
+            lg1, singles[b] = model.decode_step(
+                params, singles[b], feed[b: b + 1], jnp.int32(L + t), **kw)
+            np.testing.assert_allclose(np.asarray(lg[b]),
+                                       np.asarray(lg1[0]),
+                                       rtol=rtol, atol=rtol)
+
+
+def test_varlen_decode_full_cache():
+    from repro.configs import get_config
+    _varlen_vs_individual(get_config("tinyllama-1.1b").reduced(),
+                          lens=(5, 11, 8))
+
+
+def test_varlen_decode_sliding_window():
+    """Mixed lengths with a ring cache: one sequence past the window
+    (W=16), one far inside it."""
+    from repro.configs import get_config
+    cfg = get_config("h2o-danube-1.8b").reduced()    # window 16
+    assert cfg.sliding_window == 16
+    _varlen_vs_individual(cfg, lens=(20, 6), extra=4)
+
+
+def test_varlen_decode_mla():
+    from conftest import dropless
+    from repro.configs import get_config
+    _varlen_vs_individual(
+        dropless(get_config("deepseek-v2-lite-16b").reduced()),
+        lens=(7, 13))

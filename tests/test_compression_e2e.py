@@ -126,3 +126,65 @@ def test_int8_compressed_cache_close_to_bf16():
                                     proj=proj)
         np.testing.assert_allclose(np.asarray(l8), np.asarray(lr),
                                    rtol=0.1, atol=0.2)
+
+
+# ---------------------------------------------------------------------------
+# Variable-length batched decode over compressed caches
+# ---------------------------------------------------------------------------
+
+
+def _compressed_varlen(cfg_xform=None, use_pallas=False, rtol=1e-4):
+    """Per-sequence-position compressed decode == per-request decode."""
+    from test_attention import merge_slot_caches
+    cfg, model, params, acc = calibrated("tinyllama-1.1b", n_batches=2)
+    ccfg = CompressionConfig(method="kqsvd", rank_k=cfg.d_head,
+                             rank_v=cfg.d_head)
+    mp = acc.solve(ccfg, model.group_output_weights(params))
+    if cfg_xform is not None:
+        cfg = cfg_xform(cfg)
+    if use_pallas:
+        cfg = dataclasses.replace(cfg, use_pallas=True)
+    model = build_model(cfg)
+    proj = model.projections_pytree(mp, jnp.float32)
+    lens, extra = (6, 13, 9), 3
+    B, T = len(lens), max(lens) + extra + 2
+    toks = jax.random.randint(jax.random.PRNGKey(1),
+                              (B, max(lens) + extra), 0, cfg.vocab_size)
+    caches, singles = [], []
+    for b, L in enumerate(lens):
+        _, c1 = model.prefill(params, {"tokens": toks[b: b + 1, :L]}, T,
+                              proj=proj)
+        caches.append(c1)
+        singles.append(c1)
+    cache = merge_slot_caches(caches)
+    pos = jnp.asarray(lens, jnp.int32)
+    for t in range(extra):
+        feed = jnp.stack([toks[b, lens[b] + t] for b in range(B)])[:, None]
+        lg, cache = model.decode_step(params, cache, feed, pos + t,
+                                      proj=proj)
+        for b, L in enumerate(lens):
+            lg1, singles[b] = model.decode_step(
+                params, singles[b], feed[b: b + 1], jnp.int32(L + t),
+                proj=proj)
+            np.testing.assert_allclose(np.asarray(lg[b]),
+                                       np.asarray(lg1[0]),
+                                       rtol=rtol, atol=rtol)
+
+
+def test_varlen_compressed_decode():
+    _compressed_varlen()
+
+
+def test_varlen_compressed_decode_int8():
+    # looser: int8 rounding at quantization boundaries is sensitive to
+    # batch-shape-dependent einsum tiling (1-ulp int8 flips)
+    _compressed_varlen(
+        cfg_xform=lambda c: dataclasses.replace(c, cache_quant="int8"),
+        rtol=0.05)
+
+
+def test_varlen_compressed_decode_pallas_kernel():
+    """cfg.use_pallas routes compressed decode through the lengths-aware
+    Pallas kernel (interpret mode on CPU); outputs must match the lax
+    path bit-for-tolerance."""
+    _compressed_varlen(use_pallas=True)

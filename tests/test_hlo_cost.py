@@ -20,6 +20,8 @@ def test_matches_xla_on_unrolled():
     c = compile_(f, s, s)
     t = analyze(c.as_text())
     xla = c.cost_analysis()
+    if isinstance(xla, (list, tuple)):   # newer jax: one dict per program
+        xla = xla[0]
     assert np.isclose(t.flops, xla["flops"], rtol=0.05)
     assert np.isclose(t.bytes, xla["bytes accessed"], rtol=0.2)
 

@@ -38,35 +38,62 @@ def test_flash_kernel_sweep(B, H, Hkv, S, dh, b, window, dtype):
 
 
 @pytest.mark.parametrize("dtype", DTYPES)
-@pytest.mark.parametrize("B,H,Hkv,T,Rk,Rv,bt,pos", [
-    (1, 4, 2, 64, 16, 16, 16, 63),
-    (2, 8, 2, 128, 32, 16, 32, 100),
-    (1, 4, 1, 256, 8, 8, 64, 5),
-    (2, 4, 4, 64, 16, 32, 16, 31),
+@pytest.mark.parametrize("B,H,Hkv,T,Rk,Rv,bt,lengths", [
+    (1, 4, 2, 64, 16, 16, 16, 64),               # scalar broadcast
+    (2, 8, 2, 128, 32, 16, 32, (101, 7)),        # mixed lengths, GQA m=4
+    (1, 4, 1, 256, 8, 8, 64, 6),
+    (2, 4, 4, 64, 16, 32, 16, (32, 64)),
+    (3, 4, 2, 100, 16, 16, 16, (100, 37, 1)),    # T % bt != 0 tail block
+    (2, 2, 2, 80, 8, 8, 32, (80, 50)),           # tail block + varlen
 ])
-def test_kq_decode_kernel_sweep(B, H, Hkv, T, Rk, Rv, bt, pos, dtype):
+def test_kq_decode_kernel_sweep(B, H, Hkv, T, Rk, Rv, bt, lengths, dtype):
     ks = jax.random.split(jax.random.PRNGKey(1), 3)
     qc = jax.random.normal(ks[0], (B, H, Rk)).astype(dtype)
     kc = jax.random.normal(ks[1], (B, Hkv, T, Rk)).astype(dtype)
     vc = jax.random.normal(ks[2], (B, Hkv, T, Rv)).astype(dtype)
-    out = kq_decode_attention_op(qc, kc, vc, pos, block_t=bt, scale=0.25)
-    ref = kq_decode_attention_ref(qc, kc, vc, pos, scale=0.25)
+    lens = jnp.asarray(lengths, jnp.int32)
+    out = kq_decode_attention_op(qc, kc, vc, lens, block_t=bt, scale=0.25)
+    ref = kq_decode_attention_ref(qc, kc, vc, lens, scale=0.25)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32), **tol(dtype))
 
 
+def test_kq_decode_varlen_matches_reference_attention():
+    """Mixed per-sequence lengths vs the O(S^2) oracle: each batch row
+    must equal full attention over exactly its own live prefix.  Also
+    pins the bounded time grid: max_len << alloc T with a non-divisible
+    tail block."""
+    from repro.models.attention import reference_attention
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    B, H, Hkv, T, Rk, Rv, bt = 3, 8, 2, 160, 16, 16, 32
+    lens = [150, 47, 9]                          # 150 % 32 != 0
+    qc = jax.random.normal(ks[0], (B, H, Rk))
+    kc = jax.random.normal(ks[1], (B, Hkv, T, Rk))
+    vc = jax.random.normal(ks[2], (B, Hkv, T, Rv))
+    out = kq_decode_attention_op(qc, kc, vc, jnp.asarray(lens, jnp.int32),
+                                 block_t=bt, scale=0.25, max_len=max(lens))
+    for b, L in enumerate(lens):
+        ref = reference_attention(
+            qc[b: b + 1, :, None, :], kc[b: b + 1, :, :L],
+            vc[b: b + 1, :, :L], causal=False, scale=0.25)
+        np.testing.assert_allclose(np.asarray(out[b]),
+                                   np.asarray(ref[0, :, 0]),
+                                   rtol=2e-5, atol=2e-5)
+
+
 def test_kernel_agrees_with_model_decode_math():
     """Kernel output == models.attention.decode_attention (the compiled
-    serving path) on the same compressed cache."""
+    serving path) on the same compressed cache, per-sequence lengths."""
     from repro.models.attention import decode_attention
     ks = jax.random.split(jax.random.PRNGKey(2), 3)
     B, H, Hkv, T, Rk, Rv = 2, 4, 2, 64, 16, 16
     qc = jax.random.normal(ks[0], (B, H, Rk))
     kc = jax.random.normal(ks[1], (B, Hkv, T, Rk))
     vc = jax.random.normal(ks[2], (B, Hkv, T, Rv))
-    pos = 40
-    out_k = kq_decode_attention_op(qc, kc, vc, pos, block_t=16, scale=0.5)
-    valid = jnp.arange(T) <= pos
+    pos = jnp.asarray([40, 13], jnp.int32)       # per-sequence positions
+    out_k = kq_decode_attention_op(qc, kc, vc, pos + 1, block_t=16,
+                                   scale=0.5)
+    valid = jnp.arange(T)[None, :] <= pos[:, None]
     out_m = decode_attention(qc[:, :, None, :], kc, vc, valid, 0.5)
     np.testing.assert_allclose(np.asarray(out_k),
                                np.asarray(out_m.reshape(B, H, Rv)),

@@ -1,6 +1,9 @@
 """Hypothesis property tests for the system's core invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.projections import key_projection_from_caches
 from repro.core.svd import energy_rank, gram, gram_factors, right_factors
