@@ -1,15 +1,57 @@
-# Single entry point for CI / pre-merge verification:
-#   make verify   — tier-1 test suite + quick decode benchmark smoke
+# Single entry point for CI / pre-merge verification — the same target
+# .github/workflows/ci.yml runs on every push/PR:
+#   [![CI](../../actions/workflows/ci.yml/badge.svg)](../../actions/workflows/ci.yml)
+#
+#   make verify            — lint + tier-1 tests + bench regression gate
+#                            + quick decode benchmark smoke
+#   make lint              — ruff check (whole tree) + ruff format --check
+#                            (ratchet: FMT_PATHS below grows as files are
+#                            touched); skips with a notice when ruff is
+#                            not installed (CI installs it)
+#   make check-regression  — fresh --quick decode bench vs the committed
+#                            BENCH_decode.json; fails on
+#                            > $(REGRESSION_THRESHOLD)x step-cost
+#                            regression, skips cleanly on mode mismatch.
+#                            Runs BEFORE bench-quick so the comparison
+#                            sees the committed baseline (bench-quick
+#                            rewrites BENCH_decode.json).
 # (ROADMAP.md "Tier-1 verify" is the pytest line below, verbatim.)
 
 PY := PYTHONPATH=src python
 
-.PHONY: verify test bench-quick bench
+# wall-clock gate headroom; CI overrides (hosted runners are not the
+# machine the committed baseline was timed on)
+REGRESSION_THRESHOLD ?= 1.3
+# absolute backstop: all rows uniformly slower than this fails outright
+REGRESSION_MAX_SCALE ?= 5.0
 
-verify: test bench-quick
+# ruff-format ratchet: files written in ruff-format style since the
+# gate landed; extend (after `ruff format <file>`) when touching others
+FMT_PATHS := benchmarks/check_regression.py \
+             tests/test_check_regression.py
+
+.PHONY: verify test lint check-regression bench-quick bench
+
+# bench-quick rewrites BENCH_decode.json, so it must run after the
+# regression gate has read the committed baseline — the recipe (not a
+# prerequisite list, which `make -j` would parallelize) enforces that
+verify: lint test check-regression
+	$(MAKE) bench-quick
 
 test:
 	$(PY) -m pytest -x -q
+
+lint:
+	@if command -v ruff >/dev/null 2>&1; then \
+		ruff check . && ruff format --check $(FMT_PATHS); \
+	else \
+		echo "lint: ruff not installed; skipping (CI runs it)"; \
+	fi
+
+check-regression:
+	$(PY) -m benchmarks.check_regression \
+		--threshold $(REGRESSION_THRESHOLD) \
+		--max-scale $(REGRESSION_MAX_SCALE)
 
 bench-quick:
 	$(PY) -m benchmarks.run --quick

@@ -8,8 +8,7 @@ from typing import List
 import numpy as np
 
 from benchmarks.common import Row
-from repro.core.projections import (Factors, key_projection_from_caches,
-                                    solve_kq_svd)
+from repro.core.projections import Factors, solve_kq_svd
 from repro.core.svd import gram
 
 

@@ -1,0 +1,170 @@
+"""Bench regression gate: fresh --quick decode rows vs the committed
+baseline.
+
+    PYTHONPATH=src python -m benchmarks.check_regression
+    PYTHONPATH=src python -m benchmarks.check_regression --threshold 1.5
+
+Reads the committed ``BENCH_decode.json`` (written by ``benchmarks.run
+--quick`` and tracked in git — the perf trajectory across PRs), runs a
+fresh quick ``decode_costs`` sweep *in process* (nothing on disk is
+overwritten), and fails (exit 1) if any step-cost row regressed by more
+than ``--threshold`` (default 1.3x).  Rules:
+
+* only rows present in both payloads are compared, and only *time* rows
+  (``decode_speedup`` is a ratio, not a latency) — new rows never fail
+  the gate;
+* quick and full payloads are not comparable: a mode mismatch (or a
+  missing baseline) skips cleanly with exit 0, so the gate never blocks
+  the PR that changes the bench shape itself;
+* CPU timings are noisy: each row is the min over reps
+  (``benchmarks.common.timed``), ratios are load-normalized by the
+  least-regressed row (see ``compare``), and a failing first pass is
+  retried once with the per-row minimum compared before declaring a
+  regression.  Cross-machine runs (hosted CI) additionally loosen the
+  threshold via ``REGRESSION_THRESHOLD`` in the workflow, since
+  *relative* row costs shift between BLAS/interpreter-bound paths.
+
+``make verify`` runs this *before* ``bench-quick`` (which rewrites
+``BENCH_decode.json``), so the comparison always sees the committed
+baseline.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+BASELINE_PATH = os.path.join(
+    os.path.dirname(__file__),
+    "..",
+    "BENCH_decode.json",
+)
+# rows whose us_per_call is a derived ratio, not a step latency
+NON_TIME_ROWS = ("decode_speedup",)
+
+
+def rows_to_payload(rows, mode):
+    """benchmarks.common.Row tuples -> the BENCH_decode.json schema."""
+    out = []
+    for name, us, derived in rows:
+        if name.startswith("decode"):
+            out.append({"name": name, "us_per_call": us, "derived": derived})
+    return {"mode": mode, "rows": out}
+
+
+def compare(baseline, fresh, threshold=1.3, max_scale=5.0):
+    """Returns (failures, skip_reason); ``skip_reason`` is set when the
+    pair is not comparable (mode mismatch / empty baseline).
+
+    Load normalization: the baseline was timed on some machine under
+    some load; a uniformly slower environment (busy CI runner) is not a
+    regression.  The least-regressed row approximates the pure machine
+    or load factor, so every ratio is divided by
+    ``scale = max(1, min(ratios))`` before gating — uniform inflation
+    cancels, while a *single* hot path regressing past ``threshold``
+    relative to its peers still fails.  Normalization cannot tell a
+    busy machine from a genuine *uniform* regression, so ``max_scale``
+    is the absolute backstop: every row slower than that fails outright
+    (investigate, or regenerate the baseline on purpose).
+    """
+    if not baseline.get("rows"):
+        return [], "baseline has no rows"
+    if baseline.get("mode") != fresh.get("mode"):
+        reason = (
+            f"mode mismatch: baseline={baseline.get('mode')!r} "
+            f"fresh={fresh.get('mode')!r} — not comparable"
+        )
+        return [], reason
+    base = {r["name"]: r["us_per_call"] for r in baseline["rows"]}
+    ratios = {}
+    for row in fresh["rows"]:
+        name = row["name"]
+        if name in NON_TIME_ROWS or name not in base:
+            continue
+        ratios[name] = row["us_per_call"] / max(base[name], 1e-9)
+    if not ratios:
+        return [], "no comparable step-cost rows"
+    scale = max(1.0, min(ratios.values()))
+    failures = []
+    if scale > max_scale:
+        msg = (
+            f"every row is >= {scale:.2f}x slower than baseline "
+            f"(max_scale {max_scale}x): uniform regression or machine "
+            f"mismatch — investigate or regenerate BENCH_decode.json"
+        )
+        failures.append(msg)
+    for name, ratio in sorted(ratios.items()):
+        if ratio / scale > threshold:
+            msg = (
+                f"{name}: {base[name]:.0f}us -> {ratio * base[name]:.0f}"
+                f"us ({ratio:.2f}x, {ratio / scale:.2f}x load-adjusted"
+                f" > {threshold}x)"
+            )
+            failures.append(msg)
+    return failures, None
+
+
+def merge_min(fresh, retry):
+    """Keep the per-row minimum of two runs (timer-noise damping)."""
+    best = {r["name"]: dict(r) for r in fresh["rows"]}
+    for r in retry["rows"]:
+        if r["name"] in best:
+            us = min(best[r["name"]]["us_per_call"], r["us_per_call"])
+            best[r["name"]]["us_per_call"] = us
+        else:
+            best[r["name"]] = dict(r)
+    return {"mode": fresh["mode"], "rows": list(best.values())}
+
+
+def _fresh_quick_rows():
+    from benchmarks import decode_costs
+
+    return decode_costs.run(quick=True)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default=BASELINE_PATH)
+    ap.add_argument("--threshold", type=float, default=1.3)
+    ap.add_argument("--max-scale", type=float, default=5.0)
+    args = ap.parse_args()
+    if not os.path.exists(args.baseline):
+        print(f"check_regression: no baseline at {args.baseline}; skip")
+        return 0
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    if baseline.get("mode") != "quick":
+        mode = baseline.get("mode")
+        print(f"check_regression: baseline mode is {mode!r}; skip")
+        return 0
+    fresh = rows_to_payload(_fresh_quick_rows(), "quick")
+    failures, skip = compare(baseline, fresh, args.threshold,
+                             args.max_scale)
+    if skip:
+        print(f"check_regression: {skip}; skip")
+        return 0
+    if failures:
+        # CPU timer noise: retry once, compare best-of-two
+        retry = rows_to_payload(_fresh_quick_rows(), "quick")
+        fresh = merge_min(fresh, retry)
+        failures, _ = compare(baseline, fresh, args.threshold,
+                              args.max_scale)
+    if failures:
+        print("check_regression: FAIL")
+        for line in failures:
+            print(f"  {line}")
+        return 1
+    n = 0
+    for row in fresh["rows"]:
+        if row["name"] not in NON_TIME_ROWS:
+            n += 1
+    ok = f"OK ({n} step-cost rows within {args.threshold}x of baseline)"
+    print(f"check_regression: {ok}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
+import gc
 import time
 from typing import Callable, Dict, List, Tuple
 
@@ -9,24 +10,41 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import CompressionConfig, TrainConfig
+from repro.config import TrainConfig
 from repro.configs import get_config
 from repro.core.calibration import GramAccumulator
 from repro.data import DataConfig, batches
-from repro.models import build_model
 from repro.train import Trainer
 
 Row = Tuple[str, float, str]      # (name, us_per_call, derived)
 
 
-def timed(fn: Callable, *args, reps: int = 3, **kw):
-    fn(*args, **kw)                       # warmup / compile
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args, **kw)
-    jax.block_until_ready(out) if hasattr(out, "block_until_ready") \
-        else None
-    return out, (time.perf_counter() - t0) / reps * 1e6
+def timed(fn: Callable, *args, reps: int = 3, budget_s: float = 0.25,
+          max_reps: int = 50, **kw):
+    """(result, per-call us): min over timed calls — the noise-robust
+    estimator the regression gate compares across runs.  At least
+    ``reps`` calls; sub-millisecond calls keep sampling (timeit-style
+    autorange) until ``budget_s`` of wall time or ``max_reps``, so fast
+    rows get enough samples for a stable min on a contended CPU.  Each
+    rep blocks on the result so async dispatch cannot leak one call's
+    work into the next rep's timer."""
+    out = jax.block_until_ready(fn(*args, **kw))   # warmup / compile
+    best = float("inf")
+    spent, n = 0.0, 0
+    gc_was_on = gc.isenabled()
+    gc.disable()                   # timeit-style: GC pauses are not
+    try:                           # the code under test
+        while n < reps or (spent < budget_s and n < max_reps):
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(fn(*args, **kw))
+            dt = time.perf_counter() - t0
+            best = min(best, dt)
+            spent += dt
+            n += 1
+    finally:
+        if gc_was_on:
+            gc.enable()
+    return out, best * 1e6
 
 
 _FIXTURE = {}

@@ -21,9 +21,11 @@ import numpy as np
 
 from benchmarks.common import Row, timed
 from repro.core.compressed import cache_footprint
-from repro.kernels.kq_decode import kq_decode_attention_op
+from repro.kernels.kq_decode import (kq_decode_attention_op,
+                                     kq_decode_paged_attention_op)
 from repro.models.attention import (decode_attention,
                                     int8_decode_attention, quantize_int8)
+from repro.serving.paged_cache import pages_needed
 
 
 def _hbm_bytes(*arrays) -> int:
@@ -93,7 +95,7 @@ def run(B: int = 4, Hkv: int = 8, m: int = 8, T: int = 4096,
         L = max(bt, int(T * frac))
         lens = jnp.linspace(L // 2, L, Bv).astype(jnp.int32)
         _, us = timed(kq_decode_attention_op, qc2, k_v, v_v, lens,
-                      block_t=bt, scale=scale, max_len=L)
+                      reps=5, block_t=bt, scale=scale, max_len=L)
         grid_nt = -(-L // bt)
         touched = int(np.sum(np.ceil(np.asarray(lens) / bt))) * bt \
             * Gv * 2 * R * k_c.dtype.itemsize
@@ -102,6 +104,42 @@ def run(B: int = 4, Hkv: int = 8, m: int = 8, T: int = 4096,
                      f"hbm_bytes={touched}"))
         print(f"varlen[{tag}]: max_len={L} grid_nt={grid_nt} "
               f"{us:.0f}us hbm={touched}B")
+
+    # -- paged cache: HBM scales with *occupied pages*, not with the
+    # dense allocation slots x max_seq_len (DESIGN.md §paged-cache).
+    # The pool holds full capacity; each occupancy level owns only the
+    # pages its lengths need, located through a shuffled block table.
+    ps = 64 if quick else 256
+    pages_per_seq = T // ps
+    n_phys = 1 + Bv * pages_per_seq                  # + garbage page 0
+    kp = jax.random.normal(ks[1], (n_phys, Gv, ps, R), dt)
+    vp = jax.random.normal(ks[2], (n_phys, Gv, ps, R), dt)
+    page_bytes = Gv * ps * 2 * R * kp.dtype.itemsize
+    dense_hbm = Bv * T * Gv * 2 * R * kp.dtype.itemsize
+    perm = np.random.default_rng(0).permutation(
+        np.arange(1, n_phys, dtype=np.int32))
+    for frac, tag in ((1.0, "full"), (0.5, "half"), (0.125, "eighth")):
+        L = max(ps, int(T * frac))
+        lens = jnp.linspace(L // 2, L, Bv).astype(jnp.int32)
+        occupied = int(sum(pages_needed(int(x), ps)
+                           for x in np.asarray(lens)))
+        btab = np.zeros((Bv, pages_per_seq), np.int32)
+        nxt = 0
+        for b, x in enumerate(np.asarray(lens)):
+            n_b = pages_needed(int(x), ps)
+            btab[b, :n_b] = perm[nxt: nxt + n_b]
+            nxt += n_b
+        _, us = timed(kq_decode_paged_attention_op, qc2, kp, vp, lens,
+                      jnp.asarray(btab), reps=5, scale=scale, max_len=L)
+        rows.append((f"decode_paged_{tag}", us,
+                     f"max_len={L};page_size={ps};"
+                     f"occupied_pages={occupied};"
+                     f"alloc_pages={Bv * pages_per_seq};"
+                     f"hbm_bytes={occupied * page_bytes};"
+                     f"dense_hbm_bytes={dense_hbm}"))
+        print(f"paged[{tag}]: max_len={L} pages={occupied}/"
+              f"{Bv * pages_per_seq} {us:.0f}us "
+              f"hbm={occupied * page_bytes}B (dense {dense_hbm}B)")
     return rows
 
 

@@ -12,7 +12,6 @@ from typing import List
 import numpy as np
 
 from benchmarks.common import Row, calibrated_fixture, eval_caches
-from repro.config import CompressionConfig
 from repro.core.projections import solve_key, solve_value
 from repro.core.theory import mha_outputs, relative_fro
 

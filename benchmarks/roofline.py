@@ -5,7 +5,7 @@ from __future__ import annotations
 import glob
 import json
 import os
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 from benchmarks.common import Row
 

@@ -8,7 +8,6 @@
 3. solve the closed-form KQ-SVD projections (Thm 2) at eps=0.1,
 4. serve with the compressed cache and compare against the full cache.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -17,7 +16,6 @@ from repro.configs import get_config
 from repro.core.calibration import calibrate_model
 from repro.core.compressed import cache_footprint
 from repro.data import DataConfig, batches, calibration_batches
-from repro.models import build_model
 from repro.serving import Request, ServingEngine
 from repro.train import Trainer
 

@@ -6,10 +6,8 @@ Serves identical greedy requests with the full cache and with
 K-SVD / Eigen / KQ-SVD compressed caches at the same rank, reporting
 agreement with the uncompressed output and the HBM capacity gain.
 """
-import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.config import CompressionConfig, ServeConfig

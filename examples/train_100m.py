@@ -5,7 +5,6 @@ the training metrics a production job would emit.
     PYTHONPATH=src python examples/train_100m.py [--steps 300]
 """
 import argparse
-import dataclasses
 import tempfile
 
 from repro.config import ModelConfig, TrainConfig

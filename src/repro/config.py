@@ -364,6 +364,33 @@ class ServeConfig:
     decode_chunk: int = 8           # tokens per fused on-device decode scan
     eos_token: Optional[int] = None  # stop generation on this token id
     seed: int = 0
+    # paged KV cache (DESIGN.md §paged-cache): fixed-size pages + a
+    # per-slot block table instead of dense (max_batch, max_seq_len)
+    # slots.  n_pages = 0 derives full capacity (no oversubscription);
+    # smaller values oversubscribe HBM and rely on admission
+    # backpressure + freed-page reuse.
+    paged: bool = False
+    page_size: int = 64             # tokens per page (kernel time block)
+    n_pages: int = 0                # allocatable pages; 0 => derive
+
+    def __post_init__(self) -> None:
+        if self.paged:
+            if self.page_size <= 0:
+                raise ValueError("page_size must be positive")
+            if self.max_seq_len % self.page_size:
+                raise ValueError(
+                    f"max_seq_len {self.max_seq_len} must be a multiple of"
+                    f" page_size {self.page_size}")
+
+    @property
+    def pages_per_seq(self) -> int:
+        """Block-table width: logical pages spanning max_seq_len."""
+        return self.max_seq_len // self.page_size
+
+    @property
+    def total_pages(self) -> int:
+        """Allocatable pages in the pool (excludes the garbage page)."""
+        return self.n_pages or self.max_batch * self.pages_per_seq
 
 
 @dataclass(frozen=True)

@@ -192,7 +192,6 @@ def make_calibrate_step(model):
     scale (DESIGN.md §4.1).  The host-side GramAccumulator path is the
     oracle (tests/test_calibration.py).
     """
-    import jax
     import jax.numpy as jnp
 
     def init_grams(dk: int, dv: int, hkv: int):

@@ -13,6 +13,9 @@ dry-run/compile twin (Pallas TPU kernels do not lower on the CPU backend).
 """
 
 import jax
+import jax.numpy as jnp
+
+LANE = 128          # TPU lane count: Mosaic trailing-axis multiple
 
 
 def default_interpret() -> bool:
@@ -20,3 +23,12 @@ def default_interpret() -> bool:
     interpreter everywhere else (CPU/GPU backends cannot lower TPU
     Pallas kernels)."""
     return jax.default_backend() != "tpu"
+
+
+def pad_to_lane(x, mult: int = LANE):
+    """Zero-pad the trailing axis up to a multiple of ``mult``."""
+    r = x.shape[-1] % mult
+    if r == 0:
+        return x
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, mult - r)]
+    return jnp.pad(x, pad)

@@ -45,7 +45,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels import default_interpret
+from repro.kernels import default_interpret, pad_to_lane
 
 NEG_INF = -1e30
 
@@ -98,7 +98,8 @@ def _kq_decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
 def kq_decode_attention(qc, kc, vc, lengths, *, block_t: int = 256,
                         scale: float = 1.0,
                         interpret: Optional[bool] = None,
-                        max_len: Optional[int] = None):
+                        max_len: Optional[int] = None,
+                        pad_lanes: Optional[bool] = None):
     """qc: (B,H,Rk); kc: (B,Hkv,T,Rk); vc: (B,Hkv,T,Rv).
 
     ``lengths``: (B,) int32 count of live cache entries per sequence
@@ -110,8 +111,24 @@ def kq_decode_attention(qc, kc, vc, lengths, *, block_t: int = 256,
     bound (traced values cannot be checked here), so an underestimated
     hint silently drops the tail of longer sequences.
 
+    Lane padding (arbitrary calibrated ranks on real TPU): Mosaic needs
+    the trailing axis to be a 128-multiple, so when compiling the real
+    kernel (``pad_lanes`` defaults to ``not interpret``) R_k/R_v are
+    zero-padded and the output sliced back — exact, since padded R_k
+    columns add 0 to every score and padded R_v columns are dropped.
+
     Returns (B, H, Rv) group-aggregated values (softmax(qc kc^T) vc).
     """
+    if interpret is None:
+        interpret = default_interpret()
+    if (not interpret) if pad_lanes is None else pad_lanes:
+        rv = vc.shape[-1]
+        if qc.shape[-1] % 128 or rv % 128:
+            out = kq_decode_attention(
+                pad_to_lane(qc), pad_to_lane(kc), pad_to_lane(vc),
+                lengths, block_t=block_t, scale=scale,
+                interpret=interpret, max_len=max_len, pad_lanes=False)
+            return out[..., :rv]
     B, H, Rk = qc.shape
     _, Hkv, T, _ = kc.shape
     Rv = vc.shape[-1]
@@ -128,8 +145,6 @@ def kq_decode_attention(qc, kc, vc, lengths, *, block_t: int = 256,
     lengths = jnp.minimum(lengths, bound)
     grid = (B, Hkv, pl.cdiv(bound, bt))
     qg = qc.reshape(B, Hkv, m, Rk)
-    if interpret is None:
-        interpret = default_interpret()
 
     def _kv_map(b, g, t, lens):
         # clamp to the sequence's last occupied block: repeated block

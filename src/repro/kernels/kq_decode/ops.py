@@ -1,10 +1,17 @@
-"""jit'd public wrapper for the compressed-decode kernel.
+"""jit'd public wrappers for the compressed-decode kernels (dense+paged).
 
 ``interpret=None`` (the default) resolves from the backend at trace
 time: real Mosaic compilation on TPU, interpreter everywhere else — TPU
 runs compile the real kernel with no call-site changes.  Pass a static
 ``max_len`` bound on ``max(lengths)`` to keep the time grid
 length-bounded under jit (lengths is traced there).
+
+Lane padding for non-multiple ``R_k/R_v`` lives in the kernel entry
+points themselves (``kq_decode_attention`` / ``kq_decode_paged_
+attention``), so every caller — including the serving decode hot path,
+which calls the kernels directly inside its own jit — gets it; the
+``pad_lanes`` argument forces it on for tests (interpret mode would not
+otherwise exercise the pad/unpad path).
 """
 from __future__ import annotations
 
@@ -13,13 +20,26 @@ import functools
 import jax
 
 from repro.kernels.kq_decode.kq_decode import kq_decode_attention
+from repro.kernels.kq_decode.paged import kq_decode_paged_attention
 
 
 @functools.partial(jax.jit,
                    static_argnames=("block_t", "scale", "interpret",
-                                    "max_len"))
+                                    "max_len", "pad_lanes"))
 def kq_decode_attention_op(qc, kc, vc, lengths, *, block_t=256, scale=1.0,
-                           interpret=None, max_len=None):
+                           interpret=None, max_len=None, pad_lanes=None):
     return kq_decode_attention(qc, kc, vc, lengths, block_t=block_t,
                                scale=scale, interpret=interpret,
-                               max_len=max_len)
+                               max_len=max_len, pad_lanes=pad_lanes)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "interpret", "max_len",
+                                    "pad_lanes"))
+def kq_decode_paged_attention_op(qc, kc_pool, vc_pool, lengths, block_table,
+                                 *, scale=1.0, interpret=None,
+                                 max_len=None, pad_lanes=None):
+    return kq_decode_paged_attention(qc, kc_pool, vc_pool, lengths,
+                                     block_table, scale=scale,
+                                     interpret=interpret, max_len=max_len,
+                                     pad_lanes=pad_lanes)

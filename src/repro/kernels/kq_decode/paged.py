@@ -1,0 +1,165 @@
+"""Pallas TPU kernel: paged decode attention over the compressed cache.
+
+Paged twin of ``kq_decode.kq_decode_attention`` (DESIGN.md
+§paged-cache): kc/vc live in a page *pool* ``(P, Hkv, page_size, R)``
+and each sequence's pages are located through a per-slot block table
+``(B, n_pages)``.  Both the ``(B,)`` lengths and the block table enter
+via scalar prefetch (SMEM), exactly the mechanism the variable-length
+kernel already uses for lengths — the kc/vc BlockSpec index maps
+dereference the block table to turn a *logical* time block into a
+*physical* page id, so the kernel streams each sequence's pages from
+HBM in place with no gather/copy:
+
+* grid (B, Hkv, Nt) with one time step per logical page,
+  ``Nt = ceil(bound / page_size)`` where ``bound`` is the static
+  ``max_len`` hint (never the allocated pool size);
+* the index map clamps to the sequence's last occupied page, so
+  programs past a short sequence re-reference the previous physical
+  page and issue no fresh DMA;
+* the online-softmax update is predicated with ``pl.when`` and masks
+  ``tpos < length`` inside the tail page.
+
+Layout: page_size is a sublane multiple (>=8) on real TPU; R_k/R_v are
+lane-padded by the op wrapper (``ops.py``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import default_interpret, pad_to_lane
+
+NEG_INF = -1e30
+
+
+def _kq_decode_paged_kernel(len_ref, btab_ref, q_ref, k_ref, v_ref, o_ref,
+                            m_ref, l_ref, acc_ref, *, page_size: int,
+                            scale: float):
+    b = pl.program_id(0)
+    t = pl.program_id(2)
+    nt = pl.num_programs(2)
+    length = len_ref[b]
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Programs entirely past this sequence's last page are no-ops: the
+    # block-table deref was clamped (no DMA) and the update is
+    # predicated off.
+    @pl.when(t * page_size < length)
+    def _update():
+        q = q_ref[0, 0].astype(jnp.float32)               # (m, Rk)
+        k = k_ref[0, 0].astype(jnp.float32)               # (ps, Rk)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        tpos = t * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(tpos < length, s, NEG_INF)          # (m, ps)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        v = v_ref[0, 0].astype(jnp.float32)               # (ps, Rv)
+        # zero the tail page's dead rows: 0 * garbage = NaN otherwise
+        row = t * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (v.shape[0], 1), 0)
+        v = jnp.where(row < length, v, 0.0)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(t == nt - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0, :, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def kq_decode_paged_attention(qc, kc_pool, vc_pool, lengths, block_table,
+                              *, scale: float = 1.0,
+                              interpret: Optional[bool] = None,
+                              max_len: Optional[int] = None,
+                              pad_lanes: Optional[bool] = None):
+    """qc: (B,H,Rk); kc_pool: (P,Hkv,ps,Rk); vc_pool: (P,Hkv,ps,Rv).
+
+    ``lengths``: (B,) int32 live cache entries per sequence;
+    ``block_table``: (B, n_pages) int32 physical page of each logical
+    page (unallocated entries may point anywhere valid — masked).
+    ``max_len``: static bound on ``max(lengths)`` sizing the time grid
+    under jit; same precondition as the dense kernel.  ``pad_lanes``
+    (default: ``not interpret``) zero-pads non-lane-multiple R_k/R_v
+    for Mosaic and slices the output back — exact (see
+    ``kq_decode_attention``).
+
+    Returns (B, H, Rv) group-aggregated values.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    if (not interpret) if pad_lanes is None else pad_lanes:
+        rv = vc_pool.shape[-1]
+        if qc.shape[-1] % 128 or rv % 128:
+            out = kq_decode_paged_attention(
+                pad_to_lane(qc), pad_to_lane(kc_pool),
+                pad_to_lane(vc_pool), lengths, block_table, scale=scale,
+                interpret=interpret, max_len=max_len, pad_lanes=False)
+            return out[..., :rv]
+    B, H, Rk = qc.shape
+    P, Hkv, ps, _ = kc_pool.shape
+    Rv = vc_pool.shape[-1]
+    m = H // Hkv
+    n_pages = block_table.shape[1]
+    T = n_pages * ps                        # logical capacity per slot
+    lengths = jnp.asarray(lengths, jnp.int32)
+    if lengths.ndim == 0:
+        lengths = jnp.broadcast_to(lengths, (B,))
+    block_table = jnp.asarray(block_table, jnp.int32)
+    bound = T
+    if max_len is not None:
+        bound = max(1, min(T, int(max_len)))
+    elif not isinstance(lengths, jax.core.Tracer):
+        bound = max(1, min(T, int(jnp.max(lengths))))
+    lengths = jnp.minimum(lengths, bound)
+    grid = (B, Hkv, pl.cdiv(bound, ps))
+    qg = qc.reshape(B, Hkv, m, Rk)
+
+    def _kv_map(b, g, t, lens, btab):
+        # clamp to the last occupied logical page, then dereference the
+        # block table: the physical page is the pipeline's block index,
+        # so skipped programs repeat a page id and emit no fresh DMA
+        last = jnp.maximum((lens[b] + ps - 1) // ps - 1, 0)
+        return (btab[b, jnp.minimum(t, last)], g, 0, 0)
+
+    kernel = functools.partial(_kq_decode_paged_kernel, page_size=ps,
+                               scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, m, Rk),
+                         lambda b, g, t, lens, btab: (b, g, 0, 0)),
+            pl.BlockSpec((1, 1, ps, Rk), _kv_map),
+            pl.BlockSpec((1, 1, ps, Rv), _kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, m, Rv),
+                               lambda b, g, t, lens, btab: (b, g, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((m,), jnp.float32),
+            pltpu.VMEM((m,), jnp.float32),
+            pltpu.VMEM((m, Rv), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, m, Rv), qc.dtype),
+        interpret=interpret,
+    )(lengths, block_table, qg, kc_pool, vc_pool)
+    return out.reshape(B, H, Rv)

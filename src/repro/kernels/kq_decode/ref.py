@@ -4,6 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.serving.paged_cache import gather_pages
+
 NEG_INF = -1e30
 
 
@@ -27,3 +29,14 @@ def kq_decode_attention_ref(qc, kc, vc, lengths, *, scale: float = 1.0):
     p = jax.nn.softmax(s, axis=-1)
     agg = jnp.einsum("bgmt,bgtr->bgmr", p.astype(vc.dtype), vc)
     return agg.reshape(B, H, -1).astype(qc.dtype)
+
+
+def kq_decode_paged_attention_ref(qc, kc_pool, vc_pool, lengths,
+                                  block_table, *, scale: float = 1.0):
+    """Paged oracle: gather each slot's pages, then the dense ref.
+
+    kc_pool/vc_pool: (P, Hkv, ps, R); block_table: (B, n_pages) int32.
+    """
+    kc = gather_pages(kc_pool, block_table)
+    vc = gather_pages(vc_pool, block_table)
+    return kq_decode_attention_ref(qc, kc, vc, lengths, scale=scale)

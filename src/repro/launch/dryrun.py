@@ -24,19 +24,17 @@ import dataclasses
 import json
 import time
 import traceback
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import optim
 from repro.config import (ModelConfig, SHAPES, ShapeSpec, TrainConfig,
                           shape_applicable)
 from repro.configs import get_config, list_archs
 from repro.launch import specs as S
 from repro.launch.mesh import make_production_mesh
-from repro.models.layers import dtype_of
 from repro.models.model import build_model
 from repro.roofline import hlo_cost
 from repro.roofline.analysis import (Roofline, attn_substitution,

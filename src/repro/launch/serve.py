@@ -6,7 +6,6 @@
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 import jax
 import numpy as np
@@ -36,6 +35,14 @@ def main() -> None:
                     help="tokens per fused on-device decode scan")
     ap.add_argument("--calib-seqs", type=int, default=8)
     ap.add_argument("--calib-len", type=int, default=64)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: page pool + block tables "
+                         "(DESIGN.md §paged-cache)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per page (with --paged)")
+    ap.add_argument("--n-pages", type=int, default=0,
+                    help="pool size; 0 derives full capacity, smaller "
+                         "oversubscribes with admission backpressure")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -58,8 +65,12 @@ def main() -> None:
         print(f"calibrated {args.method}: ranks k={proj.ranks_k} "
               f"v={proj.ranks_v}; cache ratio {fp.ratio:.3f}")
 
-    sc = ServeConfig(max_seq_len=args.prompt_len + args.max_new_tokens
-                     + 8, max_batch=8, decode_chunk=args.decode_chunk)
+    T = args.prompt_len + args.max_new_tokens + 8
+    if args.paged:   # logical capacity must be whole pages
+        T = -(-T // args.page_size) * args.page_size
+    sc = ServeConfig(max_seq_len=T, max_batch=8,
+                     decode_chunk=args.decode_chunk, paged=args.paged,
+                     page_size=args.page_size, n_pages=args.n_pages)
     eng = ServingEngine(cfg, params, sc, projections=proj)
     rng = np.random.default_rng(0)
     lens = rng.integers(min(4, args.prompt_len), args.prompt_len + 1,
@@ -75,6 +86,10 @@ def main() -> None:
         print(f"req {r.rid} (prompt {len(r.prompt):3d}): "
               f"{r.out_tokens}{note}")
     print(f"capacity gain vs full cache: {eng.capacity_gain():.2f}x")
+    if args.paged:
+        pool = eng.pool
+        print(f"page pool: {pool.n_pages} x {args.page_size}-token "
+              f"pages, {pool.free_count} free after drain")
 
 
 if __name__ == "__main__":

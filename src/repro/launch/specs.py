@@ -14,7 +14,7 @@ long-context decode — the cache sequence axis over ``data`` (SP).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,10 +22,10 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import optim
-from repro.config import ModelConfig, ShapeSpec, TrainConfig
+from repro.config import ModelConfig, TrainConfig
 from repro.models.layers import dtype_of
 from repro.models.model import LM
-from repro.sharding.partition import dp_axes, params_shardings
+from repro.sharding.partition import dp_axes
 
 
 def _sds(shape, dtype):

@@ -9,7 +9,6 @@ On a real TPU slice this runs under the production mesh
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 from repro.config import TrainConfig
 from repro.configs import get_config

@@ -29,7 +29,9 @@ import numpy as np
 
 from repro.config import ModelConfig
 from repro.kernels.kq_decode.kq_decode import kq_decode_attention
+from repro.kernels.kq_decode.paged import kq_decode_paged_attention
 from repro.models.layers import apply_rope, init_dense
+from repro.serving.paged_cache import append_token, gather_pages
 
 NEG_INF = -1e30
 
@@ -433,16 +435,32 @@ def attn_prefill(p, x, cfg: ModelConfig, max_len: int,
 
 
 def attn_decode(p, x, cache: Dict, pos, cfg: ModelConfig,
-                proj: Optional[Dict] = None):
+                proj: Optional[Dict] = None, block_table=None):
     """One-token decode.  x: (B,1,D); pos: (B,) per-sequence index of the
-    new token (a scalar broadcasts — legacy lock-step batches)."""
+    new token (a scalar broadcasts — legacy lock-step batches).
+
+    ``block_table`` selects the paged cache (DESIGN.md §paged-cache):
+    cache leaves are page pools (P, Hkv, page_size, R) and
+    ``block_table`` is the (B, n_pages) slot->physical-page map; the new
+    entry is appended through the table and attention reads the pages in
+    place (Pallas) or via a gather (lax reference).  Dense (per-slot)
+    caches remain the default and the parity oracle."""
     B = x.shape[0]
     dh = cfg.d_head
     scale = 1.0 / math.sqrt(dh)
     pos = batched_positions(pos, B)
     q, k_new, v_new = _qkv(p, x, cfg, pos[:, None, None])   # S=1
     W = cfg.sliding_window or 0
-    T = (cache["kc"] if proj is not None else cache["k"]).shape[2]
+    paged = block_table is not None
+    if paged:
+        if W or cfg.cache_quant == "int8":
+            raise NotImplementedError(
+                "paged cache supports full-attention bf16/f32 and "
+                "compressed layouts only (no sliding window, no int8)")
+        T = block_table.shape[1] * cache[
+            "kc" if proj is not None else "k"].shape[2]
+    else:
+        T = (cache["kc"] if proj is not None else cache["k"]).shape[2]
     slot = (pos % W) if W else pos                          # (B,)
     if proj is not None:
         k_st = jnp.einsum("bhtd,hdr->bhtr", k_new, proj["a_k"])
@@ -451,8 +469,12 @@ def attn_decode(p, x, cache: Dict, pos, cfg: ModelConfig,
         if int8:
             k_st, ks_new = quantize_int8(k_st)
             v_st, vs_new = quantize_int8(v_st)
-        kc = scatter_time(cache["kc"], k_st, slot)
-        vc = scatter_time(cache["vc"], v_st, slot)
+        if paged:
+            kc = append_token(cache["kc"], block_table, pos, k_st[:, :, 0])
+            vc = append_token(cache["vc"], block_table, pos, v_st[:, :, 0])
+        else:
+            kc = scatter_time(cache["kc"], k_st, slot)
+            vc = scatter_time(cache["vc"], v_st, slot)
         new_cache = dict(cache, kc=kc, vc=vc)
         if int8:
             new_cache["kscale"] = scatter_time(
@@ -469,8 +491,12 @@ def attn_decode(p, x, cache: Dict, pos, cfg: ModelConfig,
         keys, vals = kc, vc
         qq = qc
     else:
-        kk = scatter_time(cache["k"], k_new, slot)
-        vv = scatter_time(cache["v"], v_new, slot)
+        if paged:
+            kk = append_token(cache["k"], block_table, pos, k_new[:, :, 0])
+            vv = append_token(cache["v"], block_table, pos, v_new[:, :, 0])
+        else:
+            kk = scatter_time(cache["k"], k_new, slot)
+            vv = scatter_time(cache["v"], v_new, slot)
         new_cache = dict(cache, k=kk, v=vv)
         keys, vals = kk, vv
         qq = q
@@ -486,6 +512,20 @@ def attn_decode(p, x, cache: Dict, pos, cfg: ModelConfig,
         agg = int8_decode_attention(
             qq.reshape(B, Hkv, m, -1), keys, vals, new_cache["kscale"],
             new_cache["vscale"], valid, scale)
+    elif paged and proj is not None and cfg.use_pallas:
+        # TPU runtime hot path, paged: the kernel dereferences the block
+        # table via scalar prefetch — no page gather is materialized
+        Hkv = cfg.n_kv_heads
+        agg = kq_decode_paged_attention(
+            qq.reshape(B, -1, qq.shape[-1]), keys, vals, pos + 1,
+            block_table, scale=scale,
+            max_len=T).reshape(B, Hkv, -1, vals.shape[-1])
+    elif paged:
+        # lax reference: materialize each slot's pages, then the dense
+        # masked decode (parity oracle for the paged kernel)
+        k_seq = gather_pages(keys, block_table)
+        v_seq = gather_pages(vals, block_table)
+        agg = decode_attention(qq, k_seq, v_seq, valid, scale)
     elif proj is not None and cfg.use_pallas and not W:
         # TPU runtime hot path: the Pallas kernel streams the compressed
         # cache with per-sequence lengths (interpret-mode on CPU)

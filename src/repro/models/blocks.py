@@ -15,7 +15,6 @@ from __future__ import annotations
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.models import attention as attn_mod
@@ -90,14 +89,16 @@ def init_layer(key, cfg: ModelConfig, layer_idx: int, dtype) -> Dict:
 # ---------------------------------------------------------------------------
 
 
-def _ffn_apply(p: Dict, x, cfg: ModelConfig, layer_idx: int, mode: str):
+def _ffn_apply(p: Dict, x, cfg: ModelConfig, layer_idx: int, mode: str,
+               token_mask=None):
     """Post-mixer FFN with residual; returns (x, aux)."""
     aux = {}
     if "ffn" not in p:
         return x, aux
     h = rms_norm(x, p["ln2"], cfg.rms_eps)
     if cfg.ffn_kind(layer_idx) == "moe":
-        y, aux = moe_ffn(p["ffn"], h, cfg.moe, mode)
+        y, aux = moe_ffn(p["ffn"], h, cfg.moe, mode,
+                         token_mask=token_mask)
     else:
         y = swiglu(p["ffn"], h)
     return x + y, aux
@@ -105,12 +106,21 @@ def _ffn_apply(p: Dict, x, cfg: ModelConfig, layer_idx: int, mode: str):
 
 def apply_layer(p: Dict, x, cfg: ModelConfig, layer_idx: int, mode: str,
                 cache: Optional[Dict] = None, pos=None,
-                proj: Optional[Dict] = None, max_len: int = 0):
-    """Returns (x, new_cache, captures, aux)."""
+                proj: Optional[Dict] = None, max_len: int = 0,
+                block_table=None, token_mask=None):
+    """Returns (x, new_cache, captures, aux).
+
+    ``block_table`` (decode only) routes attention through the paged
+    cache; ``token_mask`` (B, S) marks live tokens so MoE routing skips
+    finished/empty serving slots (both DESIGN.md §paged-cache)."""
     kind = cfg.layer_kinds()[layer_idx]
     x = shard(x, ("pod", "data"), None, None)
     h = rms_norm(x, p["ln1"], cfg.rms_eps)
     new_cache, captures = None, None
+    if block_table is not None and kind != "attn":
+        raise NotImplementedError(
+            f"paged cache supports plain attention layers only (got "
+            f"{kind})")
     if kind == "attn":
         if mode == "train":
             y = attn_mod.attn_train(p["attn"], h, cfg)
@@ -121,7 +131,7 @@ def apply_layer(p: Dict, x, cfg: ModelConfig, layer_idx: int, mode: str,
                                                  max_len, proj)
         else:
             y, new_cache = attn_mod.attn_decode(p["attn"], h, cache, pos,
-                                                cfg, proj)
+                                                cfg, proj, block_table)
     elif kind == "mla":
         if mode == "train":
             y = mla_mod.mla_train(p["attn"], h, cfg)
@@ -142,7 +152,8 @@ def apply_layer(p: Dict, x, cfg: ModelConfig, layer_idx: int, mode: str,
         else:
             y, new_cache = ssm_mod.ssm_decode(p["ssm"], h, cache, cfg.ssm)
     x = x + y
-    x, aux = _ffn_apply(p, x, cfg, layer_idx, mode)
+    x, aux = _ffn_apply(p, x, cfg, layer_idx, mode,
+                        token_mask if mode == "decode" else None)
     return x, new_cache, captures, aux
 
 

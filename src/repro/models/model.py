@@ -18,7 +18,7 @@ The KQ-SVD projections enter as a separate pytree ``proj`` with
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -121,7 +121,8 @@ class LM:
     # -- step application ----------------------------------------------------
 
     def _apply_step(self, step_params, x, mode, step_cache=None, pos=None,
-                    step_proj=None, max_len=0):
+                    step_proj=None, max_len=0, block_table=None,
+                    token_mask=None):
         cfg = self.cfg
         new_caches, captures, aux_t = [], None, _zero_aux()
         for j, layer_idx in enumerate(self.step_template):
@@ -130,7 +131,8 @@ class LM:
             lproj = step_proj if (j == self.attn_j and step_proj is not None
                                   and len(step_proj)) else None
             x, nc, caps, aux = apply_layer(
-                lp, x, cfg, layer_idx, mode, lc, pos, lproj, max_len)
+                lp, x, cfg, layer_idx, mode, lc, pos, lproj, max_len,
+                block_table, token_mask)
             new_caches.append(nc)
             if caps is not None:
                 captures = caps
@@ -142,7 +144,7 @@ class LM:
     # -- full stack ----------------------------------------------------------
 
     def _run_stack(self, params, x, mode, cache=None, pos=None, proj=None,
-                   max_len: int = 0):
+                   max_len: int = 0, block_table=None, token_mask=None):
         """Returns (x, cache_out, captures_list, aux)."""
         cfg = self.cfg
         aux = _zero_aux()
@@ -155,7 +157,8 @@ class LM:
             lproj = (proj["prefix"][attn_ord]
                      if (proj is not None and is_attn) else None)
             x, nc, caps, la = apply_layer(lp, x, cfg, layer_idx, mode,
-                                          lc, pos, lproj, max_len)
+                                          lc, pos, lproj, max_len,
+                                          block_table, token_mask)
             prefix_cache_out.append(nc)
             if caps is not None:
                 captures_list.append(caps)
@@ -186,7 +189,7 @@ class LM:
             else:
                 x, steps_cache_out, caps_stacked, s_aux = self._scan_steps(
                     params["steps"], x, mode, cache, pos, step_proj,
-                    max_len)
+                    max_len, block_table, token_mask)
                 aux = jax.tree.map(lambda a, b: a + b, aux, s_aux)
                 if caps_stacked is not None:
                     for i in range(len(self.steps)):
@@ -200,7 +203,7 @@ class LM:
         return x, cache_out, captures_list, aux
 
     def _scan_steps(self, steps_params, x, mode, cache, pos, step_proj,
-                    max_len):
+                    max_len, block_table=None, token_mask=None):
         cfg = self.cfg
         has_cache_in = mode == "decode"
         emit_cache = mode in ("prefill", "decode")
@@ -212,7 +215,8 @@ class LM:
             sc = xs[1] if has_cache_in else None
             spj = xs[-1] if step_proj is not None else None
             x, co, caps, sa = self._apply_step(sp, x, mode, sc, pos, spj,
-                                               max_len)
+                                               max_len, block_table,
+                                               token_mask)
             aux = jax.tree.map(lambda a, b: a + b, aux, sa)
             ys = []
             if emit_cache:
@@ -259,13 +263,22 @@ class LM:
         logits = self._logits(params, x[:, -1:])
         return logits, cache
 
-    def decode_step(self, params, cache, tokens, pos, proj=None):
+    def decode_step(self, params, cache, tokens, pos, proj=None,
+                    block_table=None, token_mask=None):
         """tokens: (B, 1) int32; pos: per-sequence (B,) index of each new
-        token (a scalar broadcasts — legacy lock-step decode)."""
+        token (a scalar broadcasts — legacy lock-step decode).
+
+        ``block_table``: (B, n_pages) int32 — present iff ``cache`` is
+        paged (pool-shaped leaves; DESIGN.md §paged-cache).
+        ``token_mask``: (B,) bool of live slots; dead slots are excluded
+        from MoE capacity assignment."""
         pos = attn_mod.batched_positions(pos, tokens.shape[0])
         x = self._embed(params, {"tokens": tokens})
+        tm = token_mask[:, None] if token_mask is not None else None
         x, cache, _, _ = self._run_stack(params, x, "decode", cache=cache,
-                                         pos=pos, proj=proj)
+                                         pos=pos, proj=proj,
+                                         block_table=block_table,
+                                         token_mask=tm)
         x = rms_norm(x, params["final_norm"], self.cfg.rms_eps)
         return self._logits(params, x), cache
 
@@ -322,6 +335,25 @@ class LM:
         else:
             steps = None
         return {"prefix": prefix, "steps": steps}
+
+    def init_paged_cache(self, n_phys_pages: int, page_size: int,
+                         ranks: Tuple[int, int] = (0, 0), dtype=None):
+        """Page-pool cache (DESIGN.md §paged-cache): same pytree layout
+        as ``init_cache`` but every attention leaf is a pool
+        ``(n_phys_pages, Hkv, page_size, R)`` indexed through a block
+        table instead of per-slot ``(B, max_seq_len, R)`` lanes.  This
+        is exactly ``init_cache`` with (batch, max_len) reinterpreted as
+        (pages, page_size) — restricted to plain-attention stacks."""
+        cfg = self.cfg
+        kinds = set(cfg.layer_kinds())
+        if kinds != {"attn"}:
+            raise NotImplementedError(
+                f"paged cache supports plain attention stacks only "
+                f"(layer kinds: {sorted(kinds)})")
+        if cfg.sliding_window or cfg.cache_quant == "int8":
+            raise NotImplementedError(
+                "paged cache: sliding window / int8 not supported")
+        return self.init_cache(n_phys_pages, page_size, ranks, dtype)
 
     def projections_pytree(self, mp: ModelProjections, dtype=None):
         """Convert solved ModelProjections to the runtime pytree."""

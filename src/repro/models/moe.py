@@ -73,9 +73,17 @@ def _capacity(n_tokens: int, mo: MoEConfig, mode: str) -> int:
 
 
 def moe_ffn(p: Dict, x: jnp.ndarray, mo: MoEConfig, mode: str = "train",
-            n_groups: Optional[int] = None
+            n_groups: Optional[int] = None,
+            token_mask: Optional[jnp.ndarray] = None
             ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
-    """x: (B, S, D) -> (y, aux_losses)."""
+    """x: (B, S, D) -> (y, aux_losses).
+
+    ``token_mask``: optional (B, S) bool of *live* tokens.  Masked
+    tokens (finished/empty serving slots in the fused decode scan) are
+    excluded from capacity assignment — they claim no expert slots, so
+    dead slots cannot crowd live tokens out in dropping configs — and
+    from the router aux statistics.  Their output rows are zero.
+    """
     B, S, D = x.shape
     N = B * S
     E, K = mo.n_experts, mo.top_k
@@ -98,8 +106,14 @@ def moe_ffn(p: Dict, x: jnp.ndarray, mo: MoEConfig, mode: str = "train",
     # computed per group (local to the data shard)
     flat_e = expert_idx.reshape(G, Ng * K)
     onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)      # (G, NgK, E)
+    live = None
+    if token_mask is not None:
+        live = jnp.repeat(token_mask.reshape(G, Ng), K, axis=1)  # (G,NgK)
+        onehot = onehot * live[..., None]    # dead tokens take no slot
     pos_in_e = (jnp.cumsum(onehot, axis=1) * onehot).sum(-1) - 1
     keep = pos_in_e < C                                       # (G, NgK)
+    if live is not None:
+        keep = keep & live
 
     # scatter local token ids into (E, C) slots; sentinel row Ng is zeros
     token_ids = jnp.broadcast_to(
@@ -133,15 +147,29 @@ def moe_ffn(p: Dict, x: jnp.ndarray, mo: MoEConfig, mode: str = "train",
          * gate_vals[..., None].astype(gathered.dtype)).sum(2)
     y = y.reshape(B, S, D)
 
-    # aux losses (f32)
-    me = probs.mean((0, 1))                                  # (E,)
-    ce = (onehot * keep[..., None]).sum((0, 1)).astype(
-        jnp.float32) / (N * K)
+    # aux losses (f32) — over live tokens only when a mask is given
+    if live is None:
+        me = probs.mean((0, 1))                              # (E,)
+        ce = (onehot * keep[..., None]).sum((0, 1)).astype(
+            jnp.float32) / (N * K)
+        dropped = 1.0 - keep.mean()
+        router_z = jnp.mean(
+            jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    else:
+        tok_live = token_mask.reshape(G, Ng).astype(jnp.float32)
+        n_live = jnp.maximum(tok_live.sum(), 1.0)
+        me = (probs * tok_live[..., None]).sum((0, 1)) / n_live
+        ce = (onehot * keep[..., None]).sum((0, 1)).astype(
+            jnp.float32) / (n_live * K)
+        live_choices = tok_live.sum() * K          # 0 if batch all dead
+        dropped = ((live_choices - keep.sum())
+                   / jnp.maximum(live_choices, 1.0))
+        zsq = jax.scipy.special.logsumexp(logits, axis=-1) ** 2
+        router_z = (zsq * tok_live).sum() / n_live
     aux = {
         "load_balance": E * jnp.sum(me * ce),
-        "router_z": jnp.mean(
-            jax.scipy.special.logsumexp(logits, axis=-1) ** 2),
-        "dropped_frac": 1.0 - keep.mean(),
+        "router_z": router_z,
+        "dropped_frac": dropped,
     }
 
     xf = x.reshape(N, D)

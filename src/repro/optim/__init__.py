@@ -4,6 +4,9 @@ from repro.config import TrainConfig
 from repro.optim import adafactor, adamw
 from repro.optim.schedule import learning_rate
 
+__all__ = ["TrainConfig", "adafactor", "adamw", "learning_rate",
+           "init_state", "apply_updates"]
+
 
 def init_state(params, tc: TrainConfig):
     mod = adafactor if tc.optimizer == "adafactor" else adamw

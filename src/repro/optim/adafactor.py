@@ -77,7 +77,8 @@ def apply_updates(params, grads, state, tc: TrainConfig, lr
 
     out = jax.tree_util.tree_map_with_path(upd, params, grads,
                                            state["slots"])
-    is_cell = lambda x: isinstance(x, dict) and "__p" in x
+    def is_cell(x):
+        return isinstance(x, dict) and "__p" in x
     new_params = jax.tree.map(lambda t: t["__p"], out, is_leaf=is_cell)
     new_slots = jax.tree.map(lambda t: t["__slot"], out, is_leaf=is_cell)
     return new_params, {"slots": new_slots, "step": step}, \

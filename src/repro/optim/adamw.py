@@ -18,7 +18,8 @@ from repro.models.layers import dtype_of
 
 def init_state(params, tc: TrainConfig) -> Dict[str, Any]:
     mdt = dtype_of(tc.adam_dtype)
-    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    def zeros(p):
+        return jnp.zeros(p.shape, mdt)
     return {
         "m": jax.tree.map(zeros, params),
         "v": jax.tree.map(zeros, params),
@@ -68,7 +69,8 @@ def apply_updates(params, grads, state, tc: TrainConfig, lr
 
     out = jax.tree_util.tree_map_with_path(upd, params, grads,
                                            state["m"], state["v"])
-    is_cell = lambda t: isinstance(t, dict) and "__p" in t
+    def is_cell(t):
+        return isinstance(t, dict) and "__p" in t
     new_params = jax.tree.map(lambda t: t["__p"], out, is_leaf=is_cell)
     new_m = jax.tree.map(lambda t: t["__m"], out, is_leaf=is_cell)
     new_v = jax.tree.map(lambda t: t["__v"], out, is_leaf=is_cell)

@@ -1,3 +1,23 @@
-from repro.serving.engine import Request, ServingEngine, sample_token
+"""Serving package.
 
-__all__ = ["Request", "ServingEngine", "sample_token"]
+``paged_cache`` is dependency-free (jax/numpy only) and re-exported
+eagerly; the engine symbols resolve lazily (PEP 562) so that lower
+layers (models/kernels) can import ``repro.serving.paged_cache`` at
+module level without pulling ``engine`` -> ``models`` back in a cycle.
+"""
+from repro.serving.paged_cache import (BlockTables, PagePool,
+                                       PagePoolExhausted, append_token,
+                                       gather_pages, pages_needed)
+
+__all__ = ["Request", "ServingEngine", "sample_token", "BlockTables",
+           "PagePool", "PagePoolExhausted", "append_token", "gather_pages",
+           "pages_needed"]
+
+_ENGINE_EXPORTS = ("Request", "ServingEngine", "sample_token")
+
+
+def __getattr__(name):
+    if name in _ENGINE_EXPORTS:
+        from repro.serving import engine
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -2,15 +2,28 @@
 
 True continuous batching over fixed cache slots (DESIGN.md §decode):
 
-* the batched cache is allocated once at (max_batch, max_seq_len); each
-  request prefills alone at its exact prompt length and is inserted into
-  a free slot — no grouping by prompt length, no draining;
+* the batched cache is allocated once; each request prefills alone at
+  its exact prompt length and is inserted into a free slot — no
+  grouping by prompt length, no draining;
 * decode runs as a fused ``lax.scan`` of ``decode_chunk`` steps entirely
   on device: sampling, EOS / ``max_new_tokens`` / capacity masking and
   per-slot position increments all live inside the scan, so the host
   syncs once per chunk instead of once per token;
 * slots whose request finished are refilled from the pending queue at
   the next chunk boundary while the other slots keep decoding.
+
+Two cache layouts (``ServeConfig.paged``):
+
+* **dense** (default, the parity reference): every slot owns a
+  ``max_seq_len`` lane, so HBM scales with the worst-case request;
+* **paged** (DESIGN.md §paged-cache): each layer's cache is a pool of
+  fixed-size pages shared by all slots through a block table.
+  Admission allocates ``ceil(prompt/page_size)`` pages on demand (with
+  backpressure when the pool is short), ``decode_chunk`` headroom is
+  allocated at each chunk boundary so sequences grow page-by-page, and
+  finished slots return their pages to the pool without draining the
+  batch — HBM scales with *occupied pages*, not
+  ``max_batch * max_seq_len``.
 
 Every sequence carries its own position: the decode stack (and on TPU
 the Pallas kernel) masks per-sequence lengths, so a mixed-length batch
@@ -30,7 +43,9 @@ import numpy as np
 from repro.config import ModelConfig, ServeConfig
 from repro.core.calibration import ModelProjections
 from repro.core.compressed import cache_footprint
-from repro.models.model import LM, build_model
+from repro.models.model import build_model
+from repro.serving.paged_cache import (BlockTables, PagePool,
+                                       PagePoolExhausted, pages_needed)
 
 
 @dataclasses.dataclass
@@ -60,10 +75,25 @@ class ServingEngine:
                      if projections is not None else None)
         self.ranks = ((projections.rank_k, projections.rank_v)
                       if projections is not None else (0, 0))
+        if sc.paged:
+            self._validate_paged()
         self._prefill = jax.jit(self._prefill_impl)
         self._insert = jax.jit(self._insert_impl)
+        self._paged_insert = jax.jit(self._paged_insert_impl)
         self._decode_chunk = jax.jit(self._decode_chunk_impl)
         self.rng = jax.random.PRNGKey(sc.seed)
+
+    def _validate_paged(self) -> None:
+        """Fail fast at construction, not mid-serve."""
+        cfg = self.cfg
+        kinds = set(cfg.layer_kinds())
+        if kinds != {"attn"}:
+            raise NotImplementedError(
+                f"paged serving supports plain attention stacks only "
+                f"(layer kinds: {sorted(kinds)})")
+        if cfg.sliding_window or cfg.cache_quant == "int8":
+            raise NotImplementedError(
+                "paged serving: sliding window / int8 not supported")
 
     # -- jitted internals ---------------------------------------------------
 
@@ -92,22 +122,55 @@ class ServingEngine:
                         if cache["steps"] is not None else None)
         return out
 
+    def _paged_insert_impl(self, cache, slot_cache, phys):
+        """Scatter a prefilled slot cache into the page pools.
+
+        ``slot_cache`` leaves are dense (1, Hkv, T, R) (the prefill
+        contract is unchanged); they are cut into (T / page_size) pages
+        and the first ``len(phys)`` — the pages the prompt occupies —
+        are written at the allocated physical ids.  Compiles once per
+        distinct page count, same as prefill per distinct length."""
+        ps = self.sc.page_size
+        n = phys.shape[0]
+
+        def repage0(pool, dense):           # dense (1, Hkv, T, R)
+            hkv, t, r = dense.shape[1:]
+            pages = dense[0].reshape(hkv, t // ps, ps, r).transpose(
+                1, 0, 2, 3)
+            return pool.at[phys].set(pages[:n].astype(pool.dtype))
+
+        def repage1(pool, dense):           # (n_steps, 1, Hkv, T, R)
+            nl, _, hkv, t, r = dense.shape
+            pages = dense[:, 0].reshape(nl, hkv, t // ps, ps, r).transpose(
+                0, 2, 1, 3, 4)
+            return pool.at[:, phys].set(pages[:, :n].astype(pool.dtype))
+
+        out = {"prefix": jax.tree.map(repage0, cache["prefix"],
+                                      slot_cache["prefix"])}
+        out["steps"] = (jax.tree.map(repage1, cache["steps"],
+                                     slot_cache["steps"])
+                        if cache["steps"] is not None else None)
+        return out
+
     def _decode_chunk_impl(self, params, proj, cache, logits, pos, emitted,
-                           max_new, done, trunc, rng):
+                           max_new, done, trunc, rng, block_table):
         """Fused ``decode_chunk``-step decode, fully on device.
 
         logits: (B, V) next-token logits per slot; pos: (B,) index where
         each slot's next token will be written (== live length); the
-        sampled-token / emit-mask streams come back (N, B)."""
+        sampled-token / emit-mask streams come back (N, B).
+        ``block_table`` is None for the dense cache."""
         T = self.sc.max_seq_len
         temp = self.sc.temperature
         eos = self.sc.eos_token
 
-        def decode(cache, tokens, fpos):
+        def decode(cache, tokens, fpos, live):
+            kw: Dict[str, Any] = {"block_table": block_table,
+                                  "token_mask": live}
             if self.proj is not None:
-                return self.model.decode_step(params, cache, tokens, fpos,
-                                              proj=proj)
-            return self.model.decode_step(params, cache, tokens, fpos)
+                kw["proj"] = proj
+            return self.model.decode_step(params, cache, tokens, fpos,
+                                          **kw)
 
         def body(carry, _):
             logits, cache, pos, emitted, done, trunc, rng = carry
@@ -126,16 +189,21 @@ class ServingEngine:
             done = done | full
             active = ~done
             feed_pos = jnp.minimum(pos, T - 1)  # done slots: harmless write
+            # (paged: a freed slot's block-table row points at the
+            # garbage page, so the masked write cannot touch pages that
+            # were recycled to other sequences)
 
             def step(ops):
-                lg, new_cache = decode(ops[0], ops[1][:, None], ops[2])
+                lg, new_cache = decode(ops[0], ops[1][:, None], ops[2],
+                                       ops[3])
                 return lg[:, 0], new_cache
 
             def skip(ops):
                 return logits, ops[0]
 
             new_logits, cache = jax.lax.cond(
-                jnp.any(active), step, skip, (cache, nxt, feed_pos))
+                jnp.any(active), step, skip, (cache, nxt, feed_pos,
+                                              active))
             pos = jnp.where(active, pos + 1, pos)
             return ((new_logits, cache, pos, emitted, done, trunc, rng),
                     (out_tok, emit))
@@ -169,7 +237,25 @@ class ServingEngine:
                     f"request {r.rid}: prompt length {len(r.prompt)}"
                     f" exceeds max_seq_len {T}")
         pending = list(requests)
-        cache = self.model.init_cache(B, T, self.ranks)
+        pool = btabs = None
+        reserved = [0] * B     # worst-case page reservation per slot
+        if sc.paged:
+            pool = PagePool(sc.total_pages)
+            btabs = BlockTables(B, sc.pages_per_seq)
+            self.pool = pool               # introspection (tests/bench)
+            cache = self.model.init_paged_cache(
+                sc.total_pages + 1, sc.page_size, self.ranks)
+        else:
+            cache = self.model.init_cache(B, T, self.ranks)
+
+        def worst_case_pages(r: Request) -> int:
+            """Pages the request can ever occupy (truncation caps the
+            sequence at T).  Admission reserves this up front so page-
+            by-page growth can never strand a live sequence mid-decode
+            (no preemption yet — ROADMAP)."""
+            return pages_needed(min(len(r.prompt) + max(r.max_new_tokens,
+                                                        0), T),
+                                sc.page_size)
         logits = jnp.zeros((B, self.cfg.vocab_size), jnp.float32)
         pos = jnp.zeros((B,), jnp.int32)
         emitted = jnp.zeros((B,), jnp.int32)
@@ -183,11 +269,34 @@ class ServingEngine:
             for b in range(B):
                 if slot_req[b] is not None or not pending:
                     continue
+                if sc.paged:
+                    # admission backpressure: the request's *worst-case*
+                    # footprint must fit the unreserved pool, so growth
+                    # can always be satisfied; otherwise it stays
+                    # pending until finished slots release reservations
+                    worst = worst_case_pages(pending[0])
+                    if worst > pool.n_pages:
+                        raise PagePoolExhausted(
+                            f"request {pending[0].rid}: worst case "
+                            f"{worst} pages exceeds the pool "
+                            f"({pool.n_pages}); raise n_pages or lower "
+                            f"max_new_tokens")
+                    if worst > pool.n_pages - sum(reserved):
+                        break
+                    reserved[b] = worst
                 r = pending.pop(0)
                 prompt = np.asarray(r.prompt, np.int32)
                 plogits, slot_cache = self._prefill(
                     self.params, self.proj, jnp.asarray(prompt)[None])
-                cache = self._insert(cache, slot_cache, np.int32(b))
+                if sc.paged:
+                    phys = pool.alloc(pages_needed(len(prompt),
+                                                   sc.page_size))
+                    btabs.assign(b, phys)
+                    cache = self._paged_insert(cache, slot_cache,
+                                               jnp.asarray(phys,
+                                                           jnp.int32))
+                else:
+                    cache = self._insert(cache, slot_cache, np.int32(b))
                 logits = logits.at[b].set(plogits[0, -1])
                 pos = pos.at[b].set(prompt.shape[0])
                 emitted = emitted.at[b].set(0)
@@ -198,12 +307,39 @@ class ServingEngine:
                 if r.max_new_tokens <= 0:
                     r.done = True
                     slot_req[b] = None
+                    if sc.paged:
+                        btabs.release(b, pool)
+                        reserved[b] = 0
+
+        def ensure_chunk_headroom():
+            """Grow live sequences page-by-page: every live slot gets
+            pages covering the next ``decode_chunk`` tokens before the
+            fused scan runs (the scan itself never allocates).  The
+            admission-time worst-case reservation guarantees this
+            allocation succeeds."""
+            pos_np = np.asarray(pos)
+            for b in range(B):
+                if slot_req[b] is None:
+                    continue
+                need = min(pages_needed(min(int(pos_np[b]) + N, T),
+                                        sc.page_size), reserved[b])
+                have = len(btabs.slot_pages[b])
+                if need > have:
+                    btabs.assign(b, pool.alloc(need - have), start=have)
 
         while pending or any(r is not None for r in slot_req):
             admit_into_free_slots()
+            if not any(r is not None for r in slot_req):
+                if not pending:
+                    break      # everything resolved at admission
+                continue       # e.g. a chain of max_new <= 0 requests
+            btab_dev = None
+            if sc.paged:
+                ensure_chunk_headroom()
+                btab_dev = btabs.device()
             carry, toks, emits = self._decode_chunk(
                 self.params, self.proj, cache, logits, pos, emitted,
-                max_new, done, trunc, self.rng)
+                max_new, done, trunc, self.rng, btab_dev)
             (logits, cache, pos, emitted, done, trunc, self.rng) = carry
             toks_np = np.asarray(toks)            # (N, B)
             emits_np = np.asarray(emits)
@@ -219,4 +355,9 @@ class ServingEngine:
                     r.done = True
                     r.truncated = bool(trunc_np[b])
                     slot_req[b] = None
+                    if sc.paged:
+                        # pages go back to the pool without draining the
+                        # batch; the row resets to the garbage page
+                        btabs.release(b, pool)
+                        reserved[b] = 0
         return requests

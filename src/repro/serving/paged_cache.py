@@ -1,0 +1,152 @@
+"""Paged KV cache: page pool, block tables, paged append/gather.
+
+DESIGN.md §paged-cache.  The dense serving cache allocates every slot at
+``max_seq_len`` so HBM scales with the worst-case request.  Here each
+attention layer's cache is a *pool* of fixed-size pages
+
+    kc: (P, Hkv, page_size, R_k)    vc: (P, Hkv, page_size, R_v)
+
+and a single block table (shared by all layers, vLLM-style) maps
+``(slot, logical_page) -> physical_page``.  A sequence of length L owns
+``ceil(L / page_size)`` pages, so a mixed-length batch occupies
+``sum_b ceil(len_b / ps)`` pages of HBM instead of ``B * max_seq_len``
+— the same low-rank compressed ``R_k/R_v`` layout the paper pays for,
+just allocated on demand (LoRC keeps compression *inside* the pages).
+
+Pool invariants (enforced by ``PagePool``):
+
+* physical page 0 is the **garbage page**: never allocated, never
+  freed.  Freed slots' block-table rows are reset to 0, so masked
+  writes from finished slots in the fused decode scan land in garbage
+  instead of corrupting pages that were recycled to live sequences;
+* every allocatable page is owned by at most one slot (``alloc`` pops
+  from a free list, double-``free`` raises);
+* allocation is host-side and happens only at chunk boundaries
+  (admission + ``ensure_capacity`` headroom for the next
+  ``decode_chunk`` tokens), so the fused decode scan never allocates.
+
+The device-side primitives (``append_token``, ``gather_pages``) are
+pure jnp and jit-safe; the allocator is plain numpy/Python host state.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+GARBAGE_PAGE = 0
+
+
+class PagePoolExhausted(RuntimeError):
+    """No free pages left for a required allocation."""
+
+
+class PagePool:
+    """Host-side free-list allocator over ``n_pages`` physical pages.
+
+    Physical ids run ``1 .. n_pages`` (0 is the reserved garbage page);
+    the backing arrays are sized ``n_pages + 1``.
+    """
+
+    def __init__(self, n_pages: int):
+        assert n_pages >= 1, "pool needs at least one allocatable page"
+        self.n_pages = n_pages
+        self._free: List[int] = list(range(n_pages, 0, -1))  # pop() -> 1..
+        self._owned = np.zeros(n_pages + 1, bool)
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_count(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        """Pop ``n`` pages; raises PagePoolExhausted (allocating none)
+        if fewer than ``n`` are free."""
+        if n > len(self._free):
+            raise PagePoolExhausted(
+                f"need {n} pages, {len(self._free)} free"
+                f" (pool of {self.n_pages})")
+        pages = [self._free.pop() for _ in range(n)]
+        self._owned[pages] = True
+        return pages
+
+    def free(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            if p == GARBAGE_PAGE:
+                raise ValueError("cannot free the garbage page")
+            if not self._owned[p]:
+                raise ValueError(f"double free of page {p}")
+            self._owned[p] = False
+            self._free.append(p)
+
+
+def pages_needed(n_tokens: int, page_size: int) -> int:
+    """Pages required to hold ``n_tokens`` cache entries."""
+    return -(-max(n_tokens, 0) // page_size)
+
+
+class BlockTables:
+    """Per-slot block tables: host numpy state + device export.
+
+    ``rows[b, j]`` is the physical page holding logical page ``j`` of
+    slot ``b``; unallocated entries point at the garbage page.
+    """
+
+    def __init__(self, n_slots: int, pages_per_seq: int):
+        self.rows = np.zeros((n_slots, pages_per_seq), np.int32)
+        self.slot_pages: List[List[int]] = [[] for _ in range(n_slots)]
+
+    def assign(self, slot: int, pages: Sequence[int], start: int = 0
+               ) -> None:
+        """Append ``pages`` to ``slot`` starting at logical page
+        ``start`` (== pages already owned)."""
+        assert start == len(self.slot_pages[slot])
+        self.rows[slot, start: start + len(pages)] = pages
+        self.slot_pages[slot].extend(pages)
+
+    def release(self, slot: int, pool: PagePool) -> None:
+        """Return the slot's pages to ``pool``; row resets to garbage."""
+        pool.free(self.slot_pages[slot])
+        self.slot_pages[slot] = []
+        self.rows[slot, :] = GARBAGE_PAGE
+
+    def device(self) -> jnp.ndarray:
+        return jnp.asarray(self.rows)
+
+
+# ---------------------------------------------------------------------------
+# Device-side paged primitives (pure jnp, jit-safe)
+# ---------------------------------------------------------------------------
+
+
+def append_token(pool: jnp.ndarray, block_table: jnp.ndarray,
+                 pos: jnp.ndarray, val: jnp.ndarray) -> jnp.ndarray:
+    """Write one new cache entry per sequence through the block table.
+
+    pool: (P, Hkv, ps, R); block_table: (B, n_pages) int32; pos: (B,)
+    destination position of each sequence; val: (B, Hkv, R).  Dead
+    slots point at the garbage page, so their (masked) writes are
+    harmless by construction.
+    """
+    ps = pool.shape[2]
+    b = jnp.arange(pos.shape[0])
+    phys = block_table[b, pos // ps]                        # (B,)
+    return pool.at[phys, :, pos % ps].set(val.astype(pool.dtype))
+
+
+def gather_pages(pool: jnp.ndarray, block_table: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """Materialize each slot's logical cache from its pages.
+
+    pool: (P, Hkv, ps, R) -> (B, n_pages * ps, ...) gathered per slot,
+    returned as (B, Hkv, n_pages * ps, R).  This is the lax reference
+    path (and test oracle); the Pallas paged kernel reads the same
+    pages in place via the block table instead of materializing.
+    """
+    g = pool[block_table]                                   # (B,n,Hkv,ps,R)
+    B, n, Hkv, ps, R = g.shape
+    return g.transpose(0, 2, 1, 3, 4).reshape(B, Hkv, n * ps, R)

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import contextlib
 import contextvars
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax
 import numpy as np

@@ -10,13 +10,13 @@ KQ-SVD-compressed variants.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 from repro import optim
-from repro.config import ModelConfig, TrainConfig
+from repro.config import TrainConfig
 from repro.models.model import LM
 from repro.optim.schedule import learning_rate
 from repro.train.losses import total_loss

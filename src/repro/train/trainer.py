@@ -17,7 +17,7 @@ from __future__ import annotations
 import signal
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Iterator, List, Optional
+from typing import Callable, Dict, Iterator, List, Optional
 
 import jax
 import numpy as np
@@ -25,7 +25,7 @@ import numpy as np
 from repro import optim
 from repro.checkpoint.manager import CheckpointManager
 from repro.config import ModelConfig, TrainConfig
-from repro.models.model import LM, build_model
+from repro.models.model import build_model
 from repro.sharding.partition import use_mesh
 from repro.train.steps import make_train_step
 

@@ -4,8 +4,6 @@ import numpy as np
 
 from repro.config import CompressionConfig
 from repro.core.calibration import GramAccumulator
-from repro.core.projections import key_projection_from_caches
-from repro.core.theory import score_error
 
 
 def test_streaming_equals_oneshot(rng):
@@ -74,7 +72,6 @@ def test_energy_rank_selection_varies_with_spectrum(rng):
 def test_device_calibrate_step_matches_host():
     """pjit-able Gram accumulation == host GramAccumulator path."""
     import jax
-    import jax.numpy as jnp
     from repro.configs import get_config
     from repro.core.calibration import (accumulator_from_grams,
                                         make_calibrate_step)

@@ -1,0 +1,103 @@
+"""Regression-gate unit tests on synthetic bench payload pairs."""
+
+from benchmarks.check_regression import compare, merge_min, rows_to_payload
+
+
+def payload(mode="quick", **rows):
+    out = []
+    for name, us in rows.items():
+        out.append({"name": name, "us_per_call": us, "derived": ""})
+    return {"mode": mode, "rows": out}
+
+
+def test_within_threshold_passes():
+    base = payload(decode_full_cache=1000.0, decode_varlen_full=500.0)
+    fresh = payload(decode_full_cache=1200.0, decode_varlen_full=540.0)
+    failures, skip = compare(base, fresh, threshold=1.3)
+    assert failures == [] and skip is None
+
+
+def test_regression_fails():
+    base = payload(decode_full_cache=1000.0, decode_varlen_full=500.0)
+    fresh = payload(decode_full_cache=1400.0, decode_varlen_full=500.0)
+    failures, skip = compare(base, fresh, threshold=1.3)
+    assert skip is None
+    assert len(failures) == 1
+    assert "decode_full_cache" in failures[0]
+
+
+def test_uniform_load_inflation_is_normalized():
+    """Every row 2x slower == slower machine/CI runner, not a code
+    regression: the load scale cancels and the gate passes."""
+    base = payload(decode_full_cache=1000.0, decode_varlen_full=500.0)
+    fresh = payload(decode_full_cache=2000.0, decode_varlen_full=1000.0)
+    failures, skip = compare(base, fresh, threshold=1.3)
+    assert failures == [] and skip is None
+
+
+def test_single_row_regression_under_load_still_fails():
+    base = payload(decode_full_cache=1000.0, decode_varlen_full=500.0)
+    fresh = payload(decode_full_cache=2000.0, decode_varlen_full=2000.0)
+    failures, skip = compare(base, fresh, threshold=1.3)
+    assert len(failures) == 1
+    assert "decode_varlen_full" in failures[0]
+
+
+def test_faster_rows_do_not_loosen_the_gate():
+    """One optimized row must not mask another row's regression (the
+    scale clamps at 1.0)."""
+    base = payload(decode_full_cache=1000.0, decode_varlen_full=500.0)
+    fresh = payload(decode_full_cache=200.0, decode_varlen_full=700.0)
+    failures, skip = compare(base, fresh, threshold=1.3)
+    assert len(failures) == 1
+    assert "decode_varlen_full" in failures[0]
+
+
+def test_uniform_regression_beyond_max_scale_fails():
+    """Normalization must not hide a repo-wide slowdown forever: past
+    the absolute max_scale backstop the gate fails outright."""
+    base = payload(decode_full_cache=1000.0, decode_varlen_full=500.0)
+    fresh = payload(decode_full_cache=6000.0, decode_varlen_full=3000.0)
+    failures, skip = compare(base, fresh, threshold=1.3, max_scale=5.0)
+    assert len(failures) == 1
+    assert "uniform regression" in failures[0]
+
+
+def test_mode_mismatch_skips():
+    base = payload(mode="full", decode_full_cache=1000.0)
+    fresh = payload(mode="quick", decode_full_cache=9000.0)
+    failures, skip = compare(base, fresh, threshold=1.3)
+    assert failures == []
+    assert "mode mismatch" in skip
+
+
+def test_empty_baseline_skips():
+    failures, skip = compare({"mode": "quick", "rows": []}, payload())
+    assert failures == [] and skip is not None
+
+
+def test_ratio_and_new_rows_ignored():
+    base = payload(decode_speedup=10.0)
+    fresh = payload(decode_speedup=1.0, decode_paged_full=123.0)
+    failures, skip = compare(base, fresh, threshold=1.3)
+    assert failures == []
+    assert skip == "no comparable step-cost rows"
+
+
+def test_merge_min_takes_per_row_minimum():
+    a = payload(decode_full_cache=1400.0, decode_varlen_full=400.0)
+    b = payload(decode_full_cache=900.0, decode_varlen_full=600.0)
+    merged = merge_min(a, b)
+    by_name = {r["name"]: r["us_per_call"] for r in merged["rows"]}
+    assert by_name["decode_full_cache"] == 900.0
+    assert by_name["decode_varlen_full"] == 400.0
+
+
+def test_rows_to_payload_filters_decode_rows():
+    rows = [
+        ("decode_full_cache", 10.0, "x"),
+        ("calibration_solve", 99.0, "y"),
+    ]
+    p = rows_to_payload(rows, "quick")
+    assert [r["name"] for r in p["rows"]] == ["decode_full_cache"]
+    assert p["mode"] == "quick"

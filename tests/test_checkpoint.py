@@ -1,5 +1,4 @@
 """Checkpoint manager: roundtrip, async, GC, damage fallback."""
-import json
 import os
 
 import jax

@@ -1,6 +1,5 @@
 """Per-arch smoke tests: reduced config, one forward + one train step on
 CPU, asserting output shapes + no NaNs (assignment requirement)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -11,7 +10,6 @@ from conftest import dropless, make_batch
 from repro.config import TrainConfig
 from repro.configs import get_config, list_archs
 from repro.models import build_model
-from repro.train.losses import total_loss
 from repro.train.steps import make_train_step
 from repro import optim
 

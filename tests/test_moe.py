@@ -1,5 +1,4 @@
 """MoE dispatch correctness, capacity behavior, aux losses."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -78,6 +77,45 @@ def test_gate_weights_normalized():
     ref = swiglu(dense, x)
     np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-4,
                                atol=1e-5)
+
+
+def test_dead_tokens_do_not_consume_capacity():
+    """Masked (finished/empty serving slot) tokens must not crowd live
+    tokens out of expert capacity in dropping configs (ROADMAP bugfix:
+    MoE router masking for dead slots in the fused decode scan)."""
+    D = 8
+    mo = MoEConfig(n_experts=2, top_k=1, expert_ff=16,
+                   capacity_factor=0.5)
+    p = init_moe(jax.random.PRNGKey(0), D, mo, jnp.float32)
+    # route every token to expert 0: capacity C = ceil(8*0.5/2) = 2
+    router = jnp.zeros_like(p["router"]).at[:, 0].set(1.0)
+    p = dict(p, router=router)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 1, D))
+    _, aux_all = moe_ffn(p, x, mo, mode="train")
+    assert float(aux_all["dropped_frac"]) > 0.0      # crowded without mask
+    mask = jnp.zeros((8, 1), bool).at[:2].set(True)  # 2 live, 6 dead
+    y, aux = moe_ffn(p, x, mo, mode="train", token_mask=mask)
+    assert float(aux["dropped_frac"]) == 0.0         # live tokens all fit
+    # dead rows contribute nothing
+    np.testing.assert_array_equal(np.asarray(y[2:]),
+                                  np.zeros_like(np.asarray(y[2:])))
+    # live rows equal the dropless oracle (no mask, capacity = N)
+    mo_free = MoEConfig(n_experts=2, top_k=1, expert_ff=16,
+                        capacity_factor=float(mo.n_experts))
+    y_free, _ = moe_ffn(p, x, mo_free, mode="train")
+    np.testing.assert_allclose(np.asarray(y[:2]), np.asarray(y_free[:2]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_all_tokens_masked_is_finite():
+    mo = MoEConfig(n_experts=2, top_k=1, expert_ff=16)
+    p = init_moe(jax.random.PRNGKey(0), 8, mo, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 1, 8))
+    y, aux = moe_ffn(p, x, mo, mode="decode",
+                     token_mask=jnp.zeros((4, 1), bool))
+    assert np.isfinite(np.asarray(y)).all()
+    assert float(aux["dropped_frac"]) == 0.0
+    np.testing.assert_array_equal(np.asarray(y), np.zeros_like(y))
 
 
 def test_grouped_dispatch_matches_ungrouped():

@@ -1,0 +1,284 @@
+"""Paged KV cache: pool invariants, paged kernel parity, paged serving
+(DESIGN.md §paged-cache).  The dense path is the oracle throughout."""
+import dataclasses
+
+import pytest
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import CompressionConfig, ServeConfig
+from repro.configs import get_config
+from repro.core.calibration import GramAccumulator
+from repro.kernels.kq_decode import (kq_decode_attention_op,
+                                     kq_decode_attention_ref,
+                                     kq_decode_paged_attention_op,
+                                     kq_decode_paged_attention_ref)
+from repro.models import build_model
+from repro.serving import (PagePool, PagePoolExhausted, Request,
+                           ServingEngine, pages_needed)
+
+
+# ---------------------------------------------------------------------------
+# PagePool / block-table invariants
+# ---------------------------------------------------------------------------
+
+
+def test_pool_alloc_free_roundtrip():
+    pool = PagePool(4)
+    assert pool.free_count == 4
+    a = pool.alloc(3)
+    assert len(set(a)) == 3 and 0 not in a       # unique, never garbage
+    assert pool.free_count == 1
+    pool.free(a[:2])
+    assert pool.free_count == 3
+    b = pool.alloc(3)
+    assert 0 not in b and pool.free_count == 0
+    assert set(b) & set(a[:2])                    # freed pages recycle
+
+
+def test_pool_exhaustion_allocates_nothing():
+    pool = PagePool(2)
+    pool.alloc(1)
+    with pytest.raises(PagePoolExhausted):
+        pool.alloc(2)
+    assert pool.free_count == 1                   # failed alloc took none
+
+
+def test_pool_double_free_and_garbage_guard():
+    pool = PagePool(2)
+    pages = pool.alloc(1)
+    pool.free(pages)
+    with pytest.raises(ValueError):
+        pool.free(pages)
+    with pytest.raises(ValueError):
+        pool.free([0])
+
+
+def test_pages_needed():
+    assert pages_needed(0, 8) == 0
+    assert pages_needed(1, 8) == 1
+    assert pages_needed(8, 8) == 1
+    assert pages_needed(9, 8) == 2
+
+
+# ---------------------------------------------------------------------------
+# Paged kernel vs oracles
+# ---------------------------------------------------------------------------
+
+
+def _paged_setup(B, Hkv, n_pages, ps, Rk, Rv, seed=0):
+    """Pool + *scrambled* block table: physical ids deliberately do not
+    follow logical order, so parity only holds if the kernel really
+    dereferences the table."""
+    P = 1 + B * n_pages
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    kc = jax.random.normal(ks[1], (P, Hkv, ps, Rk))
+    vc = jax.random.normal(ks[2], (P, Hkv, ps, Rv))
+    perm = np.random.default_rng(seed).permutation(np.arange(1, P))
+    btab = jnp.asarray(perm[: B * n_pages].reshape(B, n_pages), jnp.int32)
+    return ks[0], kc, vc, btab
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,Hkv,n_pages,ps,Rk,Rv,lengths", [
+    (2, 4, 2, 4, 16, 16, 16, (64, 7)),            # full + short
+    (3, 4, 2, 5, 8, 16, 8, (40, 8, 9)),           # page-boundary edges
+    (1, 8, 4, 3, 16, 8, 16, (17,)),               # crosses into page 2
+    (2, 2, 2, 2, 32, 16, 16, (1, 33)),
+])
+def test_paged_kernel_matches_ref(B, H, Hkv, n_pages, ps, Rk, Rv, lengths,
+                                  dtype):
+    kq, kc, vc, btab = _paged_setup(B, Hkv, n_pages, ps, Rk, Rv)
+    qc = jax.random.normal(kq, (B, H, Rk)).astype(dtype)
+    kc, vc = kc.astype(dtype), vc.astype(dtype)
+    lens = jnp.asarray(lengths, jnp.int32)
+    out = kq_decode_paged_attention_op(qc, kc, vc, lens, btab, scale=0.25)
+    ref = kq_decode_paged_attention_ref(qc, kc, vc, lens, btab, scale=0.25)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_paged_kernel_matches_dense_kernel():
+    """Gathering the pages into a dense cache and running the dense
+    varlen kernel must agree with the paged kernel on the same data."""
+    B, H, Hkv, n_pages, ps, Rk, Rv = 2, 4, 2, 4, 16, 16, 16
+    kq, kc, vc, btab = _paged_setup(B, Hkv, n_pages, ps, Rk, Rv, seed=3)
+    qc = jax.random.normal(kq, (B, H, Rk))
+    lens = jnp.asarray([50, 16], jnp.int32)
+    from repro.serving import gather_pages
+    kd = gather_pages(kc, btab)
+    vd = gather_pages(vc, btab)
+    out_p = kq_decode_paged_attention_op(qc, kc, vc, lens, btab, scale=0.2)
+    out_d = kq_decode_attention_op(qc, kd, vd, lens, block_t=ps, scale=0.2)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_d),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_lane_padding_non_multiple_ranks():
+    """Arbitrary calibrated ranks: the op wrapper pads R_k/R_v to lane
+    multiples and slices back bit-identically (forced on here; on real
+    TPU it triggers automatically)."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    B, H, Hkv, T, Rk, Rv = 2, 4, 2, 48, 20, 12        # 20, 12 % 128 != 0
+    qc = jax.random.normal(ks[0], (B, H, Rk))
+    kc = jax.random.normal(ks[1], (B, Hkv, T, Rk))
+    vc = jax.random.normal(ks[2], (B, Hkv, T, Rv))
+    lens = jnp.asarray([48, 5], jnp.int32)
+    out = kq_decode_attention_op(qc, kc, vc, lens, block_t=16, scale=0.3,
+                                 pad_lanes=True)
+    ref = kq_decode_attention_ref(qc, kc, vc, lens, scale=0.3)
+    assert out.shape == ref.shape == (B, H, Rv)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_lane_padding_paged():
+    B, H, Hkv, n_pages, ps, Rk, Rv = 2, 4, 2, 3, 16, 20, 12
+    kq, kc, vc, btab = _paged_setup(B, Hkv, n_pages, ps, Rk, Rv, seed=9)
+    qc = jax.random.normal(kq, (B, H, Rk))
+    lens = jnp.asarray([30, 17], jnp.int32)
+    out = kq_decode_paged_attention_op(qc, kc, vc, lens, btab, scale=0.3,
+                                       pad_lanes=True)
+    ref = kq_decode_paged_attention_ref(qc, kc, vc, lens, btab, scale=0.3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Paged serving == dense serving
+# ---------------------------------------------------------------------------
+
+
+def _tiny(compressed=False, use_pallas=False, rank=None):
+    cfg = get_config("tinyllama-1.1b").reduced()
+    if use_pallas:
+        cfg = dataclasses.replace(cfg, use_pallas=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    proj = None
+    if compressed:
+        acc = GramAccumulator(len(model.attn_layers))
+        for i in range(2):
+            toks = jax.random.randint(jax.random.PRNGKey(5 + i), (2, 32),
+                                      0, cfg.vocab_size)
+            caps = model.calibrate(params, toks)
+            acc.update_from_captures([jax.tree.map(np.asarray, c)
+                                      for c in caps])
+        ccfg = CompressionConfig(method="kqsvd",
+                                 rank_k=rank or cfg.d_head,
+                                 rank_v=rank or cfg.d_head)
+        proj = acc.solve(ccfg, model.group_output_weights(params))
+    return cfg, model, params, proj
+
+
+def _run(cfg, params, proj, sc, prompts, max_new=6):
+    eng = ServingEngine(cfg, params, sc, projections=proj)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+    eng.generate(reqs)
+    return eng, reqs
+
+
+def _mixed_prompts(cfg, lens, seed=3):
+    rng_ = np.random.default_rng(seed)
+    return [rng_.integers(0, cfg.vocab_size, n).astype(np.int32)
+            for n in lens]
+
+
+def test_paged_engine_matches_dense_mixed_lengths():
+    """Mixed prompt lengths crossing page boundaries, more requests than
+    slots (forces refill into freed pages): token-identical to the
+    dense engine."""
+    cfg, model, params, _ = _tiny()
+    prompts = _mixed_prompts(cfg, [3, 9, 6, 12, 5, 8])   # 8, 9 straddle ps=8
+    sc = ServeConfig(max_seq_len=32, max_batch=4, temperature=0.0,
+                     decode_chunk=4)
+    _, dense = _run(cfg, params, None, sc, prompts)
+    sc_p = dataclasses.replace(sc, paged=True, page_size=8)
+    eng, paged = _run(cfg, params, None, sc_p, prompts)
+    for d, p in zip(dense, paged):
+        assert d.out_tokens == p.out_tokens, d.rid
+        assert p.done and not p.truncated
+    # every page returned to the pool once the batch drained
+    assert eng.pool.free_count == eng.pool.n_pages
+
+
+def test_paged_engine_compressed_pallas_kernel():
+    """Compressed cache + use_pallas: the paged Pallas kernel runs
+    inside the fused decode scan and matches the dense engine."""
+    cfg, model, params, proj = _tiny(compressed=True, use_pallas=True)
+    prompts = _mixed_prompts(cfg, [4, 11, 7], seed=5)
+    sc = ServeConfig(max_seq_len=32, max_batch=2, temperature=0.0,
+                     decode_chunk=4)
+    _, dense = _run(cfg, params, proj, sc, prompts, max_new=5)
+    sc_p = dataclasses.replace(sc, paged=True, page_size=8)
+    _, paged = _run(cfg, params, proj, sc_p, prompts, max_new=5)
+    for d, p in zip(dense, paged):
+        assert d.out_tokens == p.out_tokens, d.rid
+
+
+def test_paged_engine_oversubscribed_pool_reuses_freed_pages():
+    """A pool sized for ~one request at a time: admission backpressure
+    holds later requests pending until freed pages return, and outputs
+    stay identical to the dense engine."""
+    cfg, model, params, _ = _tiny()
+    prompts = _mixed_prompts(cfg, [9, 7, 10], seed=11)
+    sc = ServeConfig(max_seq_len=32, max_batch=2, temperature=0.0,
+                     decode_chunk=4)
+    _, dense = _run(cfg, params, None, sc, prompts)
+    # 3 pages: fits one request (prompt<=10 tokens + 6 new < 3*8) but
+    # never two concurrently -> the second/third must reuse freed pages
+    sc_p = dataclasses.replace(sc, paged=True, page_size=8, n_pages=3)
+    eng, paged = _run(cfg, params, None, sc_p, prompts)
+    for d, p in zip(dense, paged):
+        assert d.out_tokens == p.out_tokens, d.rid
+    assert eng.pool.free_count == 3
+
+
+def test_paged_engine_pool_exhaustion_prompt():
+    """A prompt that cannot ever fit the pool raises, not hangs."""
+    cfg, model, params, _ = _tiny()
+    sc = ServeConfig(max_seq_len=32, max_batch=2, paged=True, page_size=8,
+                     n_pages=1)
+    eng = ServingEngine(cfg, params, sc)
+    prompt = _mixed_prompts(cfg, [12])[0]            # needs 2 pages > 1
+    with pytest.raises(PagePoolExhausted):
+        eng.generate([Request(rid=0, prompt=prompt, max_new_tokens=4)])
+
+
+def test_paged_engine_pool_exhaustion_growth():
+    """A request whose worst-case growth exceeds the whole pool raises
+    at admission (reservation admission control), not mid-decode."""
+    cfg, model, params, _ = _tiny()
+    sc = ServeConfig(max_seq_len=32, max_batch=1, paged=True, page_size=8,
+                     n_pages=1, decode_chunk=4)
+    eng = ServingEngine(cfg, params, sc)
+    prompt = _mixed_prompts(cfg, [5])[0]             # 1 page, then grows
+    with pytest.raises(PagePoolExhausted):
+        eng.generate([Request(rid=0, prompt=prompt, max_new_tokens=12)])
+
+
+def test_paged_engine_truncation_matches_dense():
+    cfg, model, params, _ = _tiny()
+    prompts = _mixed_prompts(cfg, [10], seed=13)
+    sc = ServeConfig(max_seq_len=16, max_batch=2, decode_chunk=4)
+    _, dense = _run(cfg, params, None, sc, prompts, max_new=10)
+    sc_p = dataclasses.replace(sc, paged=True, page_size=8)
+    _, paged = _run(cfg, params, None, sc_p, prompts, max_new=10)
+    assert dense[0].out_tokens == paged[0].out_tokens
+    assert paged[0].done and paged[0].truncated
+
+
+def test_paged_rejects_unsupported_configs():
+    cfg, model, params, _ = _tiny()
+    cfg_w = dataclasses.replace(cfg, sliding_window=16)
+    params_w = build_model(cfg_w).init(jax.random.PRNGKey(0))
+    sc = ServeConfig(max_seq_len=32, max_batch=2, paged=True, page_size=8)
+    with pytest.raises(NotImplementedError):
+        ServingEngine(cfg_w, params_w, sc)
+    with pytest.raises(ValueError):                  # T % page_size != 0
+        ServeConfig(max_seq_len=20, max_batch=2, paged=True, page_size=8)

@@ -3,10 +3,9 @@ import numpy as np
 import pytest
 
 from repro.core.projections import (Factors, key_projection_from_caches,
-                                    kq_singular_values, solve_kq_svd,
+                                    kq_singular_values,
                                     value_projection_from_caches)
-from repro.core.theory import (ksvd_error, opt_error, score_error,
-                               thm3_gap)
+from repro.core.theory import ksvd_error, score_error, thm3_gap
 
 
 def low_rank_ish(rng, T, d, decay=3.0):

@@ -1,5 +1,4 @@
 """Roofline analytics: packed pairs, useful bytes, flops model, terms."""
-import numpy as np
 
 from repro.config import SHAPES
 from repro.configs import get_config

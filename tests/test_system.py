@@ -4,7 +4,6 @@ The full lifecycle a deployment would run, on a reduced config: a few
 training steps, paper-style calibration, KQ-SVD solve at eps, compressed
 serving, and the accounting that justifies it.
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +15,6 @@ from repro.configs import get_config
 from repro.core.calibration import calibrate_model
 from repro.core.compressed import cache_footprint, projection_param_bytes
 from repro.data import DataConfig, batches, calibration_batches
-from repro.models import build_model
 from repro.serving import Request, ServingEngine
 from repro.train import Trainer
 

@@ -3,7 +3,6 @@ detection, preemption save."""
 import time
 
 import numpy as np
-import pytest
 
 from repro.config import TrainConfig
 from repro.configs import get_config
