@@ -9,7 +9,11 @@ measured step-latency ratios.  The ``decode_varlen_*`` rows drive the
 lengths-aware kernel at several occupancy levels of the same allocated
 cache: the time grid is bounded by the actual max length, so the cost of
 a decode step tracks ``max(lengths)``, not ``max_seq_len``
-(DESIGN.md §decode).
+(DESIGN.md §decode).  The ``decode_ttft_*`` / ``decode_mixed_step``
+rows price chunked page-direct prefill against the dense-staging
+oracle and the piggybacked prefill+decode step (DESIGN.md §prefill);
+their quotients feed the machine-normalized regression gate
+(``check_regression.RATIO_PAIRS``).
 """
 from __future__ import annotations
 
@@ -22,10 +26,11 @@ import numpy as np
 from benchmarks.common import Row, timed
 from repro.core.compressed import cache_footprint
 from repro.kernels.kq_decode import (kq_decode_attention_op,
-                                     kq_decode_paged_attention_op)
+                                     kq_decode_paged_attention_op,
+                                     kq_prefill_paged_attention_op)
 from repro.models.attention import (decode_attention,
                                     int8_decode_attention, quantize_int8)
-from repro.serving.paged_cache import pages_needed
+from repro.serving.paged_cache import append_chunk, pages_needed
 
 
 def _hbm_bytes(*arrays) -> int:
@@ -118,6 +123,7 @@ def run(B: int = 4, Hkv: int = 8, m: int = 8, T: int = 4096,
     dense_hbm = Bv * T * Gv * 2 * R * kp.dtype.itemsize
     perm = np.random.default_rng(0).permutation(
         np.arange(1, n_phys, dtype=np.int32))
+    lens_full = btab_full = None
     for frac, tag in ((1.0, "full"), (0.5, "half"), (0.125, "eighth")):
         L = max(ps, int(T * frac))
         lens = jnp.linspace(L // 2, L, Bv).astype(jnp.int32)
@@ -129,6 +135,8 @@ def run(B: int = 4, Hkv: int = 8, m: int = 8, T: int = 4096,
             n_b = pages_needed(int(x), ps)
             btab[b, :n_b] = perm[nxt: nxt + n_b]
             nxt += n_b
+        if tag == "full":
+            lens_full, btab_full = lens, jnp.asarray(btab)
         _, us = timed(kq_decode_paged_attention_op, qc2, kp, vp, lens,
                       jnp.asarray(btab), reps=5, scale=scale, max_len=L)
         rows.append((f"decode_paged_{tag}", us,
@@ -140,6 +148,81 @@ def run(B: int = 4, Hkv: int = 8, m: int = 8, T: int = 4096,
         print(f"paged[{tag}]: max_len={L} pages={occupied}/"
               f"{Bv * pages_per_seq} {us:.0f}us "
               f"hbm={occupied * page_bytes}B (dense {dense_hbm}B)")
+
+    # -- chunked prefill into pages (DESIGN.md §prefill): time-to-first-
+    # token through bucket-compiled chunk writes vs the exact-length
+    # dense-staging oracle, whose (1, alloc_T) buffer is the worst-case
+    # HBM spike the chunked path removes; plus the sarathi-style mixed
+    # step that piggybacks one prefill chunk on a decode iteration.
+    C = 2 * ps
+    Lp = T // 2
+    n_chunks = Lp // C
+    n_prompt_pages = Lp // ps
+    btab1 = jnp.asarray(perm[:pages_per_seq][None, :])       # one slot
+    kq = jax.random.split(jax.random.PRNGKey(7), 3)
+    q_ch = jax.random.normal(kq[0], (n_chunks, 1, Gv * m, C, R), dt)
+    k_ch = jax.random.normal(kq[1], (n_chunks, 1, Gv, C, R), dt)
+    v_ch = jax.random.normal(kq[2], (n_chunks, 1, Gv, C, R), dt)
+    kp0 = jnp.zeros_like(kp)
+    vp0 = jnp.zeros_like(vp)
+    append_j = jax.jit(append_chunk)
+    valid1 = jnp.ones((1, C), bool)
+
+    def prefill_chunk_call(i, kpool, vpool):
+        pos0 = jnp.asarray([i * C], jnp.int32)
+        kpool = append_j(kpool, btab1, pos0, k_ch[i], valid1)
+        vpool = append_j(vpool, btab1, pos0, v_ch[i], valid1)
+        out = kq_prefill_paged_attention_op(
+            q_ch[i], kpool, vpool, jnp.asarray([(i + 1) * C], jnp.int32),
+            pos0, btab1, scale=scale, max_len=Lp)
+        return out, kpool, vpool
+
+    def ttft_chunked():      # one compile per bucket, reused every chunk
+        kpool, vpool, out = kp0, vp0, None
+        for i in range(n_chunks):
+            out, kpool, vpool = prefill_chunk_call(i, kpool, vpool)
+        return out
+
+    q_all = jnp.concatenate(list(q_ch), axis=2)              # (1,H,Lp,R)
+    k_all = jnp.concatenate(list(k_ch), axis=2)
+    v_all = jnp.concatenate(list(v_ch), axis=2)
+    phys1 = btab1[0, :n_prompt_pages]
+
+    @jax.jit
+    def ttft_staged():       # exact-length oracle: one compile per length
+        stage_k = jnp.zeros((1, Gv, T, R), dt).at[:, :, :Lp].set(k_all)
+        stage_v = jnp.zeros((1, Gv, T, R), dt).at[:, :, :Lp].set(v_all)
+        pk = stage_k[0].reshape(Gv, T // ps, ps, R).transpose(1, 0, 2, 3)
+        pv = stage_v[0].reshape(Gv, T // ps, ps, R).transpose(1, 0, 2, 3)
+        kpool = kp0.at[phys1].set(pk[:n_prompt_pages])
+        vpool = vp0.at[phys1].set(pv[:n_prompt_pages])
+        return kq_prefill_paged_attention_op(
+            q_all, kpool, vpool, jnp.asarray([Lp], jnp.int32),
+            jnp.asarray([0], jnp.int32), btab1, scale=scale, max_len=Lp)
+
+    def mixed_step():        # overlap iteration: decode batch + 1 chunk
+        o1 = kq_decode_paged_attention_op(qc2, kp, vp, lens_full,
+                                          btab_full, scale=scale,
+                                          max_len=T)
+        o2, _, _ = prefill_chunk_call(0, kp0, vp0)
+        return o1, o2
+
+    _, us_ttft_c = timed(ttft_chunked)
+    _, us_ttft_s = timed(ttft_staged)
+    _, us_mixed = timed(mixed_step, reps=5)
+    chunk_buf = 2 * Gv * C * R * kp.dtype.itemsize
+    stage_buf = 2 * Gv * T * R * kp.dtype.itemsize
+    rows.append(("decode_ttft_chunked", us_ttft_c,
+                 f"prompt={Lp};chunk={C};n_chunks={n_chunks};"
+                 f"chunk_buf_bytes={chunk_buf};page_writes=direct"))
+    rows.append(("decode_ttft_staged", us_ttft_s,
+                 f"prompt={Lp};staging_buf_bytes={stage_buf};"
+                 f"compiles=per-length"))
+    rows.append(("decode_mixed_step", us_mixed,
+                 f"decode_B={Bv};chunk={C};overlap=step-level"))
+    print(f"prefill ttft: chunked {us_ttft_c:.0f}us "
+          f"(buf {chunk_buf}B) vs staged {us_ttft_s:.0f}us "
+          f"(buf {stage_buf}B); mixed step {us_mixed:.0f}us")
     return rows
 
 

@@ -372,6 +372,18 @@ class ServeConfig:
     paged: bool = False
     page_size: int = 64             # tokens per page (kernel time block)
     n_pages: int = 0                # allocatable pages; 0 => derive
+    # chunked prefill (DESIGN.md §prefill): admission splits prompts
+    # into prefill_chunk-sized chunks, pads each to a bucket length
+    # (bounding XLA compiles to len(buckets)) and writes the compressed
+    # cache straight into pages, interleaved with decode iterations.
+    # Requires paged=True; the exact-length dense-staging path
+    # (chunked_prefill=False) stays as the parity oracle.
+    chunked_prefill: bool = False
+    prefill_buckets: Tuple[int, ...] = ()  # () => derive by doubling
+    # prefill chunks advanced per engine step(), round-robin, at most
+    # one per mid-prefill slot — bounds the latency a decode iteration
+    # pays for concurrent prompt admission
+    prefill_chunks_per_step: int = 1
 
     def __post_init__(self) -> None:
         if self.paged:
@@ -381,6 +393,48 @@ class ServeConfig:
                 raise ValueError(
                     f"max_seq_len {self.max_seq_len} must be a multiple of"
                     f" page_size {self.page_size}")
+        if self.chunked_prefill:
+            if not self.paged:
+                raise ValueError(
+                    "chunked_prefill writes straight into pages and "
+                    "requires paged=True (the dense exact-length path is "
+                    "the parity oracle)")
+            if self.prefill_chunk <= 0:
+                raise ValueError("prefill_chunk must be positive")
+            if self.prefill_chunks_per_step <= 0:
+                raise ValueError("prefill_chunks_per_step must be positive")
+            b = self.buckets
+            if b[-1] != self.prefill_chunk:
+                raise ValueError(
+                    f"largest prefill bucket {b[-1]} must equal "
+                    f"prefill_chunk {self.prefill_chunk} (full chunks "
+                    f"compile at that shape)")
+            if b[0] <= 0:
+                raise ValueError("prefill buckets must be positive")
+
+    @property
+    def buckets(self) -> Tuple[int, ...]:
+        """Padded chunk lengths, ascending.  Every prefill chunk is
+        padded up to the smallest bucket that holds it, so the engine
+        compiles at most ``len(buckets)`` prefill shapes regardless of
+        the prompt-length distribution."""
+        if self.prefill_buckets:
+            return tuple(sorted(set(self.prefill_buckets)))
+        out, b = [], self.prefill_chunk
+        while b >= 8:
+            out.append(b)
+            b //= 2
+        if not out:                       # tiny prefill_chunk: one bucket
+            out = [self.prefill_chunk]
+        return tuple(sorted(out))
+
+    def bucket_for(self, n: int) -> int:
+        """Smallest bucket holding an ``n``-token chunk."""
+        assert 0 < n <= self.prefill_chunk, (n, self.prefill_chunk)
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.buckets[-1]
 
     @property
     def pages_per_seq(self) -> int:

@@ -1,7 +1,11 @@
 from repro.kernels.kq_decode.ops import (kq_decode_attention_op,
-                                         kq_decode_paged_attention_op)
+                                         kq_decode_paged_attention_op,
+                                         kq_prefill_paged_attention_op)
 from repro.kernels.kq_decode.ref import (kq_decode_attention_ref,
-                                         kq_decode_paged_attention_ref)
+                                         kq_decode_paged_attention_ref,
+                                         kq_prefill_paged_attention_ref)
 
 __all__ = ["kq_decode_attention_op", "kq_decode_attention_ref",
-           "kq_decode_paged_attention_op", "kq_decode_paged_attention_ref"]
+           "kq_decode_paged_attention_op", "kq_decode_paged_attention_ref",
+           "kq_prefill_paged_attention_op",
+           "kq_prefill_paged_attention_ref"]

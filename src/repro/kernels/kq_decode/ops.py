@@ -20,7 +20,8 @@ import functools
 import jax
 
 from repro.kernels.kq_decode.kq_decode import kq_decode_attention
-from repro.kernels.kq_decode.paged import kq_decode_paged_attention
+from repro.kernels.kq_decode.paged import (kq_decode_paged_attention,
+                                           kq_prefill_paged_attention)
 
 
 @functools.partial(jax.jit,
@@ -31,6 +32,19 @@ def kq_decode_attention_op(qc, kc, vc, lengths, *, block_t=256, scale=1.0,
     return kq_decode_attention(qc, kc, vc, lengths, block_t=block_t,
                                scale=scale, interpret=interpret,
                                max_len=max_len, pad_lanes=pad_lanes)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "interpret", "max_len",
+                                    "pad_lanes"))
+def kq_prefill_paged_attention_op(qc, kc_pool, vc_pool, lengths, pos0,
+                                  block_table, *, scale=1.0,
+                                  interpret=None, max_len=None,
+                                  pad_lanes=None):
+    return kq_prefill_paged_attention(qc, kc_pool, vc_pool, lengths, pos0,
+                                      block_table, scale=scale,
+                                      interpret=interpret, max_len=max_len,
+                                      pad_lanes=pad_lanes)
 
 
 @functools.partial(jax.jit,

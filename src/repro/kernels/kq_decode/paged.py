@@ -21,6 +21,12 @@ HBM in place with no gather/copy:
 
 Layout: page_size is a sublane multiple (>=8) on real TPU; R_k/R_v are
 lane-padded by the op wrapper (``ops.py``).
+
+``kq_prefill_paged_attention`` is the prefill-append twin (DESIGN.md
+§prefill): a whole bucket-padded chunk of S queries per sequence
+attends the pages already written for it, with a per-query causal
+position mask — chunked prefill streams the same pools the decode
+kernel reads, no dense staging buffer.
 """
 from __future__ import annotations
 
@@ -81,6 +87,145 @@ def _kq_decode_paged_kernel(len_ref, btab_ref, q_ref, k_ref, v_ref, o_ref,
     def _finish():
         denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
         o_ref[0, 0, :, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def _kq_prefill_paged_kernel(len_ref, pos0_ref, btab_ref, q_ref, k_ref,
+                             v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                             page_size: int, n_q: int, scale: float):
+    b = pl.program_id(0)
+    t = pl.program_id(2)
+    nt = pl.num_programs(2)
+    length = len_ref[b]
+    p0 = pos0_ref[b]
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(t * page_size < length)
+    def _update():
+        q = q_ref[0, 0].astype(jnp.float32)               # (m*S, Rk)
+        k = k_ref[0, 0].astype(jnp.float32)               # (ps, Rk)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        tpos = t * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        # per-query causal: row r is query s = r % n_q of its head at
+        # position p0 + s.  Pages ascend, so every row sees a valid key
+        # in page 0 (tpos = 0 <= qpos) before any fully-masked page —
+        # its running max is finite and masked exps underflow to 0.
+        qpos = p0 + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 0) % n_q
+        s = jnp.where((tpos <= qpos) & (tpos < length), s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        v = v_ref[0, 0].astype(jnp.float32)               # (ps, Rv)
+        # zero the tail page's dead rows: 0 * garbage = NaN otherwise
+        row = t * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (v.shape[0], 1), 0)
+        v = jnp.where(row < length, v, 0.0)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(t == nt - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0, :, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def kq_prefill_paged_attention(qc, kc_pool, vc_pool, lengths, pos0,
+                               block_table, *, scale: float = 1.0,
+                               interpret: Optional[bool] = None,
+                               max_len: Optional[int] = None,
+                               pad_lanes: Optional[bool] = None):
+    """Prefill-append entry: a chunk of S queries per sequence attends
+    the pages already written for it (earlier chunks + its own, which
+    the caller appends *before* the call — causality comes from the
+    per-query position mask, DESIGN.md §prefill).
+
+    qc: (B, H, S, Rk) chunk queries, query ``s`` of row ``b`` sits at
+    position ``pos0[b] + s``; kc_pool/vc_pool: (P, Hkv, ps, R) page
+    pools; ``lengths``: (B,) live cache entries (pos0 + valid chunk
+    tokens); ``block_table``: (B, n_pages).  Same grid/prefetch
+    mechanics as ``kq_decode_paged_attention`` — one time step per
+    logical page, block-table deref in the index map, clamped past the
+    last occupied page — with (m*S, ps) score tiles instead of (m, ps).
+    Bucket-padded queries (``pos0 + s >= lengths``) fall back to a
+    full-prefix mask: garbage rows, isolated and sliced by the caller.
+
+    Returns (B, H, S, Rv) group-aggregated values.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    if (not interpret) if pad_lanes is None else pad_lanes:
+        rv = vc_pool.shape[-1]
+        if qc.shape[-1] % 128 or rv % 128:
+            out = kq_prefill_paged_attention(
+                pad_to_lane(qc), pad_to_lane(kc_pool),
+                pad_to_lane(vc_pool), lengths, pos0, block_table,
+                scale=scale, interpret=interpret, max_len=max_len,
+                pad_lanes=False)
+            return out[..., :rv]
+    B, H, S, Rk = qc.shape
+    P, Hkv, ps, _ = kc_pool.shape
+    Rv = vc_pool.shape[-1]
+    m = H // Hkv
+    n_pages = block_table.shape[1]
+    T = n_pages * ps
+    lengths = jnp.asarray(lengths, jnp.int32)
+    if lengths.ndim == 0:
+        lengths = jnp.broadcast_to(lengths, (B,))
+    pos0 = jnp.asarray(pos0, jnp.int32)
+    if pos0.ndim == 0:
+        pos0 = jnp.broadcast_to(pos0, (B,))
+    block_table = jnp.asarray(block_table, jnp.int32)
+    bound = T
+    if max_len is not None:
+        bound = max(1, min(T, int(max_len)))
+    elif not isinstance(lengths, jax.core.Tracer):
+        bound = max(1, min(T, int(jnp.max(lengths))))
+    lengths = jnp.minimum(lengths, bound)
+    grid = (B, Hkv, pl.cdiv(bound, ps))
+    # rows ordered (m, S): row r is query r % S of head r // S
+    qg = qc.reshape(B, Hkv, m * S, Rk)
+
+    def _kv_map(b, g, t, lens, p0s, btab):
+        last = jnp.maximum((lens[b] + ps - 1) // ps - 1, 0)
+        return (btab[b, jnp.minimum(t, last)], g, 0, 0)
+
+    kernel = functools.partial(_kq_prefill_paged_kernel, page_size=ps,
+                               n_q=S, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, m * S, Rk),
+                         lambda b, g, t, lens, p0s, btab: (b, g, 0, 0)),
+            pl.BlockSpec((1, 1, ps, Rk), _kv_map),
+            pl.BlockSpec((1, 1, ps, Rv), _kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, m * S, Rv),
+                               lambda b, g, t, lens, p0s, btab:
+                               (b, g, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((m * S,), jnp.float32),
+            pltpu.VMEM((m * S,), jnp.float32),
+            pltpu.VMEM((m * S, Rv), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, m * S, Rv), qc.dtype),
+        interpret=interpret,
+    )(lengths, pos0, block_table, qg, kc_pool, vc_pool)
+    return out.reshape(B, H, S, Rv)
 
 
 def kq_decode_paged_attention(qc, kc_pool, vc_pool, lengths, block_table,

@@ -40,3 +40,36 @@ def kq_decode_paged_attention_ref(qc, kc_pool, vc_pool, lengths,
     kc = gather_pages(kc_pool, block_table)
     vc = gather_pages(vc_pool, block_table)
     return kq_decode_attention_ref(qc, kc, vc, lengths, scale=scale)
+
+
+def kq_prefill_paged_attention_ref(qc, kc_pool, vc_pool, lengths, pos0,
+                                   block_table, *, scale: float = 1.0):
+    """Oracle for the prefill-append kernel: gather pages, then masked
+    chunk attention (query ``s`` of row ``b`` attends positions
+    ``t <= pos0[b] + s`` and ``t < lengths[b]``).
+
+    qc: (B, H, S, Rk) -> (B, H, S, Rv).
+    """
+    B, H, S, Rk = qc.shape
+    Hkv = kc_pool.shape[1]
+    m = H // Hkv
+    kc = gather_pages(kc_pool, block_table)                  # (B,Hkv,T,Rk)
+    vc = gather_pages(vc_pool, block_table)
+    T = kc.shape[2]
+    lengths = jnp.asarray(lengths, jnp.int32)
+    if lengths.ndim == 0:
+        lengths = jnp.broadcast_to(lengths, (B,))
+    pos0 = jnp.asarray(pos0, jnp.int32)
+    if pos0.ndim == 0:
+        pos0 = jnp.broadcast_to(pos0, (B,))
+    qg = qc.reshape(B, Hkv, m, S, Rk)
+    s = jnp.einsum("bgmsr,bgtr->bgmst", qg, kc,
+                   preferred_element_type=jnp.float32) * scale
+    qpos = pos0[:, None] + jnp.arange(S)[None, :]            # (B, S)
+    t = jnp.arange(T)
+    mask = ((t[None, None, :] <= qpos[:, :, None])
+            & (t[None, None, :] < lengths[:, None, None]))   # (B, S, T)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    agg = jnp.einsum("bgmst,bgtr->bgmsr", p.astype(vc.dtype), vc)
+    return agg.reshape(B, H, S, -1).astype(qc.dtype)

@@ -43,7 +43,21 @@ def main() -> None:
     ap.add_argument("--n-pages", type=int, default=0,
                     help="pool size; 0 derives full capacity, smaller "
                          "oversubscribes with admission backpressure")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill straight into pages (DESIGN.md "
+                         "§prefill): chunk size in tokens; 0 keeps the "
+                         "exact-length parity path.  Implies --paged.")
+    ap.add_argument("--prefill-buckets", default="",
+                    help="comma-separated padded chunk lengths (largest "
+                         "must equal --prefill-chunk); empty derives by "
+                         "doubling")
     args = ap.parse_args()
+    if args.prefill_buckets and not args.prefill_chunk:
+        ap.error("--prefill-buckets requires --prefill-chunk")
+    if args.prefill_chunk and not args.paged:
+        print("--prefill-chunk writes straight into pages: enabling "
+              "--paged")
+        args.paged = True
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -68,9 +82,14 @@ def main() -> None:
     T = args.prompt_len + args.max_new_tokens + 8
     if args.paged:   # logical capacity must be whole pages
         T = -(-T // args.page_size) * args.page_size
+    buckets = tuple(int(x) for x in args.prefill_buckets.split(",")
+                    if x.strip())
     sc = ServeConfig(max_seq_len=T, max_batch=8,
                      decode_chunk=args.decode_chunk, paged=args.paged,
-                     page_size=args.page_size, n_pages=args.n_pages)
+                     page_size=args.page_size, n_pages=args.n_pages,
+                     chunked_prefill=bool(args.prefill_chunk),
+                     prefill_chunk=args.prefill_chunk or 512,
+                     prefill_buckets=buckets)
     eng = ServingEngine(cfg, params, sc, projections=proj)
     rng = np.random.default_rng(0)
     lens = rng.integers(min(4, args.prompt_len), args.prompt_len + 1,
@@ -90,6 +109,10 @@ def main() -> None:
         pool = eng.pool
         print(f"page pool: {pool.n_pages} x {args.page_size}-token "
               f"pages, {pool.free_count} free after drain")
+    if args.prefill_chunk:
+        print(f"prefill compiles: {len(eng.prefill_chunk_shapes)} chunk "
+              f"shape(s) {sorted(eng.prefill_chunk_shapes)} of "
+              f"{len(sc.buckets)} bucket(s) {list(sc.buckets)}")
 
 
 if __name__ == "__main__":

@@ -29,9 +29,11 @@ import numpy as np
 
 from repro.config import ModelConfig
 from repro.kernels.kq_decode.kq_decode import kq_decode_attention
-from repro.kernels.kq_decode.paged import kq_decode_paged_attention
+from repro.kernels.kq_decode.paged import (kq_decode_paged_attention,
+                                           kq_prefill_paged_attention)
 from repro.models.layers import apply_rope, init_dense
-from repro.serving.paged_cache import append_token, gather_pages
+from repro.serving.paged_cache import (append_chunk, append_token,
+                                       gather_pages)
 
 NEG_INF = -1e30
 
@@ -254,6 +256,22 @@ def decode_attention(q, cache_k, cache_v, valid_mask, scale):
     return agg                                              # (B,Hkv,m,rv)
 
 
+def chunk_decode_attention(qg, cache_k, cache_v, qpos, scale):
+    """A chunk of S queries over a cache (lax reference for the paged
+    prefill kernel).  qg: (B,Hkv,m,S,dk); cache_k/v: (B,Hkv,T,*);
+    qpos: (B,S) per-query positions — query s of row b attends cache
+    positions t <= qpos[b, s] (causal across *and within* the chunk,
+    assuming the chunk's own entries are already written)."""
+    T = cache_k.shape[2]
+    s = jnp.einsum("bgmsd,bgtd->bgmst", qg, cache_k,
+                   preferred_element_type=jnp.float32) * scale
+    mask = jnp.arange(T)[None, None, :] <= qpos[:, :, None]  # (B,S,T)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bgmst,bgtr->bgmsr", p.astype(cache_v.dtype),
+                      cache_v)                              # (B,Hkv,m,S,rv)
+
+
 # ---------------------------------------------------------------------------
 # Attention layer (params + modes)
 # ---------------------------------------------------------------------------
@@ -432,6 +450,83 @@ def attn_prefill(p, x, cfg: ModelConfig, max_len: int,
             cache[name] = jax.lax.dynamic_update_slice_in_dim(
                 cache[name], val.astype(cache[name].dtype), 0, 2)
     return y, cache
+
+
+def attn_prefill_chunk(p, x, cache: Dict, pos0, cfg: ModelConfig,
+                       proj: Optional[Dict] = None, block_table=None,
+                       valid=None):
+    """One bucket-padded prompt chunk straight into pages (DESIGN.md
+    §prefill).
+
+    x: (B, S, D) chunk whose first real token sits at position
+    ``pos0[b]``; ``valid``: (B, S) marks real (non-bucket-padding)
+    tokens, which must form a contiguous prefix.  The chunk's
+    (compressed) k/v entries are written through ``block_table`` into
+    the page pool — padding routes to the garbage page — and the
+    chunk's queries attend the already-written pages (earlier chunks
+    plus this one; causality via per-query positions).  Requires a
+    paged cache; the exact-length ``attn_prefill`` + dense staging is
+    the parity oracle.  Padded queries produce garbage rows: isolated
+    (attention rows are independent, MoE masks them via ``valid``) and
+    sliced away by the caller.
+    """
+    if block_table is None:
+        raise ValueError("attn_prefill_chunk requires a paged cache "
+                         "(block_table)")
+    if cfg.sliding_window or cfg.cache_quant == "int8":
+        raise NotImplementedError(
+            "chunked prefill supports full-attention bf16/f32 and "
+            "compressed layouts only (no sliding window, no int8)")
+    B, S, _ = x.shape
+    dh = cfg.d_head
+    scale = 1.0 / math.sqrt(dh)
+    pos0 = batched_positions(pos0, B)
+    if valid is None:
+        valid = jnp.ones((B, S), bool)
+    positions = pos0[:, None] + jnp.arange(S)[None, :]       # (B, S)
+    q, k_new, v_new = _qkv(p, x, cfg, positions[:, None, :])
+    T = block_table.shape[1] * cache[
+        "kc" if proj is not None else "k"].shape[2]
+    lengths = pos0 + valid.sum(axis=1).astype(jnp.int32)
+    Hkv = cfg.n_kv_heads
+    Hp = padded_heads(cfg)
+    m_p = Hp // Hkv
+    if proj is not None:
+        k_st = jnp.einsum("bhtd,hdr->bhtr", k_new, proj["a_k"])
+        v_st = jnp.einsum("bhtd,hdr->bhtr", v_new, proj["a_v"])
+        kc = append_chunk(cache["kc"], block_table, pos0, k_st, valid)
+        vc = append_chunk(cache["vc"], block_table, pos0, v_st, valid)
+        new_cache = dict(cache, kc=kc, vc=vc)
+        qg = q.reshape(B, Hkv, m_p, S, dh)
+        qc = jnp.einsum("bgmsd,gdr->bgmsr", qg, proj["b_q"])
+        if cfg.use_pallas:
+            # TPU runtime hot path: the prefill-append kernel streams
+            # the written pages in place via the block table
+            agg = kq_prefill_paged_attention(
+                qc.reshape(B, Hp, S, -1), kc, vc, lengths, pos0,
+                block_table, scale=scale,
+                max_len=T).reshape(B, Hkv, m_p, S, -1)
+        else:
+            # lax reference: materialize the slot's pages, then the
+            # masked chunk attention (parity oracle for the kernel)
+            k_seq = gather_pages(kc, block_table)
+            v_seq = gather_pages(vc, block_table)
+            agg = chunk_decode_attention(qc, k_seq, v_seq, positions,
+                                         scale)
+        m = cfg.n_heads // Hkv                  # real heads (c_v is real-m)
+        c_v = proj["c_v"].reshape(Hkv, -1, m, cfg.d_model)
+        y = jnp.einsum("bgmsr,grmd->bsd", agg[:, :, :m], c_v)
+    else:
+        kk = append_chunk(cache["k"], block_table, pos0, k_new, valid)
+        vv = append_chunk(cache["v"], block_table, pos0, v_new, valid)
+        new_cache = dict(cache, k=kk, v=vv)
+        k_seq = gather_pages(kk, block_table)
+        v_seq = gather_pages(vv, block_table)
+        qg = q.reshape(B, Hkv, m_p, S, dh)
+        agg = chunk_decode_attention(qg, k_seq, v_seq, positions, scale)
+        out = agg.reshape(B, Hp, S, dh)
+        y = jnp.einsum("bhse,hed->bsd", out, p["wo"])
+    return y.astype(x.dtype), new_cache
 
 
 def attn_decode(p, x, cache: Dict, pos, cfg: ModelConfig,

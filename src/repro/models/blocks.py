@@ -117,10 +117,10 @@ def apply_layer(p: Dict, x, cfg: ModelConfig, layer_idx: int, mode: str,
     x = shard(x, ("pod", "data"), None, None)
     h = rms_norm(x, p["ln1"], cfg.rms_eps)
     new_cache, captures = None, None
-    if block_table is not None and kind != "attn":
+    if (block_table is not None or mode == "chunk") and kind != "attn":
         raise NotImplementedError(
-            f"paged cache supports plain attention layers only (got "
-            f"{kind})")
+            f"paged cache / chunked prefill supports plain attention "
+            f"layers only (got {kind})")
     if kind == "attn":
         if mode == "train":
             y = attn_mod.attn_train(p["attn"], h, cfg)
@@ -129,6 +129,10 @@ def apply_layer(p: Dict, x, cfg: ModelConfig, layer_idx: int, mode: str,
         elif mode == "prefill":
             y, new_cache = attn_mod.attn_prefill(p["attn"], h, cfg,
                                                  max_len, proj)
+        elif mode == "chunk":
+            y, new_cache = attn_mod.attn_prefill_chunk(
+                p["attn"], h, cache, pos, cfg, proj, block_table,
+                valid=token_mask)
         else:
             y, new_cache = attn_mod.attn_decode(p["attn"], h, cache, pos,
                                                 cfg, proj, block_table)
@@ -153,7 +157,8 @@ def apply_layer(p: Dict, x, cfg: ModelConfig, layer_idx: int, mode: str,
             y, new_cache = ssm_mod.ssm_decode(p["ssm"], h, cache, cfg.ssm)
     x = x + y
     x, aux = _ffn_apply(p, x, cfg, layer_idx, mode,
-                        token_mask if mode == "decode" else None)
+                        token_mask if mode in ("decode", "chunk")
+                        else None)
     return x, new_cache, captures, aux
 
 

@@ -4,6 +4,9 @@ Public entry points (all pure functions of pytrees, pjit-able):
     init(rng)                                   -> params
     train_logits(params, batch)                 -> (logits, aux)
     prefill(params, batch, max_len, proj)       -> (logits, cache)
+    prefill_chunk(params, cache, tokens, pos0, valid, proj, block_table)
+                                                -> (logits, cache)
+        (chunked prefill straight into a paged cache; DESIGN.md §prefill)
     decode_step(params, cache, tokens, pos, proj) -> (logits, cache)
         (pos: per-sequence (B,) positions; scalars broadcast)
     calibrate(params, tokens)                   -> per-attn-layer captures
@@ -138,7 +141,7 @@ class LM:
                 captures = caps
             aux_t = _add_aux(aux_t, aux)
         cache_out = ({"layers": tuple(new_caches)}
-                     if mode in ("prefill", "decode") else None)
+                     if mode in ("prefill", "decode", "chunk") else None)
         return x, cache_out, captures, aux_t
 
     # -- full stack ----------------------------------------------------------
@@ -178,12 +181,13 @@ class LM:
                     spj = (jax.tree.map(lambda a: a[i], step_proj)
                            if step_proj is not None else None)
                     x, co, caps, sa = self._apply_step(
-                        sp, x, mode, sc, pos, spj, max_len)
+                        sp, x, mode, sc, pos, spj, max_len,
+                        block_table, token_mask)
                     outs.append(co)
                     if caps is not None:
                         captures_list.append(caps)
                     aux = jax.tree.map(lambda a, b: a + b, aux, sa)
-                if mode in ("prefill", "decode"):
+                if mode in ("prefill", "decode", "chunk"):
                     steps_cache_out = jax.tree.map(
                         lambda *xs: jnp.stack(xs), *outs)
             else:
@@ -197,7 +201,7 @@ class LM:
                             lambda a: a[i], caps_stacked))
 
         cache_out = None
-        if mode in ("prefill", "decode"):
+        if mode in ("prefill", "decode", "chunk"):
             cache_out = {"prefix": prefix_cache_out,
                          "steps": steps_cache_out}
         return x, cache_out, captures_list, aux
@@ -205,8 +209,8 @@ class LM:
     def _scan_steps(self, steps_params, x, mode, cache, pos, step_proj,
                     max_len, block_table=None, token_mask=None):
         cfg = self.cfg
-        has_cache_in = mode == "decode"
-        emit_cache = mode in ("prefill", "decode")
+        has_cache_in = mode in ("decode", "chunk")
+        emit_cache = mode in ("prefill", "decode", "chunk")
         emit_caps = mode == "calibrate"
 
         def body(carry, xs):
@@ -262,6 +266,30 @@ class LM:
         x = rms_norm(x, params["final_norm"], self.cfg.rms_eps)
         logits = self._logits(params, x[:, -1:])
         return logits, cache
+
+    def prefill_chunk(self, params, cache, tokens, pos0, valid,
+                      proj=None, block_table=None):
+        """One bucket-padded prompt chunk straight into a paged cache
+        (DESIGN.md §prefill).
+
+        tokens: (B, S) chunk whose first real token sits at position
+        ``pos0[b]`` of its sequence; ``valid``: (B, S) bool of real
+        (non-bucket-padding) tokens, a contiguous prefix per row.  The
+        chunk's (compressed) k/v entries are written through
+        ``block_table`` into the page pools; its queries attend the
+        already-written pages.  Returns ``(logits, cache)`` with logits
+        (B, S, V) — rows past each sequence's last valid token are
+        garbage (isolated: attention rows are independent and MoE
+        routing masks them), so callers slice the last valid row.
+        Compiles once per chunk bucket shape, not per prompt length."""
+        pos0 = attn_mod.batched_positions(pos0, tokens.shape[0])
+        x = self._embed(params, {"tokens": tokens})
+        x, cache, _, _ = self._run_stack(params, x, "chunk", cache=cache,
+                                         pos=pos0, proj=proj,
+                                         block_table=block_table,
+                                         token_mask=valid)
+        x = rms_norm(x, params["final_norm"], self.cfg.rms_eps)
+        return self._logits(params, x), cache
 
     def decode_step(self, params, cache, tokens, pos, proj=None,
                     block_table=None, token_mask=None):

@@ -6,12 +6,13 @@ layers (models/kernels) can import ``repro.serving.paged_cache`` at
 module level without pulling ``engine`` -> ``models`` back in a cycle.
 """
 from repro.serving.paged_cache import (BlockTables, PagePool,
-                                       PagePoolExhausted, append_token,
-                                       gather_pages, pages_needed)
+                                       PagePoolExhausted, append_chunk,
+                                       append_token, gather_pages,
+                                       pages_needed)
 
 __all__ = ["Request", "ServingEngine", "sample_token", "BlockTables",
-           "PagePool", "PagePoolExhausted", "append_token", "gather_pages",
-           "pages_needed"]
+           "PagePool", "PagePoolExhausted", "append_chunk", "append_token",
+           "gather_pages", "pages_needed"]
 
 _ENGINE_EXPORTS = ("Request", "ServingEngine", "sample_token")
 

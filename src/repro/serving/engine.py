@@ -1,10 +1,12 @@
 """Continuous-batching serving engine with full or KQ-SVD-compressed cache.
 
-True continuous batching over fixed cache slots (DESIGN.md §decode):
+True continuous batching over fixed cache slots (DESIGN.md §decode),
+scheduled as explicit ``step()`` iterations (sarathi-style):
 
-* the batched cache is allocated once; each request prefills alone at
-  its exact prompt length and is inserted into a free slot — no
-  grouping by prompt length, no draining;
+* the batched cache is allocated once; ``step()`` admits pending
+  requests into free slots, advances in-flight chunked prefills, runs
+  one fused decode chunk and harvests finished slots — prefill and
+  decode work interleave instead of prefill stalling the whole batch;
 * decode runs as a fused ``lax.scan`` of ``decode_chunk`` steps entirely
   on device: sampling, EOS / ``max_new_tokens`` / capacity masking and
   per-slot position increments all live inside the scan, so the host
@@ -24,6 +26,23 @@ Two cache layouts (``ServeConfig.paged``):
   finished slots return their pages to the pool without draining the
   batch — HBM scales with *occupied pages*, not
   ``max_batch * max_seq_len``.
+
+Two prefill paths (``ServeConfig.chunked_prefill``, DESIGN.md §prefill):
+
+* **exact-length** (default, the parity oracle): each request prefills
+  alone at its exact prompt length — one XLA compile per distinct
+  length — and (paged) stages the cache through a dense
+  ``(1, max_seq_len)`` buffer before repaging;
+* **chunked** (requires paged): prompts split into
+  ``prefill_chunk``-sized chunks padded to a small set of bucket
+  lengths (at most ``len(buckets)`` prefill compiles per engine
+  lifetime) that write the compressed ``R_k/R_v`` entries straight
+  into pages — no staging buffer — and are scheduled a few chunks per
+  ``step()`` so other slots keep decoding while a long prompt
+  prefills.  Partially-prefilled slots hold their pages and join
+  decode only when complete; their block-table rows export as the
+  garbage page to the decode scan, so its masked writes cannot touch
+  pages the prefill is filling.
 
 Every sequence carries its own position: the decode stack (and on TPU
 the Pallas kernel) masks per-sequence lengths, so a mixed-length batch
@@ -80,8 +99,13 @@ class ServingEngine:
         self._prefill = jax.jit(self._prefill_impl)
         self._insert = jax.jit(self._insert_impl)
         self._paged_insert = jax.jit(self._paged_insert_impl)
+        self._prefill_chunk = jax.jit(self._prefill_chunk_impl)
         self._decode_chunk = jax.jit(self._decode_chunk_impl)
         self.rng = jax.random.PRNGKey(sc.seed)
+        # distinct chunk shapes traced so far — the compile-count bound
+        # is len(sc.buckets) per engine lifetime (tests assert on it)
+        self.prefill_chunk_shapes: set = set()
+        self._started = False
 
     def _validate_paged(self) -> None:
         """Fail fast at construction, not mid-serve."""
@@ -105,6 +129,26 @@ class ServingEngine:
                                       proj=proj)
         return self.model.prefill(params, batch, self.sc.max_seq_len)
 
+    def _prefill_chunk_impl(self, params, proj, cache, tokens, pos0,
+                            n_valid, btab_row):
+        """One bucket-padded prompt chunk -> (last-valid logits, cache).
+
+        tokens: (1, bucket) chunk, first ``n_valid`` entries real;
+        pos0: (1,) tokens already written for this sequence.  Writes
+        the chunk's entries straight into the page pools through
+        ``btab_row`` and returns the logits of the last *valid* token
+        (the next-token carry once the final chunk lands).  Compiles
+        once per bucket shape."""
+        valid = jnp.arange(tokens.shape[1])[None, :] < n_valid[:, None]
+        kw: Dict[str, Any] = {"block_table": btab_row}
+        if self.proj is not None:
+            kw["proj"] = proj
+        logits, cache = self.model.prefill_chunk(params, cache, tokens,
+                                                 pos0, valid, **kw)
+        last = jnp.take_along_axis(
+            logits, (n_valid - 1)[:, None, None], axis=1)[:, 0]
+        return last, cache
+
     def _insert_impl(self, cache, slot_cache, slot):
         """Write a single-sequence cache into batch slot ``slot``."""
         def at_batch0(big, small):
@@ -125,11 +169,13 @@ class ServingEngine:
     def _paged_insert_impl(self, cache, slot_cache, phys):
         """Scatter a prefilled slot cache into the page pools.
 
-        ``slot_cache`` leaves are dense (1, Hkv, T, R) (the prefill
-        contract is unchanged); they are cut into (T / page_size) pages
-        and the first ``len(phys)`` — the pages the prompt occupies —
-        are written at the allocated physical ids.  Compiles once per
-        distinct page count, same as prefill per distinct length."""
+        ``slot_cache`` leaves are dense (1, Hkv, T, R) (the exact-length
+        prefill contract is unchanged); they are cut into
+        (T / page_size) pages and the first ``len(phys)`` — the pages
+        the prompt occupies — are written at the allocated physical
+        ids.  Compiles once per distinct page count, same as prefill
+        per distinct length.  The chunked path writes pages directly
+        and never builds this staging buffer."""
         ps = self.sc.page_size
         n = phys.shape[0]
 
@@ -189,9 +235,10 @@ class ServingEngine:
             done = done | full
             active = ~done
             feed_pos = jnp.minimum(pos, T - 1)  # done slots: harmless write
-            # (paged: a freed slot's block-table row points at the
-            # garbage page, so the masked write cannot touch pages that
-            # were recycled to other sequences)
+            # (paged: a freed or mid-prefill slot's block-table row
+            # points at the garbage page, so the masked write cannot
+            # touch pages that were recycled to other sequences or that
+            # a concurrent chunked prefill is filling)
 
             def step(ops):
                 lg, new_cache = decode(ops[0], ops[1][:, None], ops[2],
@@ -225,10 +272,15 @@ class ServingEngine:
 
     # -- serving ------------------------------------------------------------
 
-    def generate(self, requests: List[Request]) -> List[Request]:
-        """Serve a list of requests to completion (continuous batching)."""
+    def start(self, requests: List[Request]) -> None:
+        """Initialize serving state for a batch of requests.
+
+        Allocates the (dense or paged) cache and the per-slot decode
+        state; ``step()`` then advances admission / prefill / decode one
+        scheduling iteration at a time (``generate`` is the drain
+        loop)."""
         sc = self.sc
-        B, T, N = sc.max_batch, sc.max_seq_len, sc.decode_chunk
+        B, T = sc.max_batch, sc.max_seq_len
         # validate before any work: a mid-serve raise would abandon
         # already-admitted in-flight requests
         for r in requests:
@@ -236,128 +288,220 @@ class ServingEngine:
                 raise ValueError(
                     f"request {r.rid}: prompt length {len(r.prompt)}"
                     f" exceeds max_seq_len {T}")
-        pending = list(requests)
-        pool = btabs = None
-        reserved = [0] * B     # worst-case page reservation per slot
+        self._pending: List[Request] = list(requests)
+        self._reserved = [0] * B   # worst-case page reservation per slot
+        self.pool = None           # introspection (tests/bench)
+        self._btabs = None
         if sc.paged:
-            pool = PagePool(sc.total_pages)
-            btabs = BlockTables(B, sc.pages_per_seq)
-            self.pool = pool               # introspection (tests/bench)
-            cache = self.model.init_paged_cache(
+            self.pool = PagePool(sc.total_pages)
+            self._btabs = BlockTables(B, sc.pages_per_seq)
+            self._cache = self.model.init_paged_cache(
                 sc.total_pages + 1, sc.page_size, self.ranks)
         else:
-            cache = self.model.init_cache(B, T, self.ranks)
+            self._cache = self.model.init_cache(B, T, self.ranks)
+        self._logits = jnp.zeros((B, self.cfg.vocab_size), jnp.float32)
+        self._pos = jnp.zeros((B,), jnp.int32)
+        self._emitted = jnp.zeros((B,), jnp.int32)
+        self._max_new = jnp.zeros((B,), jnp.int32)
+        self._done = jnp.ones((B,), bool)
+        self._trunc = jnp.zeros((B,), bool)
+        self._slot_req: List[Optional[Request]] = [None] * B
+        # chunked prefill: prompt tokens already written per slot
+        # (None = slot empty or fully prefilled)
+        self._prefilled: List[Optional[int]] = [None] * B
+        self._pf_next = 0          # round-robin cursor over prefill slots
+        self._started = True
 
-        def worst_case_pages(r: Request) -> int:
-            """Pages the request can ever occupy (truncation caps the
-            sequence at T).  Admission reserves this up front so page-
-            by-page growth can never strand a live sequence mid-decode
-            (no preemption yet — ROADMAP)."""
-            return pages_needed(min(len(r.prompt) + max(r.max_new_tokens,
-                                                        0), T),
-                                sc.page_size)
-        logits = jnp.zeros((B, self.cfg.vocab_size), jnp.float32)
-        pos = jnp.zeros((B,), jnp.int32)
-        emitted = jnp.zeros((B,), jnp.int32)
-        max_new = jnp.zeros((B,), jnp.int32)
-        done = jnp.ones((B,), bool)
-        trunc = jnp.zeros((B,), bool)
-        slot_req: List[Optional[Request]] = [None] * B
+    def _busy(self) -> bool:
+        return bool(self._pending
+                    or any(r is not None for r in self._slot_req))
 
-        def admit_into_free_slots():
-            nonlocal cache, logits, pos, emitted, max_new, done, trunc
-            for b in range(B):
-                if slot_req[b] is not None or not pending:
-                    continue
-                if sc.paged:
-                    # admission backpressure: the request's *worst-case*
-                    # footprint must fit the unreserved pool, so growth
-                    # can always be satisfied; otherwise it stays
-                    # pending until finished slots release reservations
-                    worst = worst_case_pages(pending[0])
-                    if worst > pool.n_pages:
-                        raise PagePoolExhausted(
-                            f"request {pending[0].rid}: worst case "
-                            f"{worst} pages exceeds the pool "
-                            f"({pool.n_pages}); raise n_pages or lower "
-                            f"max_new_tokens")
-                    if worst > pool.n_pages - sum(reserved):
-                        break
-                    reserved[b] = worst
-                r = pending.pop(0)
-                prompt = np.asarray(r.prompt, np.int32)
-                plogits, slot_cache = self._prefill(
-                    self.params, self.proj, jnp.asarray(prompt)[None])
-                if sc.paged:
-                    phys = pool.alloc(pages_needed(len(prompt),
-                                                   sc.page_size))
-                    btabs.assign(b, phys)
-                    cache = self._paged_insert(cache, slot_cache,
-                                               jnp.asarray(phys,
-                                                           jnp.int32))
-                else:
-                    cache = self._insert(cache, slot_cache, np.int32(b))
-                logits = logits.at[b].set(plogits[0, -1])
-                pos = pos.at[b].set(prompt.shape[0])
-                emitted = emitted.at[b].set(0)
-                max_new = max_new.at[b].set(r.max_new_tokens)
-                done = done.at[b].set(r.max_new_tokens <= 0)
-                trunc = trunc.at[b].set(False)
-                slot_req[b] = r
-                if r.max_new_tokens <= 0:
-                    r.done = True
-                    slot_req[b] = None
-                    if sc.paged:
-                        btabs.release(b, pool)
-                        reserved[b] = 0
+    def _worst_case_pages(self, r: Request) -> int:
+        """Pages the request can ever occupy (truncation caps the
+        sequence at T).  Admission reserves this up front so page-
+        by-page growth can never strand a live sequence mid-decode
+        (no preemption yet — ROADMAP)."""
+        sc = self.sc
+        return pages_needed(min(len(r.prompt) + max(r.max_new_tokens, 0),
+                                sc.max_seq_len), sc.page_size)
 
-        def ensure_chunk_headroom():
-            """Grow live sequences page-by-page: every live slot gets
-            pages covering the next ``decode_chunk`` tokens before the
-            fused scan runs (the scan itself never allocates).  The
-            admission-time worst-case reservation guarantees this
-            allocation succeeds."""
-            pos_np = np.asarray(pos)
-            for b in range(B):
-                if slot_req[b] is None:
-                    continue
-                need = min(pages_needed(min(int(pos_np[b]) + N, T),
-                                        sc.page_size), reserved[b])
-                have = len(btabs.slot_pages[b])
-                if need > have:
-                    btabs.assign(b, pool.alloc(need - have), start=have)
+    def _activate(self, b: int, r: Request, last_logits) -> None:
+        """Arm slot ``b`` for decode once its prompt cache is in place."""
+        self._logits = self._logits.at[b].set(last_logits)
+        self._pos = self._pos.at[b].set(len(r.prompt))
+        self._emitted = self._emitted.at[b].set(0)
+        self._max_new = self._max_new.at[b].set(r.max_new_tokens)
+        self._done = self._done.at[b].set(False)
+        self._trunc = self._trunc.at[b].set(False)
 
-        while pending or any(r is not None for r in slot_req):
-            admit_into_free_slots()
-            if not any(r is not None for r in slot_req):
-                if not pending:
-                    break      # everything resolved at admission
-                continue       # e.g. a chain of max_new <= 0 requests
-            btab_dev = None
+    def _release(self, b: int) -> None:
+        self._slot_req[b] = None
+        self._prefilled[b] = None
+        if self.sc.paged:
+            # pages go back to the pool without draining the batch;
+            # the row resets to the garbage page
+            self._btabs.release(b, self.pool)
+            self._reserved[b] = 0
+
+    def _admit(self) -> None:
+        """Fill free slots from the pending queue.
+
+        Exact-length path: prefill the whole prompt now (one compile
+        per distinct length) and insert.  Chunked path: allocate the
+        prompt's pages and queue the slot for chunk-by-chunk prefill —
+        ``_prefill_step`` advances it while other slots decode."""
+        sc = self.sc
+        for b in range(sc.max_batch):
+            if self._slot_req[b] is not None or not self._pending:
+                continue
             if sc.paged:
-                ensure_chunk_headroom()
-                btab_dev = btabs.device()
-            carry, toks, emits = self._decode_chunk(
-                self.params, self.proj, cache, logits, pos, emitted,
-                max_new, done, trunc, self.rng, btab_dev)
-            (logits, cache, pos, emitted, done, trunc, self.rng) = carry
-            toks_np = np.asarray(toks)            # (N, B)
-            emits_np = np.asarray(emits)
-            done_np = np.asarray(done)
-            trunc_np = np.asarray(trunc)
-            for b in range(B):
-                r = slot_req[b]
-                if r is None:
-                    continue
-                r.out_tokens.extend(
-                    int(toks_np[t, b]) for t in range(N) if emits_np[t, b])
-                if done_np[b]:
-                    r.done = True
-                    r.truncated = bool(trunc_np[b])
-                    slot_req[b] = None
-                    if sc.paged:
-                        # pages go back to the pool without draining the
-                        # batch; the row resets to the garbage page
-                        btabs.release(b, pool)
-                        reserved[b] = 0
+                # admission backpressure: the request's *worst-case*
+                # footprint must fit the unreserved pool, so growth
+                # can always be satisfied; otherwise it stays
+                # pending until finished slots release reservations
+                worst = self._worst_case_pages(self._pending[0])
+                if worst > self.pool.n_pages:
+                    raise PagePoolExhausted(
+                        f"request {self._pending[0].rid}: worst case "
+                        f"{worst} pages exceeds the pool "
+                        f"({self.pool.n_pages}); raise n_pages or lower "
+                        f"max_new_tokens")
+                if worst > self.pool.n_pages - sum(self._reserved):
+                    break
+                self._reserved[b] = worst
+            r = self._pending.pop(0)
+            if r.max_new_tokens <= 0:
+                # nothing to decode: resolve at admission, slot stays free
+                r.done = True
+                self._reserved[b] = 0
+                continue
+            prompt = np.asarray(r.prompt, np.int32)
+            if sc.paged:
+                phys = self.pool.alloc(pages_needed(len(prompt),
+                                                    sc.page_size))
+                self._btabs.assign(b, phys)
+            self._slot_req[b] = r
+            if sc.chunked_prefill:
+                self._prefilled[b] = 0       # chunks run in _prefill_step
+                continue
+            plogits, slot_cache = self._prefill(
+                self.params, self.proj, jnp.asarray(prompt)[None])
+            if sc.paged:
+                self._cache = self._paged_insert(
+                    self._cache, slot_cache,
+                    jnp.asarray(self._btabs.slot_pages[b], jnp.int32))
+            else:
+                self._cache = self._insert(self._cache, slot_cache,
+                                           np.int32(b))
+            self._activate(b, r, plogits[0, -1])
+
+    def _prefill_step(self) -> None:
+        """Advance in-flight chunked prefills by up to
+        ``prefill_chunks_per_step`` chunks (round-robin over slots so a
+        long prompt cannot starve another mid-prefill slot).  Each
+        chunk is padded to its bucket and written straight into the
+        slot's pages; the slot joins decode when the last chunk
+        lands."""
+        sc = self.sc
+        B = sc.max_batch
+        budget = sc.prefill_chunks_per_step
+        for off in range(B):
+            if budget == 0:
+                break
+            b = (self._pf_next + off) % B
+            if self._prefilled[b] is None:
+                continue
+            r = self._slot_req[b]
+            prompt = np.asarray(r.prompt, np.int32)
+            start = self._prefilled[b]
+            n = min(sc.prefill_chunk, len(prompt) - start)
+            bucket = sc.bucket_for(n)
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :n] = prompt[start: start + n]
+            last, self._cache = self._prefill_chunk(
+                self.params, self.proj, self._cache, jnp.asarray(toks),
+                jnp.asarray([start], jnp.int32),
+                jnp.asarray([n], jnp.int32),
+                jnp.asarray(self._btabs.rows[b: b + 1]))
+            self.prefill_chunk_shapes.add(bucket)
+            self._prefilled[b] = start + n
+            budget -= 1
+            if self._prefilled[b] == len(prompt):
+                self._prefilled[b] = None    # complete: join decode
+                self._activate(b, r, last[0])
+        self._pf_next = (self._pf_next + 1) % B
+
+    def _ensure_chunk_headroom(self, live: np.ndarray) -> None:
+        """Grow live sequences page-by-page: every decoding slot gets
+        pages covering the next ``decode_chunk`` tokens before the
+        fused scan runs (the scan itself never allocates).  The
+        admission-time worst-case reservation guarantees this
+        allocation succeeds.  Mid-prefill slots are skipped — their
+        prompt pages were allocated at admission and they grow only
+        once they join decode."""
+        sc = self.sc
+        pos_np = np.asarray(self._pos)
+        for b in range(sc.max_batch):
+            if not live[b]:
+                continue
+            need = min(pages_needed(min(int(pos_np[b]) + sc.decode_chunk,
+                                        sc.max_seq_len), sc.page_size),
+                       self._reserved[b])
+            have = len(self._btabs.slot_pages[b])
+            if need > have:
+                self._btabs.assign(b, self.pool.alloc(need - have),
+                                   start=have)
+
+    def step(self) -> bool:
+        """One scheduling iteration: admit, advance chunked prefills,
+        run one fused decode chunk over the decodable slots, harvest.
+        Returns whether any work remains (the ``generate`` drain
+        condition)."""
+        assert self._started, "call start(requests) first"
+        sc = self.sc
+        B = sc.max_batch
+        self._admit()
+        if sc.chunked_prefill:
+            self._prefill_step()
+        # decodable = admitted and fully prefilled; mid-prefill slots
+        # hold their pages and join decode only when complete
+        live = np.array([self._slot_req[b] is not None
+                         and self._prefilled[b] is None
+                         for b in range(B)])
+        if not live.any():
+            return self._busy()
+        btab_dev = None
+        if sc.paged:
+            self._ensure_chunk_headroom(live)
+            # mid-prefill rows export as garbage so the scan's masked
+            # writes cannot touch pages the prefill is filling
+            btab_dev = self._btabs.device(live=live)
+        carry, toks, emits = self._decode_chunk(
+            self.params, self.proj, self._cache, self._logits, self._pos,
+            self._emitted, self._max_new, self._done, self._trunc,
+            self.rng, btab_dev)
+        (self._logits, self._cache, self._pos, self._emitted, self._done,
+         self._trunc, self.rng) = carry
+        toks_np = np.asarray(toks)            # (N, B)
+        emits_np = np.asarray(emits)
+        done_np = np.asarray(self._done)
+        trunc_np = np.asarray(self._trunc)
+        for b in range(B):
+            if not live[b]:
+                continue
+            r = self._slot_req[b]
+            r.out_tokens.extend(
+                int(toks_np[t, b]) for t in range(sc.decode_chunk)
+                if emits_np[t, b])
+            if done_np[b]:
+                r.done = True
+                r.truncated = bool(trunc_np[b])
+                self._release(b)
+        return self._busy()
+
+    def generate(self, requests: List[Request]) -> List[Request]:
+        """Serve a list of requests to completion (continuous batching)."""
+        self.start(requests)
+        while self.step():
+            pass
         return requests

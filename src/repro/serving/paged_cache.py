@@ -25,8 +25,9 @@ Pool invariants (enforced by ``PagePool``):
   (admission + ``ensure_capacity`` headroom for the next
   ``decode_chunk`` tokens), so the fused decode scan never allocates.
 
-The device-side primitives (``append_token``, ``gather_pages``) are
-pure jnp and jit-safe; the allocator is plain numpy/Python host state.
+The device-side primitives (``append_token``, ``append_chunk``,
+``gather_pages``) are pure jnp and jit-safe; the allocator is plain
+numpy/Python host state.
 """
 from __future__ import annotations
 
@@ -114,8 +115,18 @@ class BlockTables:
         self.slot_pages[slot] = []
         self.rows[slot, :] = GARBAGE_PAGE
 
-    def device(self) -> jnp.ndarray:
-        return jnp.asarray(self.rows)
+    def device(self, live=None) -> jnp.ndarray:
+        """Device export of the rows.
+
+        ``live``: optional (n_slots,) bool — rows of non-live slots
+        (e.g. mid-prefill slots excluded from the fused decode scan)
+        export as the garbage page, so the scan's masked writes cannot
+        touch pages a concurrent chunked prefill is filling."""
+        rows = self.rows
+        if live is not None:
+            rows = np.where(np.asarray(live, bool)[:, None], rows,
+                            GARBAGE_PAGE)
+        return jnp.asarray(rows)
 
 
 # ---------------------------------------------------------------------------
@@ -136,6 +147,34 @@ def append_token(pool: jnp.ndarray, block_table: jnp.ndarray,
     b = jnp.arange(pos.shape[0])
     phys = block_table[b, pos // ps]                        # (B,)
     return pool.at[phys, :, pos % ps].set(val.astype(pool.dtype))
+
+
+def append_chunk(pool: jnp.ndarray, block_table: jnp.ndarray,
+                 pos0: jnp.ndarray, vals: jnp.ndarray,
+                 valid: jnp.ndarray) -> jnp.ndarray:
+    """Write a prefill chunk of cache entries through the block table.
+
+    pool: (P, Hkv, ps, R); block_table: (B, n_pages) int32; pos0: (B,)
+    position of each sequence's first chunk token; vals: (B, Hkv, S, R)
+    chunk entries; valid: (B, S) bool — bucket-padding entries (False)
+    are routed to the garbage page, so padded chunk tails can never
+    touch a real page (DESIGN.md §prefill).  Positions past the block
+    table's logical capacity are clamped before the dereference; only
+    padding can reach them, so the clamped rows are garbage-routed
+    anyway.
+    """
+    ps = pool.shape[2]
+    B, Hkv, S, R = vals.shape
+    n_pages = block_table.shape[1]
+    pos = pos0[:, None] + jnp.arange(S)[None, :]            # (B, S)
+    logical = jnp.minimum(pos // ps, n_pages - 1)
+    b = jnp.arange(B)[:, None]
+    phys = jnp.where(valid, block_table[b, logical], GARBAGE_PAGE)
+    flat_phys = phys.reshape(-1)                            # (B*S,)
+    flat_off = (pos % ps).reshape(-1)
+    flat_vals = vals.transpose(0, 2, 1, 3).reshape(B * S, Hkv, R)
+    return pool.at[flat_phys, :, flat_off].set(
+        flat_vals.astype(pool.dtype))
 
 
 def gather_pages(pool: jnp.ndarray, block_table: jnp.ndarray

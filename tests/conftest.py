@@ -3,10 +3,34 @@ single real CPU device; multi-device coverage runs in subprocesses
 (test_multidevice.py) that set --xla_force_host_platform_device_count
 themselves."""
 import dataclasses
+import os
 
 import jax
 import numpy as np
 import pytest
+
+from repro.config import ServeConfig
+
+# CI engine matrix (.github/workflows/ci.yml): REPRO_ENGINE=paged runs
+# the serving tests against the paged cache + chunked prefill path;
+# the default (dense) keeps the exact-length parity oracle.
+ENGINE = os.environ.get("REPRO_ENGINE", "dense")
+
+
+def serve_config(**kw) -> ServeConfig:
+    """ServeConfig honoring the CI engine matrix.
+
+    Tests that pin a specific layout construct ServeConfig directly;
+    everything routed through here runs dense by default and
+    paged+chunked under REPRO_ENGINE=paged (page_size 4 divides every
+    max_seq_len the serving tests use; prefill_chunk 8 forces
+    multi-chunk prompts)."""
+    if ENGINE == "paged":
+        kw.setdefault("paged", True)
+        kw.setdefault("page_size", 4)
+        kw.setdefault("chunked_prefill", True)
+        kw.setdefault("prefill_chunk", 8)
+    return ServeConfig(**kw)
 
 
 @pytest.fixture(scope="session")

@@ -1,6 +1,12 @@
 """Regression-gate unit tests on synthetic bench payload pairs."""
 
-from benchmarks.check_regression import compare, merge_min, rows_to_payload
+from benchmarks.check_regression import (
+    compare,
+    compare_ratios,
+    emit_skip,
+    merge_min,
+    rows_to_payload,
+)
 
 
 def payload(mode="quick", **rows):
@@ -82,6 +88,74 @@ def test_ratio_and_new_rows_ignored():
     failures, skip = compare(base, fresh, threshold=1.3)
     assert failures == []
     assert skip == "no comparable step-cost rows"
+
+
+# ---------------------------------------------------------------------------
+# Machine-normalized ratio gate
+# ---------------------------------------------------------------------------
+
+PAIRS = (("decode_kqsvd_cache", "decode_full_cache"),)
+
+
+def test_ratio_gate_is_machine_invariant():
+    """A 3x slower machine scales both sides of every pair: the
+    quotient is unchanged and the gate passes with no threshold fudge
+    (this is what replaces the loose CI REGRESSION_THRESHOLD)."""
+    base = payload(decode_full_cache=1000.0, decode_kqsvd_cache=400.0)
+    fresh = payload(decode_full_cache=3000.0, decode_kqsvd_cache=1200.0)
+    failures, skip = compare_ratios(base, fresh, threshold=1.2, pairs=PAIRS)
+    assert failures == [] and skip is None
+
+
+def test_ratio_gate_catches_relative_regression():
+    """The compressed path losing its edge over the full path fails
+    even though both rows got faster in wall-clock."""
+    base = payload(decode_full_cache=1000.0, decode_kqsvd_cache=400.0)
+    fresh = payload(decode_full_cache=500.0, decode_kqsvd_cache=900.0)
+    failures, skip = compare_ratios(base, fresh, threshold=2.0, pairs=PAIRS)
+    assert skip is None
+    assert len(failures) == 1
+    assert "decode_kqsvd_cache/decode_full_cache" in failures[0]
+
+
+def test_ratio_gate_improvement_passes():
+    base = payload(decode_full_cache=1000.0, decode_kqsvd_cache=400.0)
+    fresh = payload(decode_full_cache=1000.0, decode_kqsvd_cache=100.0)
+    failures, skip = compare_ratios(base, fresh, threshold=1.1, pairs=PAIRS)
+    assert failures == [] and skip is None
+
+
+def test_ratio_gate_missing_rows_skip_loudly():
+    """A renamed/absent pair member never fails the gate, and an empty
+    comparison surfaces a skip reason instead of silent success."""
+    base = payload(decode_full_cache=1000.0)
+    fresh = payload(decode_full_cache=1000.0)
+    failures, skip = compare_ratios(base, fresh, pairs=PAIRS)
+    assert failures == []
+    assert skip == "no comparable ratio pairs"
+
+
+def test_ratio_gate_mode_mismatch_skips():
+    base = payload(mode="full", decode_full_cache=1.0, decode_kqsvd_cache=1.0)
+    fresh = payload(
+        mode="quick", decode_full_cache=1.0, decode_kqsvd_cache=9.0
+    )
+    failures, skip = compare_ratios(base, fresh, pairs=PAIRS)
+    assert failures == []
+    assert "mode mismatch" in skip
+
+
+def test_emit_skip_is_loud(capsys, monkeypatch):
+    """Skips must never be silent: plain reason locally, a ::warning::
+    annotation under GitHub Actions."""
+    monkeypatch.delenv("GITHUB_ACTIONS", raising=False)
+    emit_skip("stale baseline")
+    out = capsys.readouterr().out
+    assert "SKIP" in out and "stale baseline" in out
+    monkeypatch.setenv("GITHUB_ACTIONS", "true")
+    emit_skip("stale baseline")
+    out = capsys.readouterr().out
+    assert "::warning" in out and "stale baseline" in out
 
 
 def test_merge_min_takes_per_row_minimum():

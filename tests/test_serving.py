@@ -7,8 +7,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from conftest import dropless
-from repro.config import CompressionConfig, ServeConfig
+from conftest import dropless, serve_config
+from repro.config import CompressionConfig
 from repro.configs import get_config
 from repro.core.calibration import GramAccumulator
 from repro.models import build_model
@@ -32,7 +32,7 @@ def setup(compressed=False, rank=None):
                                  rank_k=rank or cfg.d_head,
                                  rank_v=rank or cfg.d_head)
         proj = acc.solve(ccfg, model.group_output_weights(params))
-    sc = ServeConfig(max_seq_len=64, max_batch=4, temperature=0.0)
+    sc = serve_config(max_seq_len=64, max_batch=4, temperature=0.0)
     return cfg, model, params, ServingEngine(cfg, params, sc,
                                              projections=proj)
 
@@ -102,8 +102,8 @@ def test_engine_mixed_lengths_match_one_by_one():
     lens = [3, 9, 6, 12, 5, 8]                 # > max_batch: forces refill
     prompts = [rng_.integers(0, cfg.vocab_size, L).astype(np.int32)
                for L in lens]
-    sc = ServeConfig(max_seq_len=64, max_batch=4, temperature=0.0,
-                     decode_chunk=4)
+    sc = serve_config(max_seq_len=64, max_batch=4, temperature=0.0,
+                      decode_chunk=4)
     eng = ServingEngine(cfg, params, sc)
     reqs = [Request(rid=i, prompt=p, max_new_tokens=6)
             for i, p in enumerate(prompts)]
@@ -120,7 +120,7 @@ def test_engine_mixed_lengths_match_one_by_one():
 def test_engine_surfaces_truncation():
     """Hitting max_seq_len mid-generation is reported, not silent."""
     cfg, model, params, _ = setup()
-    sc = ServeConfig(max_seq_len=12, max_batch=2, decode_chunk=4)
+    sc = serve_config(max_seq_len=12, max_batch=2, decode_chunk=4)
     eng = ServingEngine(cfg, params, sc)
     prompt = (np.arange(10) % cfg.vocab_size).astype(np.int32)
     reqs = [Request(rid=0, prompt=prompt, max_new_tokens=8)]
@@ -137,11 +137,11 @@ def test_engine_eos_stops_slot_early():
     # find the greedy continuation's second token, use it as EOS
     prompt = (np.arange(8) * 7 % cfg.vocab_size).astype(np.int32)
     probe = [Request(rid=0, prompt=prompt, max_new_tokens=5)]
-    ServingEngine(cfg, params, ServeConfig(max_seq_len=64, max_batch=1)
+    ServingEngine(cfg, params, serve_config(max_seq_len=64, max_batch=1)
                   ).generate(probe)
     eos = probe[0].out_tokens[1]
-    sc = ServeConfig(max_seq_len=64, max_batch=2, decode_chunk=4,
-                     eos_token=int(eos))
+    sc = serve_config(max_seq_len=64, max_batch=2, decode_chunk=4,
+                      eos_token=int(eos))
     eng = ServingEngine(cfg, params, sc)
     reqs = [Request(rid=0, prompt=prompt, max_new_tokens=5)]
     eng.generate(reqs)
