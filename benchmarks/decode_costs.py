@@ -11,9 +11,14 @@ cache: the time grid is bounded by the actual max length, so the cost of
 a decode step tracks ``max(lengths)``, not ``max_seq_len``
 (DESIGN.md §decode).  The ``decode_ttft_*`` / ``decode_mixed_step``
 rows price chunked page-direct prefill against the dense-staging
-oracle and the piggybacked prefill+decode step (DESIGN.md §prefill);
-their quotients feed the machine-normalized regression gate
-(``check_regression.RATIO_PAIRS``).
+oracle and the piggybacked prefill+decode step (DESIGN.md §prefill).
+The ``decode_reserve`` / ``decode_preempt_*`` rows are an *engine*
+scenario: the same oversubscribed request batch (total pool pages <
+sum of the requests' worst cases) served end-to-end under reserve
+admission on an ample pool vs optimistic admission with
+preempt-and-recompute / preempt-and-swap on a small one
+(DESIGN.md §preemption).  All these quotients feed the
+machine-normalized regression gate (``check_regression.RATIO_PAIRS``).
 """
 from __future__ import annotations
 
@@ -223,6 +228,74 @@ def run(B: int = 4, Hkv: int = 8, m: int = 8, T: int = 4096,
     print(f"prefill ttft: chunked {us_ttft_c:.0f}us "
           f"(buf {chunk_buf}B) vs staged {us_ttft_s:.0f}us "
           f"(buf {stage_buf}B); mixed step {us_mixed:.0f}us")
+
+    rows.extend(_preemption_rows())
+    return rows
+
+
+def _preemption_rows() -> List[Row]:
+    """Oversubscribed-pool engine scenario (DESIGN.md §preemption).
+
+    One fixed request batch whose worst cases sum past the small pool,
+    served end-to-end three ways on a reduced model: reserve admission
+    with an ample pool (the oracle), and optimistic admission over the
+    small pool with preempt-and-recompute / preempt-and-swap.  The
+    scenario is deliberately tiny and identical in quick and full mode
+    — the signal is the *scheduling* overhead quotient, not model
+    FLOPs, and each engine is warmed once so jit compiles stay out of
+    the timed run (the drain loop is re-enterable: ``generate`` resets
+    state via ``start``)."""
+    from repro.config import ServeConfig
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving import Request, ServingEngine
+
+    cfg = get_config("tinyllama-1.1b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    T, ps, n_small = 32, 8, 9
+    lens = (14, 13, 14, 13, 14, 13)
+    max_new = 6
+    # sum of worst cases: 6 requests x ceil(20/8)=3 pages = 18 > 9
+    oversub = sum(pages_needed(min(L + max_new, T), ps) for L in lens)
+
+    def mk_reqs():
+        rng = np.random.default_rng(0)
+        return [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size,
+                                            L).astype(np.int32),
+                        max_new_tokens=max_new)
+                for i, L in enumerate(lens)]
+
+    base = dict(max_seq_len=T, max_batch=4, temperature=0.0,
+                decode_chunk=4, paged=True, page_size=ps)
+    scs = {
+        "decode_reserve": ServeConfig(**base),          # ample: full pool
+        "decode_preempt_recompute": ServeConfig(
+            **base, n_pages=n_small, admission="optimistic"),
+        "decode_preempt_swap": ServeConfig(
+            **base, n_pages=n_small, admission="optimistic",
+            preempt_mode="swap"),
+    }
+    rows: List[Row] = []
+    print("\n== decode_costs: oversubscribed-pool admission scenario ==")
+    for name, sc in scs.items():
+        eng = ServingEngine(cfg, params, sc)
+        eng.generate(mk_reqs())                          # warm compiles
+        # engine drains are host-scheduling loops of many small
+        # dispatches — noisy on a contended CPU, so give the min
+        # estimator a real sample budget
+        served, us = timed(lambda e=eng: e.generate(mk_reqs()), reps=3,
+                           budget_s=1.5)
+        assert all(r.done and not r.failed for r in served)
+        rows.append((name, us,
+                     f"pool_pages={sc.total_pages};"
+                     f"worst_case_pages={oversub};"
+                     f"preemptions={eng.n_preempted};"
+                     f"swaps={eng.n_swapped_out}"))
+        print(f"{name}: {us:.0f}us pool={sc.total_pages} "
+              f"(worst {oversub}) preemptions={eng.n_preempted} "
+              f"swaps={eng.n_swapped_out}")
     return rows
 
 

@@ -384,8 +384,44 @@ class ServeConfig:
     # one per mid-prefill slot — bounds the latency a decode iteration
     # pays for concurrent prompt admission
     prefill_chunks_per_step: int = 1
+    # admission policy for the paged pool (DESIGN.md §preemption):
+    # "reserve" (PR 2, the parity oracle) admits only when a request's
+    # *worst-case* page footprint fits the unreserved pool; "optimistic"
+    # admits on the prompt footprint alone and preempts-and-requeues
+    # LIFO victims when decode growth would exhaust the pool.
+    admission: str = "reserve"          # reserve | optimistic
+    # what happens to a preemption victim: "recompute" requeues it with
+    # its generated tokens carried as prompt suffix, so prefill rebuilds
+    # the (cheap, compressed) cache; "swap" round-trips the victim's
+    # pages through a host-RAM buffer instead of recomputing
+    preempt_mode: str = "recompute"     # recompute | swap
+    # pool watermarks, as fractions of the pool (DESIGN.md §preemption):
+    # optimistic admission stops once occupancy would cross the high
+    # watermark (headroom held back for decode growth); a preemption
+    # pass frees watermark_low extra slack beyond the strict deficit so
+    # the very next chunk boundary does not immediately preempt again
+    # (thrash guard)
+    watermark_high: float = 1.0
+    watermark_low: float = 0.0
+    # head-of-line window: how many pending requests _admit scans for
+    # one that fits before giving up this step (1 = strict FIFO)
+    admit_window: int = 4
 
     def __post_init__(self) -> None:
+        if self.admission not in ("reserve", "optimistic"):
+            raise ValueError(f"unknown admission policy {self.admission!r}")
+        if self.preempt_mode not in ("recompute", "swap"):
+            raise ValueError(f"unknown preempt_mode {self.preempt_mode!r}")
+        if self.admission == "optimistic" and not self.paged:
+            raise ValueError(
+                "optimistic admission preempts pages and requires "
+                "paged=True (the dense layout has no pool to run dry)")
+        if not 0.0 < self.watermark_high <= 1.0:
+            raise ValueError("watermark_high must be in (0, 1]")
+        if not 0.0 <= self.watermark_low < 1.0:
+            raise ValueError("watermark_low must be in [0, 1)")
+        if self.admit_window < 1:
+            raise ValueError("admit_window must be at least 1")
         if self.paged:
             if self.page_size <= 0:
                 raise ValueError("page_size must be positive")
@@ -429,8 +465,16 @@ class ServeConfig:
         return tuple(sorted(out))
 
     def bucket_for(self, n: int) -> int:
-        """Smallest bucket holding an ``n``-token chunk."""
-        assert 0 < n <= self.prefill_chunk, (n, self.prefill_chunk)
+        """Smallest bucket holding an ``n``-token chunk.
+
+        A chunk longer than the largest bucket would silently trace a
+        fresh XLA shape and break the ``len(buckets)`` compile bound,
+        so out-of-range lengths raise instead of clamping."""
+        if not 0 < n <= self.prefill_chunk:
+            raise ValueError(
+                f"chunk length {n} outside (0, {self.prefill_chunk}]: "
+                f"chunks beyond the largest bucket would trace a new "
+                f"prefill shape past the len(buckets) compile bound")
         for b in self.buckets:
             if b >= n:
                 return b

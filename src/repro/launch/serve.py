@@ -51,12 +51,37 @@ def main() -> None:
                     help="comma-separated padded chunk lengths (largest "
                          "must equal --prefill-chunk); empty derives by "
                          "doubling")
+    ap.add_argument("--admission", default="reserve",
+                    choices=["reserve", "optimistic"],
+                    help="paged admission policy (DESIGN.md §preemption):"
+                         " reserve = worst-case page reservation (the "
+                         "parity oracle); optimistic = admit on the "
+                         "prompt footprint and preempt-and-requeue LIFO "
+                         "victims when the pool runs dry.  Implies "
+                         "--paged.")
+    ap.add_argument("--preempt-mode", default="recompute",
+                    choices=["recompute", "swap"],
+                    help="victim handling under --admission optimistic: "
+                         "recompute the cache from the generated tokens, "
+                         "or round-trip the pages through host RAM")
+    ap.add_argument("--watermark-high", type=float, default=1.0,
+                    help="pool fraction optimistic admission may fill "
+                         "(headroom held back for decode growth)")
+    ap.add_argument("--watermark-low", type=float, default=0.0,
+                    help="extra pool fraction a preemption pass frees "
+                         "beyond the strict deficit (thrash guard)")
+    ap.add_argument("--admit-window", type=int, default=4,
+                    help="pending requests scanned for one that fits "
+                         "(avoids head-of-line blocking; 1 = strict FIFO)")
     args = ap.parse_args()
     if args.prefill_buckets and not args.prefill_chunk:
         ap.error("--prefill-buckets requires --prefill-chunk")
     if args.prefill_chunk and not args.paged:
         print("--prefill-chunk writes straight into pages: enabling "
               "--paged")
+        args.paged = True
+    if args.admission == "optimistic" and not args.paged:
+        print("--admission optimistic preempts pages: enabling --paged")
         args.paged = True
 
     cfg = get_config(args.arch)
@@ -89,7 +114,12 @@ def main() -> None:
                      page_size=args.page_size, n_pages=args.n_pages,
                      chunked_prefill=bool(args.prefill_chunk),
                      prefill_chunk=args.prefill_chunk or 512,
-                     prefill_buckets=buckets)
+                     prefill_buckets=buckets,
+                     admission=args.admission,
+                     preempt_mode=args.preempt_mode,
+                     watermark_high=args.watermark_high,
+                     watermark_low=args.watermark_low,
+                     admit_window=args.admit_window)
     eng = ServingEngine(cfg, params, sc, projections=proj)
     rng = np.random.default_rng(0)
     lens = rng.integers(min(4, args.prompt_len), args.prompt_len + 1,
@@ -102,6 +132,8 @@ def main() -> None:
     eng.generate(reqs)
     for r in reqs:
         note = "  [truncated]" if r.truncated else ""
+        if r.failed:
+            note = "  [failed: worst case exceeds the pool]"
         print(f"req {r.rid} (prompt {len(r.prompt):3d}): "
               f"{r.out_tokens}{note}")
     print(f"capacity gain vs full cache: {eng.capacity_gain():.2f}x")
@@ -109,6 +141,9 @@ def main() -> None:
         pool = eng.pool
         print(f"page pool: {pool.n_pages} x {args.page_size}-token "
               f"pages, {pool.free_count} free after drain")
+        print(f"admission={args.admission}: preemptions="
+              f"{eng.n_preempted} (swap out/in {eng.n_swapped_out}/"
+              f"{eng.n_swapped_in}), failed={eng.n_failed}")
     if args.prefill_chunk:
         print(f"prefill compiles: {len(eng.prefill_chunk_shapes)} chunk "
               f"shape(s) {sorted(eng.prefill_chunk_shapes)} of "

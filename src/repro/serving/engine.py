@@ -27,6 +27,30 @@ Two cache layouts (``ServeConfig.paged``):
   batch — HBM scales with *occupied pages*, not
   ``max_batch * max_seq_len``.
 
+Two paged admission policies (``ServeConfig.admission``, DESIGN.md
+§preemption):
+
+* **reserve** (default, the parity oracle): admission reserves the
+  request's *worst-case* ``ceil(min(prompt+max_new, T)/page_size)``
+  pages, so decode growth can never strand a live sequence — at the
+  cost of sizing the pool for a worst case that rarely materializes;
+* **optimistic**: admission charges only the prompt footprint (capped
+  by the pool's high watermark) and oversubscribes the rest.  When
+  ``decode_chunk`` headroom would exhaust the pool, LIFO victims are
+  preempted: their pages are released (freeing ``watermark_low`` extra
+  slack as a thrash guard) and they are requeued at the head of the
+  pending queue — either carrying their generated tokens as prompt
+  suffix so prefill *recomputes* the cheap compressed cache
+  (``preempt_mode="recompute"``), or round-tripping their pages
+  through a host-RAM buffer (``preempt_mode="swap"``).  Under no
+  pressure the two policies are token-for-token identical.
+
+In either policy a request whose worst case exceeds the *whole* pool
+can never complete, even alone: it is marked ``failed`` at admission
+and the rest of the batch keeps serving (no mid-serve raise), and
+``_admit`` scans a bounded ``admit_window`` of the pending queue so a
+small request is not head-of-line blocked behind a big one.
+
 Two prefill paths (``ServeConfig.chunked_prefill``, DESIGN.md §prefill):
 
 * **exact-length** (default, the parity oracle): each request prefills
@@ -63,8 +87,8 @@ from repro.config import ModelConfig, ServeConfig
 from repro.core.calibration import ModelProjections
 from repro.core.compressed import cache_footprint
 from repro.models.model import build_model
-from repro.serving.paged_cache import (BlockTables, PagePool,
-                                       PagePoolExhausted, pages_needed)
+from repro.serving.paged_cache import (BlockTables, PagePool, pages_needed,
+                                       swap_in, swap_out)
 
 
 @dataclasses.dataclass
@@ -75,6 +99,8 @@ class Request:
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     truncated: bool = False            # hit max_seq_len before max_new_tokens
+    failed: bool = False               # rejected at admission: worst case
+                                       # exceeds the whole page pool
 
 
 def sample_token(logits: jnp.ndarray, temperature: float, rng) -> jnp.ndarray:
@@ -289,16 +315,26 @@ class ServingEngine:
                     f"request {r.rid}: prompt length {len(r.prompt)}"
                     f" exceeds max_seq_len {T}")
         self._pending: List[Request] = list(requests)
-        self._reserved = [0] * B   # worst-case page reservation per slot
+        self._reserved = [0] * B   # worst-case pages per slot (reserve:
+        #                            admission gate; optimistic: growth cap)
         self.pool = None           # introspection (tests/bench)
         self._btabs = None
         if sc.paged:
-            self.pool = PagePool(sc.total_pages)
+            self.pool = PagePool(sc.total_pages, sc.watermark_high,
+                                 sc.watermark_low)
             self._btabs = BlockTables(B, sc.pages_per_seq)
             self._cache = self.model.init_paged_cache(
                 sc.total_pages + 1, sc.page_size, self.ranks)
         else:
             self._cache = self.model.init_cache(B, T, self.ranks)
+        # preemption bookkeeping (DESIGN.md §preemption)
+        self._stamp = [0] * B      # admission order per slot (LIFO victims)
+        self._admit_seq = 0
+        self._swapped: Dict[int, Dict[str, Any]] = {}   # id(req) -> state
+        self.n_preempted = 0
+        self.n_swapped_out = 0
+        self.n_swapped_in = 0
+        self.n_failed = 0
         self._logits = jnp.zeros((B, self.cfg.vocab_size), jnp.float32)
         self._pos = jnp.zeros((B,), jnp.int32)
         self._emitted = jnp.zeros((B,), jnp.int32)
@@ -306,6 +342,10 @@ class ServingEngine:
         self._done = jnp.ones((B,), bool)
         self._trunc = jnp.zeros((B,), bool)
         self._slot_req: List[Optional[Request]] = [None] * B
+        # the prompt a slot is actually serving: the request's prompt,
+        # plus — for a recompute-preempted victim — the tokens it had
+        # already generated, carried as prompt suffix
+        self._slot_prompt: List[Optional[np.ndarray]] = [None] * B
         # chunked prefill: prompt tokens already written per slot
         # (None = slot empty or fully prefilled)
         self._prefilled: List[Optional[int]] = [None] * B
@@ -318,24 +358,34 @@ class ServingEngine:
 
     def _worst_case_pages(self, r: Request) -> int:
         """Pages the request can ever occupy (truncation caps the
-        sequence at T).  Admission reserves this up front so page-
-        by-page growth can never strand a live sequence mid-decode
-        (no preemption yet — ROADMAP)."""
+        sequence at T).  Invariant under preemption: a recompute
+        victim's effective prompt grows by exactly the tokens its
+        remaining budget shrinks by, so prompt + max_new is stable."""
         sc = self.sc
         return pages_needed(min(len(r.prompt) + max(r.max_new_tokens, 0),
                                 sc.max_seq_len), sc.page_size)
 
+    def _effective_prompt(self, r: Request) -> np.ndarray:
+        """The prompt a (re)admission must prefill: the original
+        prompt, plus any tokens already generated before a preemption
+        (recompute carries them as prompt suffix)."""
+        return np.concatenate([np.asarray(r.prompt, np.int32),
+                               np.asarray(r.out_tokens, np.int32)])
+
     def _activate(self, b: int, r: Request, last_logits) -> None:
         """Arm slot ``b`` for decode once its prompt cache is in place."""
         self._logits = self._logits.at[b].set(last_logits)
-        self._pos = self._pos.at[b].set(len(r.prompt))
+        self._pos = self._pos.at[b].set(len(self._slot_prompt[b]))
         self._emitted = self._emitted.at[b].set(0)
-        self._max_new = self._max_new.at[b].set(r.max_new_tokens)
+        # a resumed victim already emitted part of its budget
+        self._max_new = self._max_new.at[b].set(
+            r.max_new_tokens - len(r.out_tokens))
         self._done = self._done.at[b].set(False)
         self._trunc = self._trunc.at[b].set(False)
 
     def _release(self, b: int) -> None:
         self._slot_req[b] = None
+        self._slot_prompt[b] = None
         self._prefilled[b] = None
         if self.sc.paged:
             # pages go back to the pool without draining the batch;
@@ -343,44 +393,86 @@ class ServingEngine:
             self._btabs.release(b, self.pool)
             self._reserved[b] = 0
 
+    def _fits_now(self, r: Request, worst: int) -> bool:
+        """Whether the request can be admitted at this instant."""
+        if self.sc.admission == "reserve":
+            # worst-case footprint must fit the unreserved pool so
+            # growth can always be satisfied without preemption
+            return worst <= self.pool.n_pages - sum(self._reserved)
+        # optimistic: charge only what is materialized right now (the
+        # effective prompt; for a swap victim that equals its swapped
+        # length), capped by the pool's high watermark.  An idle pool
+        # always admits a fitting request, or nothing could ever run
+        # when the prompt alone crosses the watermark.
+        need = pages_needed(len(r.prompt) + len(r.out_tokens),
+                            self.sc.page_size)
+        if self.pool.used_count == 0:
+            return need <= self.pool.free_count
+        return self.pool.can_admit(need)
+
+    def _next_admissible(self) -> Optional[Request]:
+        """Pop the first admissible pending request within the
+        ``admit_window`` scan, so a small request is not head-of-line
+        blocked behind a big one whose worst case doesn't fit yet.
+        Requests that could never fit — worst case beyond the whole
+        pool, even drained — are marked failed along the way instead
+        of aborting the batch."""
+        sc = self.sc
+        i = scanned = 0
+        while i < len(self._pending) and scanned < sc.admit_window:
+            r = self._pending[i]
+            if r.max_new_tokens - len(r.out_tokens) <= 0:
+                # nothing (left) to decode: resolve at admission
+                r.done = True
+                self._pending.pop(i)
+                continue
+            if sc.paged:
+                worst = self._worst_case_pages(r)
+                if worst > self.pool.n_pages:
+                    r.done = True
+                    r.failed = True
+                    self.n_failed += 1
+                    self._pending.pop(i)
+                    continue
+                if not self._fits_now(r, worst):
+                    i += 1
+                    scanned += 1
+                    continue
+            return self._pending.pop(i)
+        return None
+
     def _admit(self) -> None:
         """Fill free slots from the pending queue.
 
-        Exact-length path: prefill the whole prompt now (one compile
-        per distinct length) and insert.  Chunked path: allocate the
-        prompt's pages and queue the slot for chunk-by-chunk prefill —
-        ``_prefill_step`` advances it while other slots decode."""
+        Exact-length path: prefill the whole (effective) prompt now
+        (one compile per distinct length) and insert.  Chunked path:
+        allocate the prompt's pages and queue the slot for
+        chunk-by-chunk prefill — ``_prefill_step`` advances it while
+        other slots decode.  Swap victims skip prefill entirely: their
+        saved pages are restored from the host buffer."""
         sc = self.sc
         for b in range(sc.max_batch):
-            if self._slot_req[b] is not None or not self._pending:
+            if self._slot_req[b] is not None:
                 continue
+            r = self._next_admissible()
+            if r is None:
+                break
+            prompt = self._effective_prompt(r)
+            self._slot_req[b] = r
+            self._slot_prompt[b] = prompt
+            self._stamp[b] = self._admit_seq
+            self._admit_seq += 1
             if sc.paged:
-                # admission backpressure: the request's *worst-case*
-                # footprint must fit the unreserved pool, so growth
-                # can always be satisfied; otherwise it stays
-                # pending until finished slots release reservations
-                worst = self._worst_case_pages(self._pending[0])
-                if worst > self.pool.n_pages:
-                    raise PagePoolExhausted(
-                        f"request {self._pending[0].rid}: worst case "
-                        f"{worst} pages exceeds the pool "
-                        f"({self.pool.n_pages}); raise n_pages or lower "
-                        f"max_new_tokens")
-                if worst > self.pool.n_pages - sum(self._reserved):
-                    break
-                self._reserved[b] = worst
-            r = self._pending.pop(0)
-            if r.max_new_tokens <= 0:
-                # nothing to decode: resolve at admission, slot stays free
-                r.done = True
-                self._reserved[b] = 0
-                continue
-            prompt = np.asarray(r.prompt, np.int32)
-            if sc.paged:
+                self._reserved[b] = self._worst_case_pages(r)
                 phys = self.pool.alloc(pages_needed(len(prompt),
                                                     sc.page_size))
                 self._btabs.assign(b, phys)
-            self._slot_req[b] = r
+                if id(r) in self._swapped:
+                    st = self._swapped.pop(id(r))
+                    self._swap_in_slot(b, st["bufs"])
+                    self._activate(b, r, jnp.asarray(st["logits"]))
+                    self.n_swapped_in += 1
+                    continue
             if sc.chunked_prefill:
                 self._prefilled[b] = 0       # chunks run in _prefill_step
                 continue
@@ -395,16 +487,18 @@ class ServingEngine:
                                            np.int32(b))
             self._activate(b, r, plogits[0, -1])
 
-    def _prefill_step(self) -> None:
-        """Advance in-flight chunked prefills by up to
-        ``prefill_chunks_per_step`` chunks (round-robin over slots so a
-        long prompt cannot starve another mid-prefill slot).  Each
-        chunk is padded to its bucket and written straight into the
-        slot's pages; the slot joins decode when the last chunk
-        lands."""
+    def _prefill_step(self, budget: Optional[int] = None) -> int:
+        """Advance in-flight chunked prefills by up to ``budget``
+        (default ``prefill_chunks_per_step``) chunks, round-robin over
+        slots so a long prompt cannot starve another mid-prefill slot.
+        Each chunk is padded to its bucket and written straight into
+        the slot's pages; the slot joins decode when the last chunk
+        lands.  Returns the unspent budget, so the post-harvest refill
+        pass shares one per-step bound instead of doubling it."""
         sc = self.sc
         B = sc.max_batch
-        budget = sc.prefill_chunks_per_step
+        if budget is None:
+            budget = sc.prefill_chunks_per_step
         for off in range(B):
             if budget == 0:
                 break
@@ -412,7 +506,7 @@ class ServingEngine:
             if self._prefilled[b] is None:
                 continue
             r = self._slot_req[b]
-            prompt = np.asarray(r.prompt, np.int32)
+            prompt = self._slot_prompt[b]
             start = self._prefilled[b]
             n = min(sc.prefill_chunk, len(prompt) - start)
             bucket = sc.bucket_for(n)
@@ -430,39 +524,134 @@ class ServingEngine:
                 self._prefilled[b] = None    # complete: join decode
                 self._activate(b, r, last[0])
         self._pf_next = (self._pf_next + 1) % B
+        return budget
+
+    # -- preemption (DESIGN.md §preemption) ---------------------------------
+
+    def _swap_out_slot(self, b: int, n_tokens: int) -> Dict[str, Any]:
+        """Copy slot ``b``'s first ``n_tokens`` cache entries of every
+        layer to host RAM (before its pages are released)."""
+        row = self._btabs.rows[b].copy()
+
+        def out0(pool):                     # prefix leaves: (P, ...)
+            return swap_out(pool, row, n_tokens)
+
+        def out1(pools):                    # scanned steps: (n_steps, P, ...)
+            return np.stack([swap_out(pools[i], row, n_tokens)
+                             for i in range(pools.shape[0])])
+
+        bufs = {"prefix": jax.tree.map(out0, self._cache["prefix"])}
+        bufs["steps"] = (jax.tree.map(out1, self._cache["steps"])
+                         if self._cache["steps"] is not None else None)
+        return bufs
+
+    def _swap_in_slot(self, b: int, bufs: Dict[str, Any]) -> None:
+        """Restore a swapped-out cache through slot ``b``'s (fresh)
+        block-table row — byte-exact, so generations resume unchanged."""
+        row = self._btabs.rows[b].copy()
+
+        def in0(pool, vals):
+            return swap_in(pool, row, vals)
+
+        def in1(pools, vals):
+            return jnp.stack([swap_in(pools[i], row, vals[i])
+                              for i in range(pools.shape[0])])
+
+        cache = {"prefix": jax.tree.map(in0, self._cache["prefix"],
+                                        bufs["prefix"])}
+        cache["steps"] = (jax.tree.map(in1, self._cache["steps"],
+                                       bufs["steps"])
+                          if self._cache["steps"] is not None else None)
+        self._cache = cache
+
+    def _preempt(self, b: int) -> None:
+        """Evict slot ``b`` and requeue its request at the head of the
+        pending queue.  Recompute mode (and any mid-prefill victim,
+        which has no decode state to save) relies on the generated
+        tokens carried as prompt suffix; swap mode saves the slot's
+        pages and next-token logits so readmission restores them
+        byte-exact instead of recomputing."""
+        r = self._slot_req[b]
+        mid_prefill = self._prefilled[b] is not None
+        if self.sc.preempt_mode == "swap" and not mid_prefill:
+            pos = int(np.asarray(self._pos)[b])  # == len(effective prompt)
+            self._swapped[id(r)] = {
+                "logits": np.asarray(self._logits[b]),
+                "bufs": self._swap_out_slot(b, pos),
+            }
+            self.n_swapped_out += 1
+        self._pending.insert(0, r)
+        self._release(b)
+        self._done = self._done.at[b].set(True)
+        self.n_preempted += 1
+
+    def _preempt_for_headroom(self, live: np.ndarray,
+                              needs: Dict[int, int]) -> None:
+        """Free pages for this chunk's growth by evicting LIFO victims.
+
+        ``needs``: extra pages per live slot.  Victims are *any*
+        occupied slot (decoding or mid-prefill), youngest admission
+        stamp first, and the oldest is never evicted — combined with
+        the fail-at-admission check (worst case <= whole pool) that
+        guarantees forward progress: at minimum the oldest request
+        runs alone.  Eviction continues past the strict deficit until
+        ``low_extra`` slack pages are also free (thrash guard)."""
+        deficit = sum(needs.values())
+        if deficit <= self.pool.free_count:
+            return
+        cand = sorted((b for b in range(self.sc.max_batch)
+                       if self._slot_req[b] is not None),
+                      key=lambda b: self._stamp[b])
+        while len(cand) > 1 and (deficit + self.pool.low_extra
+                                 > self.pool.free_count):
+            b = cand.pop()                   # youngest admission last
+            deficit -= needs.pop(b, 0)
+            self._preempt(b)
+            live[b] = False
 
     def _ensure_chunk_headroom(self, live: np.ndarray) -> None:
         """Grow live sequences page-by-page: every decoding slot gets
         pages covering the next ``decode_chunk`` tokens before the
-        fused scan runs (the scan itself never allocates).  The
-        admission-time worst-case reservation guarantees this
-        allocation succeeds.  Mid-prefill slots are skipped — their
-        prompt pages were allocated at admission and they grow only
-        once they join decode."""
+        fused scan runs (the scan itself never allocates).  Reserve
+        admission guarantees the allocation succeeds; optimistic
+        admission instead preempts LIFO victims when the pool would
+        run dry.  Mid-prefill slots are skipped — their prompt pages
+        were allocated at admission and they grow only once they join
+        decode."""
         sc = self.sc
         pos_np = np.asarray(self._pos)
+        needs: Dict[int, int] = {}
         for b in range(sc.max_batch):
             if not live[b]:
                 continue
             need = min(pages_needed(min(int(pos_np[b]) + sc.decode_chunk,
                                         sc.max_seq_len), sc.page_size),
                        self._reserved[b])
+            extra = need - len(self._btabs.slot_pages[b])
+            if extra > 0:
+                needs[b] = extra
+        if sc.admission == "optimistic":
+            self._preempt_for_headroom(live, needs)
+        for b, extra in needs.items():
+            if not live[b]:                  # evicted above
+                continue
             have = len(self._btabs.slot_pages[b])
-            if need > have:
-                self._btabs.assign(b, self.pool.alloc(need - have),
-                                   start=have)
+            self._btabs.assign(b, self.pool.alloc(extra), start=have)
 
     def step(self) -> bool:
         """One scheduling iteration: admit, advance chunked prefills,
-        run one fused decode chunk over the decodable slots, harvest.
-        Returns whether any work remains (the ``generate`` drain
-        condition)."""
+        run one fused decode chunk over the decodable slots, harvest —
+        then admit again, so a slot freed by the harvest starts its
+        next request in the *same* step instead of idling for a full
+        chunk (the refill-bubble fix).  Returns whether any work
+        remains (the ``generate`` drain condition)."""
         assert self._started, "call start(requests) first"
         sc = self.sc
         B = sc.max_batch
         self._admit()
+        pf_budget = 0
         if sc.chunked_prefill:
-            self._prefill_step()
+            pf_budget = self._prefill_step()
         # decodable = admitted and fully prefilled; mid-prefill slots
         # hold their pages and join decode only when complete
         live = np.array([self._slot_req[b] is not None
@@ -472,9 +661,14 @@ class ServingEngine:
             return self._busy()
         btab_dev = None
         if sc.paged:
+            # may preempt LIFO victims (optimistic admission) when the
+            # chunk's growth would exhaust the pool — mutates ``live``
             self._ensure_chunk_headroom(live)
-            # mid-prefill rows export as garbage so the scan's masked
-            # writes cannot touch pages the prefill is filling
+            if not live.any():
+                return self._busy()
+            # mid-prefill / evicted rows export as garbage so the
+            # scan's masked writes cannot touch pages a prefill is
+            # filling or that were recycled
             btab_dev = self._btabs.device(live=live)
         carry, toks, emits = self._decode_chunk(
             self.params, self.proj, self._cache, self._logits, self._pos,
@@ -486,6 +680,7 @@ class ServingEngine:
         emits_np = np.asarray(emits)
         done_np = np.asarray(self._done)
         trunc_np = np.asarray(self._trunc)
+        freed = False
         for b in range(B):
             if not live[b]:
                 continue
@@ -497,6 +692,14 @@ class ServingEngine:
                 r.done = True
                 r.truncated = bool(trunc_np[b])
                 self._release(b)
+                freed = True
+        if freed and self._pending:
+            # refill the freed slots now: the next request prefills in
+            # this very step instead of sitting idle for one chunk
+            # (within the step's remaining prefill-chunk budget)
+            self._admit()
+            if sc.chunked_prefill and pf_budget:
+                self._prefill_step(pf_budget)
         return self._busy()
 
     def generate(self, requests: List[Request]) -> List[Request]:

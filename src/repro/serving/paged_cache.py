@@ -48,13 +48,25 @@ class PagePool:
 
     Physical ids run ``1 .. n_pages`` (0 is the reserved garbage page);
     the backing arrays are sized ``n_pages + 1``.
+
+    Watermarks (DESIGN.md §preemption), as fractions of the pool:
+    ``high_watermark`` caps how full optimistic admission may pack the
+    pool (``can_admit``) so some headroom stays for decode growth;
+    ``low_watermark`` becomes ``low_extra`` — slack pages a preemption
+    pass frees *beyond* the strict deficit, so the very next chunk
+    boundary does not immediately preempt again (thrash guard).
     """
 
-    def __init__(self, n_pages: int):
+    def __init__(self, n_pages: int, high_watermark: float = 1.0,
+                 low_watermark: float = 0.0):
         assert n_pages >= 1, "pool needs at least one allocatable page"
+        assert 0.0 < high_watermark <= 1.0
+        assert 0.0 <= low_watermark < 1.0
         self.n_pages = n_pages
         self._free: List[int] = list(range(n_pages, 0, -1))  # pop() -> 1..
         self._owned = np.zeros(n_pages + 1, bool)
+        self.high_pages = max(1, int(round(high_watermark * n_pages)))
+        self.low_extra = int(round(low_watermark * n_pages))
 
     @property
     def free_count(self) -> int:
@@ -63,6 +75,11 @@ class PagePool:
     @property
     def used_count(self) -> int:
         return self.n_pages - len(self._free)
+
+    def can_admit(self, n: int) -> bool:
+        """Optimistic-admission check: ``n`` pages are free *and* the
+        pool stays at or below the high watermark afterwards."""
+        return n <= len(self._free) and self.used_count + n <= self.high_pages
 
     def alloc(self, n: int) -> List[int]:
         """Pop ``n`` pages; raises PagePoolExhausted (allocating none)
@@ -175,6 +192,38 @@ def append_chunk(pool: jnp.ndarray, block_table: jnp.ndarray,
     flat_vals = vals.transpose(0, 2, 1, 3).reshape(B * S, Hkv, R)
     return pool.at[flat_phys, :, flat_off].set(
         flat_vals.astype(pool.dtype))
+
+
+def swap_out(pool: jnp.ndarray, row, n_tokens: int) -> np.ndarray:
+    """Swap one slot's cache entries out to a host-RAM buffer.
+
+    pool: (P, Hkv, ps, R); row: (n_pages,) block-table row of the
+    victim.  Gathers only the slot's *occupied* pages (``gather_pages``
+    over the row's live prefix — the tail is garbage-page entries) and
+    copies its first ``n_tokens`` entries to host memory ->
+    (Hkv, n_tokens, R) numpy, so the transfer is ~``n_tokens`` wide,
+    not ``max_seq_len``.  The victim's pages can then be freed;
+    ``swap_in`` restores the bytes through a fresh row.
+    """
+    ps = pool.shape[2]
+    occupied = pages_needed(n_tokens, ps)
+    seq = gather_pages(pool, jnp.asarray(row[:occupied], jnp.int32)[None])
+    return np.asarray(seq[0])[:, :n_tokens]
+
+
+def swap_in(pool: jnp.ndarray, row, vals: np.ndarray) -> jnp.ndarray:
+    """Swap a host buffer back into the pool through a (fresh) row.
+
+    vals: (Hkv, n_tokens, R) numpy from ``swap_out``.  The entries are
+    written through ``append_chunk`` at positions ``[0, n_tokens)`` of
+    the block-table ``row`` the slot now owns — a byte-exact restore,
+    so a swap round-trip preserves token-for-token outputs.
+    """
+    n_tokens = vals.shape[1]
+    row = jnp.asarray(row, jnp.int32)[None]
+    pos0 = jnp.zeros((1,), jnp.int32)
+    valid = jnp.ones((1, n_tokens), bool)
+    return append_chunk(pool, row, pos0, jnp.asarray(vals)[None], valid)
 
 
 def gather_pages(pool: jnp.ndarray, block_table: jnp.ndarray

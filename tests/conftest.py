@@ -13,7 +13,9 @@ from repro.config import ServeConfig
 
 # CI engine matrix (.github/workflows/ci.yml): REPRO_ENGINE=paged runs
 # the serving tests against the paged cache + chunked prefill path;
-# the default (dense) keeps the exact-length parity oracle.
+# paged-preempt additionally switches to optimistic admission over a
+# deliberately small pool so preempt-and-requeue actually fires under
+# pytest; the default (dense) keeps the exact-length parity oracle.
 ENGINE = os.environ.get("REPRO_ENGINE", "dense")
 
 
@@ -24,12 +26,21 @@ def serve_config(**kw) -> ServeConfig:
     everything routed through here runs dense by default and
     paged+chunked under REPRO_ENGINE=paged (page_size 4 divides every
     max_seq_len the serving tests use; prefill_chunk 8 forces
-    multi-chunk prompts)."""
-    if ENGINE == "paged":
+    multi-chunk prompts).  REPRO_ENGINE=paged-preempt shrinks the pool
+    to one worst-case sequence (max_seq_len / page_size pages — the
+    smallest size at which no single request can fail admission) and
+    turns on optimistic admission, so multi-slot tests oversubscribe
+    and exercise preemption."""
+    if ENGINE in ("paged", "paged-preempt"):
         kw.setdefault("paged", True)
         kw.setdefault("page_size", 4)
         kw.setdefault("chunked_prefill", True)
         kw.setdefault("prefill_chunk", 8)
+    if ENGINE == "paged-preempt":
+        T = kw.get("max_seq_len", 4096)
+        kw.setdefault("n_pages", max(2, T // kw["page_size"]))
+        kw.setdefault("admission", "optimistic")
+        kw.setdefault("watermark_low", 0.1)
     return ServeConfig(**kw)
 
 

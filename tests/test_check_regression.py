@@ -135,6 +135,51 @@ def test_ratio_gate_missing_rows_skip_loudly():
     assert skip == "no comparable ratio pairs"
 
 
+def test_ratio_gate_per_pair_threshold_multiplier():
+    """Engine-drain pairs carry a widened threshold (3-tuple form): a
+    2.6x quotient drift passes a 2x-widened pair but still fails a
+    plain pair, and a catastrophic drift fails both."""
+    wide = (("decode_preempt_swap", "decode_reserve", 2.0),)
+    plain = (("decode_preempt_swap", "decode_reserve"),)
+    base = payload(decode_preempt_swap=660.0, decode_reserve=1000.0)
+    drift = payload(decode_preempt_swap=1700.0, decode_reserve=1000.0)
+    failures, skip = compare_ratios(base, drift, threshold=2.0, pairs=wide)
+    assert failures == [] and skip is None
+    failures, _ = compare_ratios(base, drift, threshold=2.0, pairs=plain)
+    assert len(failures) == 1
+    thrash = payload(decode_preempt_swap=3300.0, decode_reserve=1000.0)
+    failures, _ = compare_ratios(base, thrash, threshold=2.0, pairs=wide)
+    assert len(failures) == 1 and "decode_preempt_swap" in failures[0]
+
+
+def test_ratio_gate_stale_baseline_names_missing_pairs():
+    """Fresh preemption rows against a pre-preemption baseline: the
+    pair is skipped with a reason naming it (so the stale committed
+    BENCH_decode.json is regenerated, not silently ungated), while
+    pairs present in both payloads are still gated."""
+    pairs = PAIRS + (("decode_preempt_recompute", "decode_reserve"),)
+    base = payload(decode_full_cache=1000.0, decode_kqsvd_cache=400.0)
+    fresh = payload(
+        decode_full_cache=1000.0,
+        decode_kqsvd_cache=400.0,
+        decode_preempt_recompute=900.0,
+        decode_reserve=600.0,
+    )
+    failures, skip = compare_ratios(base, fresh, pairs=pairs)
+    assert failures == []
+    assert "stale baseline" in skip
+    assert "decode_preempt_recompute/decode_reserve" in skip
+    # a still-covered pair regressing is caught alongside the skip
+    worse = payload(
+        decode_full_cache=500.0,
+        decode_kqsvd_cache=2000.0,
+        decode_preempt_recompute=900.0,
+        decode_reserve=600.0,
+    )
+    failures, skip = compare_ratios(base, worse, threshold=2.0, pairs=pairs)
+    assert len(failures) == 1 and "stale baseline" in skip
+
+
 def test_ratio_gate_mode_mismatch_skips():
     base = payload(mode="full", decode_full_cache=1.0, decode_kqsvd_cache=1.0)
     fresh = payload(

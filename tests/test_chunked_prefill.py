@@ -173,6 +173,19 @@ def test_bucket_validation():
                     prefill_chunk=8, prefill_buckets=(2, 4))
 
 
+def test_bucket_for_out_of_range_raises():
+    """A chunk longer than the largest bucket must raise a clear error,
+    not silently trace a fresh XLA shape past the len(buckets) compile
+    bound (and never clamp, which would drop tokens)."""
+    sc = ServeConfig(paged=True, page_size=4, chunked_prefill=True,
+                     prefill_chunk=64)
+    with pytest.raises(ValueError, match="compile bound"):
+        sc.bucket_for(65)
+    with pytest.raises(ValueError, match="chunk length"):
+        sc.bucket_for(0)
+    assert sc.bucket_for(64) == 64             # boundary still fine
+
+
 def test_bucket_padding_does_not_change_logits():
     """The same chunk padded to two different buckets yields the same
     last-valid logits and cache contents."""

@@ -63,6 +63,45 @@ def test_pages_needed():
     assert pages_needed(9, 8) == 2
 
 
+def test_pool_watermarks():
+    """High watermark caps optimistic admission; low watermark becomes
+    the slack a preemption pass frees beyond the strict deficit."""
+    pool = PagePool(10, high_watermark=0.8, low_watermark=0.2)
+    assert pool.high_pages == 8 and pool.low_extra == 2
+    pool.alloc(7)
+    assert pool.can_admit(1)              # 7 + 1 <= 8
+    assert not pool.can_admit(2)          # would cross the high watermark
+    # default watermarks are neutral: admit while anything is free
+    full = PagePool(4)
+    assert full.high_pages == 4 and full.low_extra == 0
+    full.alloc(3)
+    assert full.can_admit(1) and not full.can_admit(2)
+
+
+def test_swap_roundtrip_is_byte_exact():
+    """swap_out -> free -> alloc elsewhere -> swap_in restores the
+    slot's live entries exactly through a *different* block-table row,
+    and never touches the other slot's pages."""
+    from repro.serving import gather_pages, swap_in, swap_out
+
+    rng_ = np.random.default_rng(0)
+    Hkv, ps, R, L = 2, 4, 8, 11                     # 11 tokens -> 3 pages
+    P = 8
+    pool = jnp.asarray(rng_.normal(size=(P, Hkv, ps, R)), jnp.float32)
+    row = np.array([3, 1, 6, 0], np.int32)          # victim's pages
+    other = np.array([2, 5, 0, 0], np.int32)        # bystander slot
+    buf = swap_out(pool, row, L)
+    assert buf.shape == (Hkv, L, R)
+    ref = np.asarray(gather_pages(pool, jnp.asarray(other[None])))
+    new_row = np.array([7, 4, 3, 0], np.int32)      # re-alloc'd elsewhere
+    pool2 = swap_in(pool, new_row, buf)
+    restored = np.asarray(gather_pages(pool2, jnp.asarray(new_row[None])))
+    np.testing.assert_array_equal(restored[0, :, :L], buf)
+    # bystander pages untouched
+    np.testing.assert_array_equal(
+        np.asarray(gather_pages(pool2, jnp.asarray(other[None]))), ref)
+
+
 # ---------------------------------------------------------------------------
 # Paged kernel vs oracles
 # ---------------------------------------------------------------------------
@@ -239,27 +278,32 @@ def test_paged_engine_oversubscribed_pool_reuses_freed_pages():
     assert eng.pool.free_count == 3
 
 
-def test_paged_engine_pool_exhaustion_prompt():
-    """A prompt that cannot ever fit the pool raises, not hangs."""
+def test_paged_engine_too_big_prompt_fails():
+    """A prompt that cannot ever fit the pool is failed at admission
+    (not raised, not hung) — DESIGN.md §preemption."""
     cfg, model, params, _ = _tiny()
     sc = ServeConfig(max_seq_len=32, max_batch=2, paged=True, page_size=8,
                      n_pages=1)
     eng = ServingEngine(cfg, params, sc)
     prompt = _mixed_prompts(cfg, [12])[0]            # needs 2 pages > 1
-    with pytest.raises(PagePoolExhausted):
-        eng.generate([Request(rid=0, prompt=prompt, max_new_tokens=4)])
+    reqs = [Request(rid=0, prompt=prompt, max_new_tokens=4)]
+    eng.generate(reqs)
+    assert reqs[0].failed and reqs[0].done and not reqs[0].out_tokens
+    assert eng.n_failed == 1
 
 
-def test_paged_engine_pool_exhaustion_growth():
-    """A request whose worst-case growth exceeds the whole pool raises
-    at admission (reservation admission control), not mid-decode."""
+def test_paged_engine_too_big_growth_fails():
+    """A request whose worst-case growth exceeds the whole pool is
+    failed at admission (it could never complete even alone), not
+    aborted mid-decode."""
     cfg, model, params, _ = _tiny()
     sc = ServeConfig(max_seq_len=32, max_batch=1, paged=True, page_size=8,
                      n_pages=1, decode_chunk=4)
     eng = ServingEngine(cfg, params, sc)
     prompt = _mixed_prompts(cfg, [5])[0]             # 1 page, then grows
-    with pytest.raises(PagePoolExhausted):
-        eng.generate([Request(rid=0, prompt=prompt, max_new_tokens=12)])
+    reqs = [Request(rid=0, prompt=prompt, max_new_tokens=12)]
+    eng.generate(reqs)
+    assert reqs[0].failed and reqs[0].done and not reqs[0].out_tokens
 
 
 def test_paged_engine_truncation_matches_dense():

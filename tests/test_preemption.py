@@ -1,0 +1,227 @@
+"""Optimistic paged admission with preempt-and-requeue
+(DESIGN.md §preemption).
+
+Parity contract: under an oversubscribed pool (total pages < sum of the
+requests' worst cases) optimistic admission completes every request
+with token-for-token output parity vs reserve mode on an ample pool,
+for both ``preempt_mode="recompute"`` and ``"swap"``, with at least one
+preemption observed.  Satellites: bounded-window admission (no
+head-of-line blocking), same-step refill of freed slots, and too-big
+requests failing without aborting the batch.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+
+from conftest import ENGINE, serve_config
+from repro.config import ServeConfig
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import Request, ServingEngine
+
+
+def _setup():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompts(cfg, lens, seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+            for n in lens]
+
+
+def _run(cfg, params, sc, prompts, max_new=6):
+    eng = ServingEngine(cfg, params, sc)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+    eng.generate(reqs)
+    return eng, reqs
+
+
+# five requests of worst case 3 pages each (prompt ~14 + 6 new @ ps=8)
+# against a 9-page pool: sum of worst cases 15 > 9 — oversubscribed
+OVERSUB = dict(max_seq_len=32, max_batch=4, temperature=0.0,
+               decode_chunk=4, paged=True, page_size=8)
+LENS = (14, 13, 14, 13, 14)
+
+
+def _oversub_case(cfg, params, **kw):
+    ample = ServeConfig(**OVERSUB)               # n_pages=0: full capacity
+    small = ServeConfig(**OVERSUB, n_pages=9, admission="optimistic", **kw)
+    prompts = _prompts(cfg, LENS)
+    _, reserve = _run(cfg, params, ample, prompts)
+    eng, opt = _run(cfg, params, small, prompts)
+    for d, p in zip(reserve, opt):
+        assert d.out_tokens == p.out_tokens, d.rid
+        assert p.done and not p.truncated and not p.failed
+    return eng
+
+
+def test_optimistic_recompute_matches_reserve():
+    """Preempt-and-recompute under pool pressure: token-for-token
+    parity with reserve admission on an ample pool, and the eviction
+    path demonstrably ran."""
+    cfg, model, params = _setup()
+    eng = _oversub_case(cfg, params)
+    assert eng.n_preempted >= 1
+    assert eng.n_swapped_out == 0
+    assert eng.pool.free_count == eng.pool.n_pages   # full drain
+
+
+def test_optimistic_swap_matches_reserve():
+    """Swap mode round-trips victims through host RAM instead of
+    recomputing: byte-exact restore, same outputs, swaps observed."""
+    cfg, model, params = _setup()
+    eng = _oversub_case(cfg, params, preempt_mode="swap")
+    assert eng.n_preempted >= 1
+    assert eng.n_swapped_out >= 1
+    assert eng.n_swapped_in == eng.n_swapped_out     # every victim resumed
+    assert eng.pool.free_count == eng.pool.n_pages
+
+
+def test_optimistic_chunked_prefill_matches_reserve():
+    """The same contract through chunked page-direct prefill (victims
+    are readmitted with generated tokens as prompt suffix and rebuilt
+    chunk-by-chunk; mid-prefill victims fall back to recompute)."""
+    cfg, model, params = _setup()
+    base = dict(max_seq_len=32, max_batch=4, temperature=0.0,
+                decode_chunk=4, paged=True, page_size=4,
+                chunked_prefill=True, prefill_chunk=8)
+    prompts = _prompts(cfg, (14, 13, 14, 13, 14, 6), seed=5)
+    _, reserve = _run(cfg, params, ServeConfig(**base), prompts)
+    for mode in ("recompute", "swap"):
+        sc = ServeConfig(**base, n_pages=10, admission="optimistic",
+                         preempt_mode=mode)
+        eng, opt = _run(cfg, params, sc, prompts)
+        assert [r.out_tokens for r in reserve] == \
+            [r.out_tokens for r in opt], mode
+        assert eng.n_preempted >= 1, mode
+        assert eng.pool.free_count == eng.pool.n_pages
+
+
+def test_victims_are_lifo():
+    """When growth exhausts the pool, the *youngest* admission is
+    evicted and requeued at the head of the pending queue; the oldest
+    keeps running."""
+    cfg, model, params = _setup()
+    sc = ServeConfig(max_seq_len=32, max_batch=2, temperature=0.0,
+                     decode_chunk=4, paged=True, page_size=8, n_pages=5,
+                     admission="optimistic")
+    eng = ServingEngine(cfg, params, sc)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=6)
+            for i, p in enumerate(_prompts(cfg, (14, 14), seed=7))]
+    eng.start(reqs)
+    eng.step()
+    # both prompts admitted (2 pages each of 5); the first growth to a
+    # 3rd page fits only one slot -> slot 1 (younger stamp) evicted
+    assert eng._slot_req[0] is reqs[0]
+    assert eng._slot_req[1] is None
+    assert eng._pending and eng._pending[0] is reqs[1]
+    assert eng.n_preempted == 1
+    while eng.step():
+        pass
+    assert all(r.done and not r.failed for r in reqs)
+    # parity: the preempted request still matches a solo run
+    _, solo = _run(cfg, params, dataclasses.replace(sc, max_batch=1),
+                   [reqs[1].prompt])
+    assert reqs[1].out_tokens == solo[0].out_tokens
+
+
+def test_oversubscribed_matrix_engine():
+    """Through the conftest engine matrix: under REPRO_ENGINE=
+    paged-preempt the pool is one worst-case sequence, so this batch
+    oversubscribes it and must preempt — outputs still match a solo
+    run of each request on every engine."""
+    cfg, model, params = _setup()
+    sc = serve_config(max_seq_len=32, max_batch=4, temperature=0.0,
+                      decode_chunk=4)
+    prompts = _prompts(cfg, (14, 13, 14, 13), seed=11)
+    eng, reqs = _run(cfg, params, sc, prompts, max_new=5)
+    assert all(r.done and not r.failed for r in reqs)
+    if ENGINE == "paged-preempt":
+        assert eng.n_preempted >= 1
+    solo_sc = serve_config(max_seq_len=32, max_batch=1, temperature=0.0,
+                           decode_chunk=4)
+    for i, p in enumerate(prompts):
+        _, solo = _run(cfg, params, solo_sc, [p], max_new=5)
+        assert reqs[i].out_tokens == solo[0].out_tokens, i
+
+
+# ---------------------------------------------------------------------------
+# Satellite fixes
+# ---------------------------------------------------------------------------
+
+
+def test_reserve_window_admits_small_request_past_blocked_head():
+    """Head-of-line fix: a short request overtakes a long one whose
+    worst case doesn't fit the unreserved pool yet (reserve mode scans
+    a bounded window instead of only _pending[0])."""
+    cfg, model, params = _setup()
+    sc = ServeConfig(max_seq_len=32, max_batch=2, temperature=0.0,
+                     decode_chunk=4, paged=True, page_size=8, n_pages=4)
+    prompts = _prompts(cfg, (8, 8, 6), seed=13)
+    reqs = [Request(rid=0, prompt=prompts[0], max_new_tokens=8),
+            Request(rid=1, prompt=prompts[1], max_new_tokens=24),  # 4 pages
+            Request(rid=2, prompt=prompts[2], max_new_tokens=6)]   # 2 pages
+    eng = ServingEngine(cfg, params, sc)
+    eng.start(reqs)
+    eng.step()
+    resident = {r.rid for r in eng._slot_req if r is not None}
+    # the long request is still waiting; the short one overtook it
+    assert 1 not in resident and not reqs[1].done
+    assert resident == {0, 2}
+    while eng.step():
+        pass
+    assert all(r.done and not r.failed for r in reqs)
+    assert len(reqs[1].out_tokens) == 24 and not reqs[1].truncated
+
+
+def test_freed_slot_refills_in_same_step():
+    """Refill-bubble fix: when a request finishes, the next pending
+    request is admitted (and starts prefilling) in the same ``step()``
+    its slot frees, not one chunk later."""
+    cfg, model, params = _setup()
+    sc = serve_config(max_seq_len=32, max_batch=1, temperature=0.0,
+                      decode_chunk=4)
+    prompts = _prompts(cfg, (6, 6), seed=17)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=4)
+            for i, p in enumerate(prompts)]
+    eng = ServingEngine(cfg, params, sc)
+    eng.start(reqs)
+    for _ in range(64):
+        eng.step()
+        if reqs[0].done:
+            break
+    assert reqs[0].done
+    # same step: slot 0 already belongs to the second request
+    assert eng._slot_req[0] is reqs[1]
+    while eng.step():
+        pass
+    assert reqs[1].done and len(reqs[1].out_tokens) == 4
+
+
+def test_too_big_request_fails_without_aborting_batch():
+    """A request whose worst case exceeds the whole pool can never be
+    served; it is marked failed at admission while the rest of the
+    batch completes (previously: PagePoolExhausted aborted
+    ``generate`` with other slots mid-flight)."""
+    cfg, model, params = _setup()
+    for admission in ("reserve", "optimistic"):
+        sc = ServeConfig(max_seq_len=32, max_batch=2, temperature=0.0,
+                         decode_chunk=4, paged=True, page_size=8,
+                         n_pages=2, admission=admission)
+        prompts = _prompts(cfg, (6, 6, 5), seed=19)
+        reqs = [Request(rid=0, prompt=prompts[0], max_new_tokens=4),
+                Request(rid=1, prompt=prompts[1], max_new_tokens=20),
+                Request(rid=2, prompt=prompts[2], max_new_tokens=3)]
+        eng, _ = ServingEngine(cfg, params, sc), None
+        eng.generate(reqs)
+        assert reqs[1].failed and reqs[1].done and not reqs[1].out_tokens
+        assert eng.n_failed == 1
+        assert len(reqs[0].out_tokens) == 4
+        assert len(reqs[2].out_tokens) == 3
+        assert eng.pool.free_count == eng.pool.n_pages
