@@ -95,6 +95,11 @@ RATIO_PAIRS = (
     # timings, so 2x-widened thresholds (see above)
     ("decode_preempt_recompute", "decode_reserve", 2.0),
     ("decode_preempt_swap", "decode_reserve", 2.0),
+    # shared-prefix serving (refcounted pages + prefix index + COW) vs
+    # the reserve-admission engine drain: catches prefix-match /
+    # refcount bookkeeping regressions on the admission hot path;
+    # engine-drain timings, so 2x-widened like the preempt pairs
+    ("decode_shared_prefix", "decode_reserve", 2.0),
 )
 
 

@@ -17,8 +17,12 @@ scenario: the same oversubscribed request batch (total pool pages <
 sum of the requests' worst cases) served end-to-end under reserve
 admission on an ample pool vs optimistic admission with
 preempt-and-recompute / preempt-and-swap on a small one
-(DESIGN.md §preemption).  All these quotients feed the
-machine-normalized regression gate (``check_regression.RATIO_PAIRS``).
+(DESIGN.md §preemption).  The ``decode_shared_prefix`` row serves a
+common-system-prompt batch through the refcounted prefix-sharing
+store (DESIGN.md §prefix-sharing), recording prefill-chunk and
+pool-occupancy savings against the same batch unshared.  All these
+quotients feed the machine-normalized regression gate
+(``check_regression.RATIO_PAIRS``).
 """
 from __future__ import annotations
 
@@ -230,6 +234,7 @@ def run(B: int = 4, Hkv: int = 8, m: int = 8, T: int = 4096,
           f"(buf {stage_buf}B); mixed step {us_mixed:.0f}us")
 
     rows.extend(_preemption_rows())
+    rows.extend(_shared_prefix_rows())
     return rows
 
 
@@ -297,6 +302,67 @@ def _preemption_rows() -> List[Row]:
               f"(worst {oversub}) preemptions={eng.n_preempted} "
               f"swaps={eng.n_swapped_out}")
     return rows
+
+
+def _shared_prefix_rows() -> List[Row]:
+    """Shared-prefix engine scenario (DESIGN.md §prefix-sharing).
+
+    One fixed batch of requests that all carry the same system-prompt
+    prefix plus short distinct tails, served end-to-end with
+    ``share_prefix=True`` (refcounted pages + prefix index + COW).
+    The timed quotient against the ``decode_reserve`` engine drain
+    feeds the machine-normalized gate; the derived fields record the
+    TTFT work (prefill chunk invocations) and peak pool occupancy of
+    the same batch with sharing off, so the row also documents the
+    FLOP/HBM saving, not just wall clock."""
+    from repro.config import ServeConfig
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving import Request, ServingEngine
+
+    cfg = get_config("tinyllama-1.1b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    T, ps, n_prefix, tails = 32, 4, 16, (3, 5, 2, 3, 4, 2)
+    max_new = 5
+
+    def mk_reqs():
+        rng = np.random.default_rng(1)
+        common = rng.integers(0, cfg.vocab_size, n_prefix).astype(np.int32)
+        return [Request(rid=i,
+                        prompt=np.concatenate(
+                            [common,
+                             rng.integers(0, cfg.vocab_size,
+                                          k).astype(np.int32)]),
+                        max_new_tokens=max_new)
+                for i, k in enumerate(tails)]
+
+    base = dict(max_seq_len=T, max_batch=4, temperature=0.0,
+                decode_chunk=4, paged=True, page_size=ps,
+                chunked_prefill=True, prefill_chunk=ps)
+    off = ServingEngine(cfg, params, ServeConfig(**base))
+    off.generate(mk_reqs())
+    eng = ServingEngine(cfg, params, ServeConfig(**base,
+                                                 share_prefix=True))
+    eng.generate(mk_reqs())                              # warm compiles
+    served, us = timed(lambda: eng.generate(mk_reqs()), reps=3,
+                       budget_s=1.5)
+    assert all(r.done and not r.failed for r in served)
+    print("\n== decode_costs: shared-prefix admission scenario ==")
+    print(f"decode_shared_prefix: {us:.0f}us prefill chunks "
+          f"{eng.n_prefill_chunks} (unshared {off.n_prefill_chunks}), "
+          f"peak pages {eng.peak_used_pages} (unshared "
+          f"{off.peak_used_pages}), shared={eng.n_shared_pages} "
+          f"forks={eng.n_cow_forks} full_hits={eng.n_full_hits}")
+    return [("decode_shared_prefix", us,
+             f"prefix={n_prefix};requests={len(tails)};"
+             f"prefill_chunks={eng.n_prefill_chunks};"
+             f"unshared_prefill_chunks={off.n_prefill_chunks};"
+             f"peak_pages={eng.peak_used_pages};"
+             f"unshared_peak_pages={off.peak_used_pages};"
+             f"shared_pages={eng.n_shared_pages};"
+             f"cow_forks={eng.n_cow_forks};"
+             f"full_hits={eng.n_full_hits}")]
 
 
 if __name__ == "__main__":

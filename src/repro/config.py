@@ -406,6 +406,19 @@ class ServeConfig:
     # head-of-line window: how many pending requests _admit scans for
     # one that fits before giving up this step (1 = strict FIFO)
     admit_window: int = 4
+    # cross-request prefix sharing (DESIGN.md §prefix-sharing): pages
+    # are refcounted and a host-side prefix index maps page-aligned
+    # token chunks (hash-chained over the whole prefix) to physical
+    # pages, so admission maps a cached prefix into the block table by
+    # reference instead of recomputing prefill; writes into shared
+    # pages copy-on-write fork them.  Requires chunked_prefill (the
+    # shared/unshared boundary must be a chunk start; the exact-length
+    # path always recomputes the whole prompt and stays the parity
+    # oracle).
+    share_prefix: bool = False
+    # bound on live prefix-index entries (each pins one page until
+    # reclaimed); LRU-evicted beyond this
+    prefix_index_capacity: int = 512
 
     def __post_init__(self) -> None:
         if self.admission not in ("reserve", "optimistic"):
@@ -422,6 +435,16 @@ class ServeConfig:
             raise ValueError("watermark_low must be in [0, 1)")
         if self.admit_window < 1:
             raise ValueError("admit_window must be at least 1")
+        if self.share_prefix:
+            if not self.chunked_prefill:
+                raise ValueError(
+                    "share_prefix maps cached prefix pages into the "
+                    "block table and prefills only the unshared tail, "
+                    "which needs chunked_prefill=True (the exact-length "
+                    "path recomputes whole prompts and stays the parity "
+                    "oracle)")
+            if self.prefix_index_capacity < 1:
+                raise ValueError("prefix_index_capacity must be positive")
         if self.paged:
             if self.page_size <= 0:
                 raise ValueError("page_size must be positive")

@@ -73,7 +73,28 @@ def main() -> None:
     ap.add_argument("--admit-window", type=int, default=4,
                     help="pending requests scanned for one that fits "
                          "(avoids head-of-line blocking; 1 = strict FIFO)")
+    ap.add_argument("--share-prefix", action="store_true",
+                    help="cross-request prefix sharing with copy-on-"
+                         "write (DESIGN.md §prefix-sharing): admission "
+                         "maps cached prefix pages into the block table "
+                         "by reference instead of re-prefilling them.  "
+                         "Implies --paged and chunked prefill.")
+    ap.add_argument("--prefix-index-capacity", type=int, default=512,
+                    help="max live prefix-index entries (each pins one "
+                         "page until reclaimed; LRU beyond this)")
+    ap.add_argument("--shared-frac", type=float, default=0.0,
+                    help="fraction of each prompt drawn from one common "
+                         "prefix (demo workload for --share-prefix)")
+    ap.add_argument("--priority", default="",
+                    help="comma-separated Request.priority tiers, cycled "
+                         "over the requests (empty = all tier 0); under "
+                         "--admission optimistic, preemption evicts "
+                         "lower tiers first")
     args = ap.parse_args()
+    if args.share_prefix and not args.prefill_chunk:
+        print("--share-prefix prefills only the unshared tail: enabling "
+              "chunked prefill (--prefill-chunk 8)")
+        args.prefill_chunk = 8
     if args.prefill_buckets and not args.prefill_chunk:
         ap.error("--prefill-buckets requires --prefill-chunk")
     if args.prefill_chunk and not args.paged:
@@ -119,15 +140,27 @@ def main() -> None:
                      preempt_mode=args.preempt_mode,
                      watermark_high=args.watermark_high,
                      watermark_low=args.watermark_low,
-                     admit_window=args.admit_window)
+                     admit_window=args.admit_window,
+                     share_prefix=args.share_prefix,
+                     prefix_index_capacity=args.prefix_index_capacity)
     eng = ServingEngine(cfg, params, sc, projections=proj)
     rng = np.random.default_rng(0)
     lens = rng.integers(min(4, args.prompt_len), args.prompt_len + 1,
                         args.requests)
-    reqs = [Request(rid=i,
-                    prompt=rng.integers(0, cfg.vocab_size,
-                                        int(lens[i])).astype(np.int32),
-                    max_new_tokens=args.max_new_tokens)
+    tiers = [int(x) for x in args.priority.split(",") if x.strip()] or [0]
+    common = rng.integers(0, cfg.vocab_size,
+                          max(int(lens.max()), 1)).astype(np.int32)
+
+    def mk_prompt(i):
+        n = int(lens[i])
+        n_common = min(int(round(args.shared_frac * n)), n - 1)
+        tail = rng.integers(0, cfg.vocab_size, n - n_common)
+        return np.concatenate([common[:n_common],
+                               tail.astype(np.int32)])
+
+    reqs = [Request(rid=i, prompt=mk_prompt(i),
+                    max_new_tokens=args.max_new_tokens,
+                    priority=tiers[i % len(tiers)])
             for i in range(args.requests)]
     eng.generate(reqs)
     for r in reqs:
@@ -144,6 +177,13 @@ def main() -> None:
         print(f"admission={args.admission}: preemptions="
               f"{eng.n_preempted} (swap out/in {eng.n_swapped_out}/"
               f"{eng.n_swapped_in}), failed={eng.n_failed}")
+        if args.share_prefix:
+            print(f"prefix sharing: {eng.n_shared_pages} page(s) / "
+                  f"{eng.n_shared_tokens} token(s) shared, "
+                  f"{eng.n_full_hits} whole-prompt hit(s), "
+                  f"{eng.n_cow_forks} COW fork(s), "
+                  f"{eng.n_reclaimed} index entr(ies) reclaimed; "
+                  f"peak pool occupancy {eng.peak_used_pages} page(s)")
     if args.prefill_chunk:
         print(f"prefill compiles: {len(eng.prefill_chunk_shapes)} chunk "
               f"shape(s) {sorted(eng.prefill_chunk_shapes)} of "

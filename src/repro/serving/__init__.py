@@ -6,13 +6,15 @@ layers (models/kernels) can import ``repro.serving.paged_cache`` at
 module level without pulling ``engine`` -> ``models`` back in a cycle.
 """
 from repro.serving.paged_cache import (BlockTables, PagePool,
-                                       PagePoolExhausted, append_chunk,
-                                       append_token, gather_pages,
+                                       PagePoolExhausted, PrefixIndex,
+                                       append_chunk, append_token,
+                                       copy_page, gather_pages,
                                        pages_needed, swap_in, swap_out)
 
 __all__ = ["Request", "ServingEngine", "sample_token", "BlockTables",
-           "PagePool", "PagePoolExhausted", "append_chunk", "append_token",
-           "gather_pages", "pages_needed", "swap_in", "swap_out"]
+           "PagePool", "PagePoolExhausted", "PrefixIndex", "append_chunk",
+           "append_token", "copy_page", "gather_pages", "pages_needed",
+           "swap_in", "swap_out"]
 
 _ENGINE_EXPORTS = ("Request", "ServingEngine", "sample_token")
 

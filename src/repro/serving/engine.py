@@ -68,6 +68,21 @@ Two prefill paths (``ServeConfig.chunked_prefill``, DESIGN.md §prefill):
   garbage page to the decode scan, so its masked writes cannot touch
   pages the prefill is filling.
 
+Cross-request prefix sharing (``ServeConfig.share_prefix``, DESIGN.md
+§prefix-sharing, requires chunked+paged): pages are refcounted and a
+host-side prefix index maps chained hashes of page-aligned token
+chunks to the physical pages already holding their (compressed) cache
+entries.  Admission maps the longest cached prefix into the new slot's
+block table by reference — charging only the *unshared* tail against
+the pool — and chunked prefill starts past it (an exact-duplicate
+prompt with stored terminal logits skips prefill entirely).  Writes
+into a still-shared page copy-on-write fork it first, so two requests
+sharing a prefix can diverge mid-decode without corrupting each other;
+a finished request's pages stay pinned by the index for reuse until
+reclaimed under pool pressure.  With sharing off (the default) the
+engine is byte-identical to the PR 4 behavior and stays the parity
+oracle.
+
 Every sequence carries its own position: the decode stack (and on TPU
 the Pallas kernel) masks per-sequence lengths, so a mixed-length batch
 pays for the cache it occupies, not for ``max_seq_len``.  With KQ-SVD
@@ -87,8 +102,10 @@ from repro.config import ModelConfig, ServeConfig
 from repro.core.calibration import ModelProjections
 from repro.core.compressed import cache_footprint
 from repro.models.model import build_model
-from repro.serving.paged_cache import (BlockTables, PagePool, pages_needed,
-                                       swap_in, swap_out)
+from repro.serving.paged_cache import (BlockTables, PagePool,
+                                       PagePoolExhausted, PrefixIndex,
+                                       copy_page, pages_needed, swap_in,
+                                       swap_out)
 
 
 @dataclasses.dataclass
@@ -96,6 +113,8 @@ class Request:
     rid: int
     prompt: np.ndarray                 # (S,) int32
     max_new_tokens: int = 16
+    priority: int = 0                  # SLA tier: preemption evicts lower
+                                       # priority first (ties: LIFO stamp)
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     truncated: bool = False            # hit max_seq_len before max_new_tokens
@@ -127,6 +146,7 @@ class ServingEngine:
         self._paged_insert = jax.jit(self._paged_insert_impl)
         self._prefill_chunk = jax.jit(self._prefill_chunk_impl)
         self._decode_chunk = jax.jit(self._decode_chunk_impl)
+        self._fork_page = jax.jit(self._fork_page_impl)
         self.rng = jax.random.PRNGKey(sc.seed)
         # distinct chunk shapes traced so far — the compile-count bound
         # is len(sc.buckets) per engine lifetime (tests assert on it)
@@ -224,6 +244,22 @@ class ServingEngine:
                         if cache["steps"] is not None else None)
         return out
 
+    def _fork_page_impl(self, cache, src, dst):
+        """Copy physical page ``src`` to ``dst`` in every layer's pools
+        (the device half of a copy-on-write fork; the host half
+        repoints the writer's block-table row at ``dst``).  Scalar
+        src/dst, so this compiles once."""
+        def c0(pool):                       # prefix leaves: (P, ...)
+            return copy_page(pool, src, dst)
+
+        def c1(pools):                      # scanned steps: (n_steps, P, ...)
+            return pools.at[:, dst].set(pools[:, src])
+
+        out = {"prefix": jax.tree.map(c0, cache["prefix"])}
+        out["steps"] = (jax.tree.map(c1, cache["steps"])
+                        if cache["steps"] is not None else None)
+        return out
+
     def _decode_chunk_impl(self, params, proj, cache, logits, pos, emitted,
                            max_new, done, trunc, rng, block_table):
         """Fused ``decode_chunk``-step decode, fully on device.
@@ -315,16 +351,26 @@ class ServingEngine:
                     f"request {r.rid}: prompt length {len(r.prompt)}"
                     f" exceeds max_seq_len {T}")
         self._pending: List[Request] = list(requests)
-        self._reserved = [0] * B   # worst-case pages per slot (reserve:
-        #                            admission gate; optimistic: growth cap)
+        self._reserved = [0] * B   # worst-case *logical* pages per slot
+        #                            (growth cap on the block-table row)
+        self._charged = [0] * B    # worst-case pages the slot may newly
+        #                            allocate: private tail only — shared
+        #                            prefix pages are charged to nobody
+        #                            (they exist once, whoever shares them)
+        self._private = [0] * B    # pages currently allocated (not shared)
         self.pool = None           # introspection (tests/bench)
         self._btabs = None
+        self._pindex = None
         if sc.paged:
             self.pool = PagePool(sc.total_pages, sc.watermark_high,
                                  sc.watermark_low)
             self._btabs = BlockTables(B, sc.pages_per_seq)
             self._cache = self.model.init_paged_cache(
                 sc.total_pages + 1, sc.page_size, self.ranks)
+            if sc.share_prefix:
+                # per-batch prefix index (DESIGN.md §prefix-sharing):
+                # reset with the pool, since its entries pin pool pages
+                self._pindex = PrefixIndex(sc.prefix_index_capacity)
         else:
             self._cache = self.model.init_cache(B, T, self.ranks)
         # preemption bookkeeping (DESIGN.md §preemption)
@@ -335,6 +381,19 @@ class ServingEngine:
         self.n_swapped_out = 0
         self.n_swapped_in = 0
         self.n_failed = 0
+        self.preempted_rids: List[int] = []
+        # prefix-sharing bookkeeping + counters (DESIGN.md
+        # §prefix-sharing)
+        self._chain_key = [PrefixIndex.ROOT] * B  # parent for next insert
+        self._indexed_upto = [0] * B   # aligned tokens already chained
+        self._prompt_logits: List[Optional[np.ndarray]] = [None] * B
+        self.n_shared_pages = 0
+        self.n_shared_tokens = 0
+        self.n_full_hits = 0       # whole-prompt matches (prefill skipped)
+        self.n_cow_forks = 0
+        self.n_reclaimed = 0       # index entries dropped under pressure
+        self.n_prefill_chunks = 0
+        self.peak_used_pages = 0
         self._logits = jnp.zeros((B, self.cfg.vocab_size), jnp.float32)
         self._pos = jnp.zeros((B,), jnp.int32)
         self._emitted = jnp.zeros((B,), jnp.int32)
@@ -372,6 +431,127 @@ class ServingEngine:
         return np.concatenate([np.asarray(r.prompt, np.int32),
                                np.asarray(r.out_tokens, np.int32)])
 
+    # -- prefix sharing (DESIGN.md §prefix-sharing) -------------------------
+
+    def _cap_share(self, L: int, hits, logits):
+        """The one shared cap/fork rule for a prefix match (both the
+        admission probe and the actual admission use it, so the charge
+        check and the charge can never drift): cap the match at
+        ``L - 1`` tokens unless terminal logits let the whole prompt be
+        served from the index, drop hit pages past the cap, and predict
+        the single copy-on-write fork a write landing mid-page in the
+        last shared page will need.  Returns
+        ``(kept_hits, n_tokens, fork_extra, logits)``."""
+        ps = self.sc.page_size
+        tokens = sum(n for _, _, n in hits)
+        if tokens == L and logits is None:
+            tokens = L - 1          # last token recomputed for its logits
+        kept = [h for j, h in enumerate(hits) if j * ps < tokens]
+        if tokens < L:
+            logits = None
+        fork = 1 if kept and tokens % ps else 0
+        return kept, tokens, fork, logits
+
+    def _probe_share(self, r: Request) -> tuple:
+        """Read-only preview of what admission would share for ``r``:
+        ``(n_pages, n_tokens, fork_extra, self_pinned)``.
+        ``self_pinned`` counts matched pages currently pinned *only* by
+        the index: admission would pin them itself, so they must not be
+        double-counted as reclaimable headroom in ``_fits_now``."""
+        if self._pindex is None or id(r) in self._swapped:
+            return 0, 0, 0, 0
+        prompt = self._effective_prompt(r)
+        L = len(prompt)
+        hits, _, _, logits = self._pindex.walk(prompt, self.sc.page_size)
+        kept, tokens, fork, _ = self._cap_share(L, hits, logits)
+        self_pin = sum(1 for _, p, _ in kept if self.pool.ref(p) == 1)
+        return len(kept), tokens, fork, self_pin
+
+    def _alloc(self, n: int) -> List[int]:
+        """Pool allocation with index reclamation: pages pinned only by
+        the prefix index are dropped (LRU) before the pool can report
+        exhaustion — cached prefixes are strictly cheaper to evict than
+        live sequences."""
+        if n <= 0:
+            return []
+        if self._pindex is not None and n > self.pool.free_count:
+            self.n_reclaimed += self._pindex.reclaim(self.pool, n)
+        return self.pool.alloc(n)
+
+    def _fork_candidates(self, b: int, lo: int, hi: int) -> List[int]:
+        """Logical pages of slot ``b`` that positions [lo, hi) will
+        write and that are still shared (refcount > 1): these must be
+        copy-on-write forked before the write."""
+        if self._pindex is None or hi <= lo:
+            return []
+        ps = self.sc.page_size
+        rows = self._btabs.rows[b]
+        n_owned = len(self._btabs.slot_pages[b])
+        return [j for j in range(lo // ps, min((hi - 1) // ps, n_owned - 1)
+                                 + 1)
+                if self.pool.ref(int(rows[j])) > 1]
+
+    def _cow_fork(self, b: int, j: int) -> None:
+        """Fork logical page ``j`` of slot ``b``: device page copy into
+        a fresh page, row repointed, one reference dropped on the
+        original (other sharers and the index keep reading it)."""
+        old = int(self._btabs.rows[b, j])
+        new = self._alloc(1)[0]
+        self._cache = self._fork_page(self._cache, np.int32(old),
+                                      np.int32(new))
+        self._btabs.set_page(b, j, new)
+        self.pool.free([old])
+        self._private[b] += 1
+        self.n_cow_forks += 1
+
+    def _late_match(self, b: int) -> bool:
+        """Late-binding share at a chunk boundary: map in prompt chunks
+        a sibling slot has prefilled (and indexed) *since this slot was
+        admitted* — concurrently admitted requests with a common prefix
+        find an empty index at admission, so the first slot computes
+        each chunk and the rest reference it here instead of
+        recomputing.  The slot's never-written private page for that
+        logical position is returned to the pool.  Returns True when
+        the match completed the whole prompt (terminal logits found —
+        the slot is activated and needs no chunk this step)."""
+        if self._pindex is None:
+            return False
+        ps = self.sc.page_size
+        prompt = self._slot_prompt[b]
+        L = len(prompt)
+        start = self._prefilled[b]
+        while (start % ps == 0 and start == self._indexed_upto[b]
+               and start + ps <= L):
+            key = PrefixIndex.child_key(self._chain_key[b],
+                                        prompt[start: start + ps])
+            hit = self._pindex.get(key)
+            if hit is None or hit[0] == int(self._btabs.rows[b, start // ps]):
+                break
+            page, _, logits = hit
+            old = self._btabs.slot_pages[b][start // ps]
+            self.pool.share([page])
+            self._btabs.set_page(b, start // ps, page)
+            self.pool.free([old])
+            self._private[b] -= 1
+            self.n_shared_pages += 1
+            self.n_shared_tokens += ps
+            self._chain_key[b] = key
+            start += ps
+            self._indexed_upto[b] = start
+            if start == L:
+                if logits is not None:
+                    self._prefilled[b] = None
+                    self.n_full_hits += 1
+                    self._activate(b, self._slot_req[b],
+                                   jnp.asarray(logits))
+                    return True
+                # no stored logits: recompute the last token (its
+                # write copy-on-write forks the shared page)
+                start -= 1
+                break
+        self._prefilled[b] = start
+        return False
+
     def _activate(self, b: int, r: Request, last_logits) -> None:
         """Arm slot ``b`` for decode once its prompt cache is in place."""
         self._logits = self._logits.at[b].set(last_logits)
@@ -382,33 +562,96 @@ class ServingEngine:
             r.max_new_tokens - len(r.out_tokens))
         self._done = self._done.at[b].set(False)
         self._trunc = self._trunc.at[b].set(False)
+        if self._pindex is not None:
+            # terminal next-token logits: attached to the prompt's
+            # index entry at release, so an exact-duplicate prompt can
+            # later skip prefill entirely
+            self._prompt_logits[b] = np.asarray(last_logits)
 
-    def _release(self, b: int) -> None:
+    def _index_terminal(self, b: int) -> None:
+        """Leave a finished slot's prompt tail in the prefix index
+        (before its references are released): the final partial-page
+        chunk, if any, plus the prompt's next-token logits.  Entries
+        pin their page, so the pages outlive the request for reuse
+        until ``reclaim`` drops them under pool pressure."""
+        prompt = self._slot_prompt[b]
+        if (self._prefilled[b] is not None or prompt is None
+                or self._prompt_logits[b] is None):
+            return                        # mid-prefill or never activated
+        ps = self.sc.page_size
+        L = len(prompt)
+        k, rem = divmod(L, ps)
+        if self._indexed_upto[b] != k * ps:
+            return                        # chain incomplete (full pages
+        #                                   not all indexed): skip
+        if rem:
+            key = PrefixIndex.child_key(self._chain_key[b], prompt[k * ps:])
+            self._pindex.insert(key, int(self._btabs.rows[b, k]), rem,
+                                self.pool, logits=self._prompt_logits[b])
+        elif self._chain_key[b] != PrefixIndex.ROOT:
+            self._pindex.attach_logits(self._chain_key[b],
+                                       self._prompt_logits[b])
+
+    def _release(self, b: int, finished: bool = False) -> None:
+        if self.sc.paged and finished and self._pindex is not None:
+            self._index_terminal(b)
         self._slot_req[b] = None
         self._slot_prompt[b] = None
         self._prefilled[b] = None
+        self._prompt_logits[b] = None
+        self._chain_key[b] = PrefixIndex.ROOT
+        self._indexed_upto[b] = 0
         if self.sc.paged:
-            # pages go back to the pool without draining the batch;
-            # the row resets to the garbage page
+            # page references drop without draining the batch (shared
+            # pages survive via their other sharers / the index); the
+            # row resets to the garbage page
             self._btabs.release(b, self.pool)
             self._reserved[b] = 0
+            self._charged[b] = 0
+            self._private[b] = 0
 
-    def _fits_now(self, r: Request, worst: int) -> bool:
-        """Whether the request can be admitted at this instant."""
+    def _fits_now(self, r: Request, worst_private: int,
+                  shared: tuple) -> bool:
+        """Whether the request can be admitted at this instant.
+
+        ``worst_private`` and ``shared = (n_pages, n_tokens, fork,
+        self_pinned)`` count only the request's *private* tail: pages
+        its shared prefix already occupies are charged to nobody (they
+        exist once, however many requests share them) — without this,
+        a shared-heavy workload re-inherits the pessimistic cap that
+        reservation admission was built to avoid.  Index pins the
+        request itself would take over (``self_pinned``) are excluded
+        from the reclaimable headroom: once matched they are no longer
+        reclaimable, so counting them would over-admit and crash the
+        private-tail allocation."""
+        s_pages, _, s_fork, s_pin = shared
+        reclaimable = (self._pindex.reclaimable(self.pool) - s_pin
+                       if self._pindex is not None else 0)
         if self.sc.admission == "reserve":
-            # worst-case footprint must fit the unreserved pool so
-            # growth can always be satisfied without preemption
-            return worst <= self.pool.n_pages - sum(self._reserved)
-        # optimistic: charge only what is materialized right now (the
-        # effective prompt; for a swap victim that equals its swapped
-        # length), capped by the pool's high watermark.  An idle pool
+            # every already-admitted slot may still grow by
+            # (charged - private) pages; the new request's private
+            # worst case must fit what remains after distinct live
+            # pages (minus index pins reclaimable on demand) and that
+            # outstanding growth
+            outstanding = sum(self._charged[s] - self._private[s]
+                              for s in range(self.sc.max_batch))
+            headroom = (self.pool.n_pages
+                        - (self.pool.used_count - reclaimable)
+                        - outstanding)
+            return worst_private <= headroom
+        # optimistic: charge only what materializes right now — the
+        # effective prompt's unshared pages (for a swap victim that
+        # equals its swapped length) plus a possible copy-on-write
+        # fork, capped by the pool's high watermark.  An idle pool
         # always admits a fitting request, or nothing could ever run
         # when the prompt alone crosses the watermark.
-        need = pages_needed(len(r.prompt) + len(r.out_tokens),
-                            self.sc.page_size)
-        if self.pool.used_count == 0:
-            return need <= self.pool.free_count
-        return self.pool.can_admit(need)
+        need = (pages_needed(len(r.prompt) + len(r.out_tokens),
+                             self.sc.page_size) - s_pages + s_fork)
+        avail = self.pool.free_count + reclaimable
+        eff_used = self.pool.used_count - reclaimable
+        if eff_used == 0:
+            return need <= avail
+        return need <= avail and eff_used + need <= self.pool.high_pages
 
     def _next_admissible(self) -> Optional[Request]:
         """Pop the first admissible pending request within the
@@ -429,12 +672,16 @@ class ServingEngine:
             if sc.paged:
                 worst = self._worst_case_pages(r)
                 if worst > self.pool.n_pages:
+                    # infeasible even alone: its distinct pages (shared
+                    # or not) can never fit the pool simultaneously
                     r.done = True
                     r.failed = True
                     self.n_failed += 1
                     self._pending.pop(i)
                     continue
-                if not self._fits_now(r, worst):
+                shared = self._probe_share(r)
+                worst_private = worst - shared[0] + shared[2]
+                if not self._fits_now(r, worst_private, shared):
                     i += 1
                     scanned += 1
                     continue
@@ -446,10 +693,14 @@ class ServingEngine:
 
         Exact-length path: prefill the whole (effective) prompt now
         (one compile per distinct length) and insert.  Chunked path:
-        allocate the prompt's pages and queue the slot for
-        chunk-by-chunk prefill — ``_prefill_step`` advances it while
-        other slots decode.  Swap victims skip prefill entirely: their
-        saved pages are restored from the host buffer."""
+        match the longest cached prefix in the index (those pages map
+        into the block table by reference — no recompute), allocate
+        only the private tail's pages, and queue the slot for
+        chunk-by-chunk prefill from the first unshared token —
+        ``_prefill_step`` advances it while other slots decode.  A
+        whole-prompt match with stored terminal logits skips prefill
+        entirely.  Swap victims skip both match and prefill: their
+        saved pages are restored byte-exact into private pages."""
         sc = self.sc
         for b in range(sc.max_batch):
             if self._slot_req[b] is not None:
@@ -462,11 +713,52 @@ class ServingEngine:
             self._slot_prompt[b] = prompt
             self._stamp[b] = self._admit_seq
             self._admit_seq += 1
+            slog = None
             if sc.paged:
+                ps = sc.page_size
+                L = len(prompt)
+                shared: List[int] = []
+                shared_tokens = full_tokens = 0
+                chain = PrefixIndex.ROOT
+                fork = 0
+                if self._pindex is not None and id(r) not in self._swapped:
+                    hits, chain, full_tokens, slog = self._pindex.walk(
+                        prompt, ps)
+                    # same cap/fork rule the admission probe used, so
+                    # the charge matches what _fits_now checked
+                    kept, shared_tokens, fork, slog = self._cap_share(
+                        L, hits, slog)
+                    shared = [p for _, p, _ in kept]
+                    if shared:
+                        self._pindex.touch([k for k, _, _ in kept])
+                        self.pool.share(shared)
                 self._reserved[b] = self._worst_case_pages(r)
-                phys = self.pool.alloc(pages_needed(len(prompt),
-                                                    sc.page_size))
-                self._btabs.assign(b, phys)
+                self._charged[b] = self._reserved[b] - len(shared) + fork
+                n_priv = pages_needed(L, ps) - len(shared)
+                try:
+                    phys = self._alloc(n_priv)
+                except PagePoolExhausted:
+                    # accounting said it fit but the pool disagrees
+                    # (e.g. another admission this pass consumed the
+                    # headroom): roll the admission back and let the
+                    # request wait instead of aborting the batch
+                    if shared:
+                        self.pool.free(shared)
+                    self._slot_req[b] = None
+                    self._slot_prompt[b] = None
+                    self._reserved[b] = 0
+                    self._charged[b] = 0
+                    self._pending.insert(0, r)
+                    break
+                self.n_shared_pages += len(shared)
+                self.n_shared_tokens += shared_tokens
+                self._private[b] = n_priv
+                self._btabs.assign(b, shared + phys)
+                # chain state for indexing this slot's own chunks:
+                # _chain_key is the digest at token _indexed_upto
+                # (pages up to there are already in the index)
+                self._chain_key[b] = chain
+                self._indexed_upto[b] = full_tokens
                 if id(r) in self._swapped:
                     st = self._swapped.pop(id(r))
                     self._swap_in_slot(b, st["bufs"])
@@ -474,7 +766,16 @@ class ServingEngine:
                     self.n_swapped_in += 1
                     continue
             if sc.chunked_prefill:
-                self._prefilled[b] = 0       # chunks run in _prefill_step
+                if slog is not None:
+                    # whole prompt served from the index, next-token
+                    # logits included: no prefill chunk at all
+                    self._prefilled[b] = None
+                    self.n_full_hits += 1
+                    self._activate(b, r, jnp.asarray(slog))
+                    continue
+                # chunks run in _prefill_step, starting past the
+                # shared prefix
+                self._prefilled[b] = (shared_tokens if sc.paged else 0)
                 continue
             plogits, slot_cache = self._prefill(
                 self.params, self.proj, jnp.asarray(prompt)[None])
@@ -505,10 +806,24 @@ class ServingEngine:
             b = (self._pf_next + off) % B
             if self._prefilled[b] is None:
                 continue
+            if self._late_match(b):
+                continue                     # whole prompt mapped in
             r = self._slot_req[b]
             prompt = self._slot_prompt[b]
             start = self._prefilled[b]
             n = min(sc.prefill_chunk, len(prompt) - start)
+            try:
+                # a chunk starting inside a shared page (the first
+                # unshared token of a partially-matched prefix) must
+                # fork it before writing (DESIGN.md §prefix-sharing)
+                for j in self._fork_candidates(b, start, start + n):
+                    self._cow_fork(b, j)
+            except PagePoolExhausted:
+                # optimistic admission may find the pool dry at fork
+                # time (another slot's growth won the race): preempt
+                # this slot; it requeues and retries when pages free
+                self._preempt(b)
+                continue
             bucket = sc.bucket_for(n)
             toks = np.zeros((1, bucket), np.int32)
             toks[0, :n] = prompt[start: start + n]
@@ -518,8 +833,20 @@ class ServingEngine:
                 jnp.asarray([n], jnp.int32),
                 jnp.asarray(self._btabs.rows[b: b + 1]))
             self.prefill_chunk_shapes.add(bucket)
+            self.n_prefill_chunks += 1
             self._prefilled[b] = start + n
             budget -= 1
+            if self._pindex is not None:
+                # chunks whose pages are now complete become shareable
+                ps = sc.page_size
+                while self._indexed_upto[b] + ps <= self._prefilled[b]:
+                    j = self._indexed_upto[b] // ps
+                    key = PrefixIndex.child_key(
+                        self._chain_key[b], prompt[j * ps: (j + 1) * ps])
+                    self._pindex.insert(key, int(self._btabs.rows[b, j]),
+                                        ps, self.pool)
+                    self._chain_key[b] = key
+                    self._indexed_upto[b] += ps
             if self._prefilled[b] == len(prompt):
                 self._prefilled[b] = None    # complete: join decode
                 self._activate(b, r, last[0])
@@ -584,27 +911,36 @@ class ServingEngine:
         self._release(b)
         self._done = self._done.at[b].set(True)
         self.n_preempted += 1
+        self.preempted_rids.append(r.rid)
 
     def _preempt_for_headroom(self, live: np.ndarray,
                               needs: Dict[int, int]) -> None:
-        """Free pages for this chunk's growth by evicting LIFO victims.
+        """Free pages for this chunk's growth, cheapest first: cached
+        prefix pages only the index pins are reclaimed (LRU), then
+        victims are evicted by (priority, LIFO stamp) — lowest
+        ``Request.priority`` first, youngest admission stamp within a
+        tier, so a high-priority request is preempted only when no
+        lower tier is left to evict.
 
         ``needs``: extra pages per live slot.  Victims are *any*
-        occupied slot (decoding or mid-prefill), youngest admission
-        stamp first, and the oldest is never evicted — combined with
-        the fail-at-admission check (worst case <= whole pool) that
-        guarantees forward progress: at minimum the oldest request
-        runs alone.  Eviction continues past the strict deficit until
+        occupied slot (decoding or mid-prefill), and the best-ranked
+        slot (highest priority, oldest) is never evicted — combined
+        with the fail-at-admission check (worst case <= whole pool)
+        that guarantees forward progress: at minimum that request runs
+        alone.  Eviction continues past the strict deficit until
         ``low_extra`` slack pages are also free (thrash guard)."""
         deficit = sum(needs.values())
+        if self._pindex is not None and deficit > self.pool.free_count:
+            self.n_reclaimed += self._pindex.reclaim(self.pool, deficit)
         if deficit <= self.pool.free_count:
             return
         cand = sorted((b for b in range(self.sc.max_batch)
                        if self._slot_req[b] is not None),
-                      key=lambda b: self._stamp[b])
+                      key=lambda b: (-self._slot_req[b].priority,
+                                     self._stamp[b]))
         while len(cand) > 1 and (deficit + self.pool.low_extra
                                  > self.pool.free_count):
-            b = cand.pop()                   # youngest admission last
+            b = cand.pop()           # lowest priority, youngest stamp
             deficit -= needs.pop(b, 0)
             self._preempt(b)
             live[b] = False
@@ -612,31 +948,53 @@ class ServingEngine:
     def _ensure_chunk_headroom(self, live: np.ndarray) -> None:
         """Grow live sequences page-by-page: every decoding slot gets
         pages covering the next ``decode_chunk`` tokens before the
-        fused scan runs (the scan itself never allocates).  Reserve
-        admission guarantees the allocation succeeds; optimistic
-        admission instead preempts LIFO victims when the pool would
+        fused scan runs (the scan itself never allocates), and any
+        still-shared page the chunk will write into is copy-on-write
+        forked first (a sharer diverging mid-decode writes a private
+        copy; the other sharers keep reading the original).  Reserve
+        admission guarantees the allocations succeed (forks are part
+        of the private-tail charge); optimistic admission instead
+        reclaims index pins and preempts victims when the pool would
         run dry.  Mid-prefill slots are skipped — their prompt pages
         were allocated at admission and they grow only once they join
         decode."""
         sc = self.sc
         pos_np = np.asarray(self._pos)
         needs: Dict[int, int] = {}
+        grow: Dict[int, int] = {}
+        forks: Dict[int, List[int]] = {}
         for b in range(sc.max_batch):
             if not live[b]:
                 continue
-            need = min(pages_needed(min(int(pos_np[b]) + sc.decode_chunk,
-                                        sc.max_seq_len), sc.page_size),
-                       self._reserved[b])
+            end = min(int(pos_np[b]) + sc.decode_chunk, sc.max_seq_len)
+            need = min(pages_needed(end, sc.page_size), self._reserved[b])
             extra = need - len(self._btabs.slot_pages[b])
+            nf = self._fork_candidates(b, int(pos_np[b]), end)
             if extra > 0:
-                needs[b] = extra
+                grow[b] = extra
+            if nf:
+                forks[b] = nf
+            tot = max(extra, 0) + len(nf)
+            if tot > 0:
+                needs[b] = tot
         if sc.admission == "optimistic":
             self._preempt_for_headroom(live, needs)
-        for b, extra in needs.items():
+        for b, pages in forks.items():
             if not live[b]:                  # evicted above
                 continue
+            for j in pages:
+                if self.pool.ref(int(self._btabs.rows[b, j])) > 1:
+                    self._cow_fork(b, j)     # sharer may have been evicted
+        for b, extra in grow.items():
+            if not live[b]:
+                continue
             have = len(self._btabs.slot_pages[b])
-            self._btabs.assign(b, self.pool.alloc(extra), start=have)
+            self._btabs.assign(b, self._alloc(extra), start=have)
+            # grown pages are private: without this the reserve-mode
+            # outstanding-growth sum double-counts them (once in
+            # used_count, once in charged - private) and admission
+            # turns pessimistic as sequences decode
+            self._private[b] += extra
 
     def step(self) -> bool:
         """One scheduling iteration: admit, advance chunked prefills,
@@ -649,6 +1007,9 @@ class ServingEngine:
         sc = self.sc
         B = sc.max_batch
         self._admit()
+        if sc.paged:
+            self.peak_used_pages = max(self.peak_used_pages,
+                                       self.pool.used_count)
         pf_budget = 0
         if sc.chunked_prefill:
             pf_budget = self._prefill_step()
@@ -670,6 +1031,8 @@ class ServingEngine:
             # scan's masked writes cannot touch pages a prefill is
             # filling or that were recycled
             btab_dev = self._btabs.device(live=live)
+            self.peak_used_pages = max(self.peak_used_pages,
+                                       self.pool.used_count)
         carry, toks, emits = self._decode_chunk(
             self.params, self.proj, self._cache, self._logits, self._pos,
             self._emitted, self._max_new, self._done, self._trunc,
@@ -691,7 +1054,7 @@ class ServingEngine:
             if done_np[b]:
                 r.done = True
                 r.truncated = bool(trunc_np[b])
-                self._release(b)
+                self._release(b, finished=True)
                 freed = True
         if freed and self._pending:
             # refill the freed slots now: the next request prefills in

@@ -15,7 +15,9 @@ from repro.config import ServeConfig
 # the serving tests against the paged cache + chunked prefill path;
 # paged-preempt additionally switches to optimistic admission over a
 # deliberately small pool so preempt-and-requeue actually fires under
-# pytest; the default (dense) keeps the exact-length parity oracle.
+# pytest; paged-prefix turns on cross-request prefix sharing with
+# copy-on-write (refcounted pages + prefix index); the default (dense)
+# keeps the exact-length parity oracle.
 ENGINE = os.environ.get("REPRO_ENGINE", "dense")
 
 
@@ -30,8 +32,12 @@ def serve_config(**kw) -> ServeConfig:
     to one worst-case sequence (max_seq_len / page_size pages — the
     smallest size at which no single request can fail admission) and
     turns on optimistic admission, so multi-slot tests oversubscribe
-    and exercise preemption."""
-    if ENGINE in ("paged", "paged-preempt"):
+    and exercise preemption.  REPRO_ENGINE=paged-prefix instead turns
+    on share_prefix: every serving test runs through the refcounted
+    page store with the prefix index live (matches on the tests'
+    random prompts are rare — the leg asserts sharing never perturbs
+    generations)."""
+    if ENGINE in ("paged", "paged-preempt", "paged-prefix"):
         kw.setdefault("paged", True)
         kw.setdefault("page_size", 4)
         kw.setdefault("chunked_prefill", True)
@@ -41,6 +47,8 @@ def serve_config(**kw) -> ServeConfig:
         kw.setdefault("n_pages", max(2, T // kw["page_size"]))
         kw.setdefault("admission", "optimistic")
         kw.setdefault("watermark_low", 0.1)
+    if ENGINE == "paged-prefix":
+        kw.setdefault("share_prefix", True)
     return ServeConfig(**kw)
 
 
