@@ -37,7 +37,7 @@ REGRESSION_RATIO_THRESHOLD ?= 2.0
 FMT_PATHS := benchmarks/check_regression.py \
              tests/test_check_regression.py
 
-.PHONY: verify test lint check-regression bench-quick bench
+.PHONY: verify test lint check-regression bench-quick bench chaos
 
 # bench-quick rewrites BENCH_decode.json, so it must run after the
 # regression gate has read the committed baseline — the recipe (not a
@@ -47,6 +47,12 @@ verify: lint test check-regression
 
 test:
 	$(PY) -m pytest -x -q
+
+# the paged-chaos CI leg, runnable locally: the whole suite against
+# optimistic+swap+sharing with a seeded FaultInjector and per-step
+# invariant auditing (tests/conftest.py maps REPRO_ENGINE)
+chaos:
+	REPRO_ENGINE=paged-chaos $(PY) -m pytest -x -q
 
 lint:
 	@if command -v ruff >/dev/null 2>&1; then \

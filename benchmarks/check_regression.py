@@ -100,6 +100,10 @@ RATIO_PAIRS = (
     # refcount bookkeeping regressions on the admission hot path;
     # engine-drain timings, so 2x-widened like the preempt pairs
     ("decode_shared_prefix", "decode_reserve", 2.0),
+    # per-step invariant auditing (DESIGN.md §robustness) vs the same
+    # un-audited drain: gates the audit's host-side cross-check cost;
+    # engine-drain timings, so 2x-widened like the other drain pairs
+    ("decode_audit_on", "decode_reserve", 2.0),
 )
 
 

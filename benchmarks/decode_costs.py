@@ -281,6 +281,10 @@ def _preemption_rows() -> List[Row]:
         "decode_preempt_swap": ServeConfig(
             **base, n_pages=n_small, admission="optimistic",
             preempt_mode="swap"),
+        # per-step invariant auditing (DESIGN.md §robustness): same
+        # ample-pool drain as decode_reserve, so the quotient against
+        # it prices the audit's host-side cross-checks alone
+        "decode_audit_on": ServeConfig(**base, audit=True),
     }
     rows: List[Row] = []
     print("\n== decode_costs: oversubscribed-pool admission scenario ==")

@@ -37,6 +37,16 @@ SEP = "/"
 _VIEW_FOR = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
 
 
+def _fsync_dir(path: str) -> None:
+    """fsync a directory so renames within it survive a crash (POSIX
+    requires syncing the directory entry, not just file contents)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def _encode(arr: np.ndarray):
     if arr.dtype.kind in "biufc":
         return arr, str(arr.dtype)
@@ -111,13 +121,20 @@ class CheckpointManager:
         final = os.path.join(self.root, name)
         shutil.rmtree(tmp, ignore_errors=True)
         os.makedirs(tmp)
-        # npz keys cannot contain '/' reliably across loaders; escape
-        np.savez(os.path.join(tmp, "shard_00000.npz"),
-                 **{k.replace(SEP, "::"): v for k, v in host.items()})
-        with open(os.path.join(tmp, "index.json"), "w") as f:
-            json.dump(meta, f)
-            f.flush()
-            os.fsync(f.fileno())
+        # every file commits atomically: bytes to a .part, fsync, then
+        # rename within the same directory — a crash mid-write leaves
+        # at most an orphaned .part, never a torn shard a later restore
+        # could half-load (tests/test_checkpoint.py kills the write
+        # between these stages and asserts the previous step survives)
+        self._commit_file(
+            os.path.join(tmp, "shard_00000.npz"),
+            # npz keys cannot contain '/' reliably across loaders
+            lambda f: np.savez(f, **{k.replace(SEP, "::"): v
+                                     for k, v in host.items()}))
+        self._commit_file(
+            os.path.join(tmp, "index.json"),
+            lambda f: f.write(json.dumps(meta).encode()))
+        _fsync_dir(tmp)        # file renames inside tmp are durable
         shutil.rmtree(final, ignore_errors=True)
         os.rename(tmp, final)
         with open(os.path.join(self.root, "LATEST.tmp"), "w") as f:
@@ -126,7 +143,20 @@ class CheckpointManager:
             os.fsync(f.fileno())
         os.rename(os.path.join(self.root, "LATEST.tmp"),
                   os.path.join(self.root, "LATEST"))
+        _fsync_dir(self.root)  # both directory renames are durable
         self._gc()
+
+    @staticmethod
+    def _commit_file(path: str, write_fn) -> None:
+        """Atomic file commit: write ``path + '.part'``, fsync the
+        bytes, rename onto ``path``.  ``write_fn`` receives the open
+        binary file object."""
+        part = path + ".part"
+        with open(part, "wb") as f:
+            write_fn(f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.rename(part, path)
 
     def wait(self) -> None:
         if self._thread is not None:

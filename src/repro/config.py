@@ -419,6 +419,34 @@ class ServeConfig:
     # bound on live prefix-index entries (each pins one page until
     # reclaimed); LRU-evicted beyond this
     prefix_index_capacity: int = 512
+    # -- robustness (DESIGN.md §robustness) -------------------------------
+    # cross-check PagePool refcounts / free list / block tables against
+    # the scheduler after every step (invariants.audit); chaos tests
+    # run with this on, and decode_audit_on in BENCH_decode.json gates
+    # its overhead
+    audit: bool = False
+    # quarantine slots whose next-token logits go non-finite (fail just
+    # that request with error.kind == "numerics", keep the batch); off
+    # = legacy behavior (garbage tokens propagate silently)
+    guard_numerics: bool = True
+    # no-progress watchdog: consecutive step()s with no new prefill
+    # ground, no emitted tokens and no terminal outcomes before
+    # EngineStalledError is raised (0 disables)
+    stall_steps: int = 200
+    # transient admission allocation failures retried with exponential
+    # backoff (1, 2, 4, ... steps, capped at 32) before the request
+    # fails terminally with error.kind == "pool_exhausted"
+    admission_retries: int = 8
+    # a swap-in that fails (or fails checksum verification) degrades to
+    # recomputing the victim's cache from its effective prompt; False =
+    # fail the request terminally with error.kind == "swap_failed"
+    swap_fallback: bool = True
+    # chaos mode: build FaultInjector.chaos(chaos_seed, chaos_rate) at
+    # every start() — all recoverable fault points armed with an
+    # unlimited per-hit Bernoulli at chaos_rate.  None = no injection.
+    # An injector passed to the engine constructor wins over this.
+    chaos_seed: Optional[int] = None
+    chaos_rate: float = 0.05
 
     def __post_init__(self) -> None:
         if self.admission not in ("reserve", "optimistic"):
@@ -435,6 +463,12 @@ class ServeConfig:
             raise ValueError("watermark_low must be in [0, 1)")
         if self.admit_window < 1:
             raise ValueError("admit_window must be at least 1")
+        if self.stall_steps < 0:
+            raise ValueError("stall_steps must be >= 0 (0 disables)")
+        if self.admission_retries < 0:
+            raise ValueError("admission_retries must be >= 0")
+        if not 0.0 <= self.chaos_rate <= 1.0:
+            raise ValueError("chaos_rate must be in [0, 1]")
         if self.share_prefix:
             if not self.chunked_prefill:
                 raise ValueError(

@@ -90,6 +90,22 @@ def main() -> None:
                          "over the requests (empty = all tier 0); under "
                          "--admission optimistic, preemption evicts "
                          "lower tiers first")
+    ap.add_argument("--deadline-steps", type=int, default=0,
+                    help="per-request total step budget (DESIGN.md "
+                         "§robustness); a request not finished within "
+                         "this many engine steps fails with "
+                         "error.kind=deadline.  0 = unbounded")
+    ap.add_argument("--audit", action="store_true",
+                    help="cross-check pool refcounts / free list / "
+                         "block tables after every engine step "
+                         "(invariants.audit; DESIGN.md §robustness)")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="arm a seeded chaos FaultInjector: every "
+                         "recoverable fault point fires with "
+                         "probability --chaos-rate per hit, "
+                         "reproducibly (DESIGN.md §robustness)")
+    ap.add_argument("--chaos-rate", type=float, default=0.05,
+                    help="per-hit fault probability under --chaos-seed")
     args = ap.parse_args()
     if args.share_prefix and not args.prefill_chunk:
         print("--share-prefix prefills only the unshared tail: enabling "
@@ -142,7 +158,10 @@ def main() -> None:
                      watermark_low=args.watermark_low,
                      admit_window=args.admit_window,
                      share_prefix=args.share_prefix,
-                     prefix_index_capacity=args.prefix_index_capacity)
+                     prefix_index_capacity=args.prefix_index_capacity,
+                     audit=args.audit,
+                     chaos_seed=args.chaos_seed,
+                     chaos_rate=args.chaos_rate)
     eng = ServingEngine(cfg, params, sc, projections=proj)
     rng = np.random.default_rng(0)
     lens = rng.integers(min(4, args.prompt_len), args.prompt_len + 1,
@@ -160,16 +179,32 @@ def main() -> None:
 
     reqs = [Request(rid=i, prompt=mk_prompt(i),
                     max_new_tokens=args.max_new_tokens,
-                    priority=tiers[i % len(tiers)])
+                    priority=tiers[i % len(tiers)],
+                    deadline_steps=args.deadline_steps or None)
             for i in range(args.requests)]
     eng.generate(reqs)
     for r in reqs:
         note = "  [truncated]" if r.truncated else ""
         if r.failed:
-            note = "  [failed: worst case exceeds the pool]"
+            # structured failure taxonomy (DESIGN.md §robustness):
+            # kind + cause + the engine step it happened on
+            note = (f"  [failed: {r.error.kind} @ step {r.error.step}"
+                    + (f" — {r.error.detail}" if r.error.detail else "")
+                    + "]")
         print(f"req {r.rid} (prompt {len(r.prompt):3d}): "
               f"{r.out_tokens}{note}")
     print(f"capacity gain vs full cache: {eng.capacity_gain():.2f}x")
+    if eng.n_failed:
+        kinds = ", ".join(f"{k}={n}" for k, n in
+                          eng.error_counts.items() if n)
+        print(f"failures: {eng.n_failed} ({kinds})")
+    if args.chaos_seed is not None and eng.faults is not None:
+        fired = eng.faults.points_fired()
+        print(f"chaos(seed={args.chaos_seed}, rate={args.chaos_rate}): "
+              f"{len(eng.faults.fired_log)} fault(s) fired at "
+              f"{list(fired) or 'no points'}; "
+              f"retries={eng.n_retried}, "
+              f"swap fallbacks={eng.n_swap_fallbacks}")
     if args.paged:
         pool = eng.pool
         print(f"page pool: {pool.n_pages} x {args.page_size}-token "

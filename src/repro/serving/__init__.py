@@ -1,10 +1,13 @@
 """Serving package.
 
-``paged_cache`` is dependency-free (jax/numpy only) and re-exported
-eagerly; the engine symbols resolve lazily (PEP 562) so that lower
-layers (models/kernels) can import ``repro.serving.paged_cache`` at
-module level without pulling ``engine`` -> ``models`` back in a cycle.
+``paged_cache`` and ``faults`` are dependency-light (jax/numpy only)
+and re-exported eagerly; the engine and invariants symbols resolve
+lazily (PEP 562) so that lower layers (models/kernels) can import
+``repro.serving.paged_cache`` at module level without pulling
+``engine`` -> ``models`` back in a cycle.
 """
+from repro.serving.faults import (FAULT_POINTS, RECOVERABLE_POINTS,
+                                  FaultInjector, FaultSpec, SwapFailed)
 from repro.serving.paged_cache import (BlockTables, PagePool,
                                        PagePoolExhausted, PrefixIndex,
                                        append_chunk, append_token,
@@ -14,13 +17,21 @@ from repro.serving.paged_cache import (BlockTables, PagePool,
 __all__ = ["Request", "ServingEngine", "sample_token", "BlockTables",
            "PagePool", "PagePoolExhausted", "PrefixIndex", "append_chunk",
            "append_token", "copy_page", "gather_pages", "pages_needed",
-           "swap_in", "swap_out"]
+           "swap_in", "swap_out", "FaultInjector", "FaultSpec",
+           "SwapFailed", "FAULT_POINTS", "RECOVERABLE_POINTS",
+           "RequestError", "EngineStalledError", "ERROR_KINDS",
+           "InvariantViolation", "audit", "scheduler_dump"]
 
-_ENGINE_EXPORTS = ("Request", "ServingEngine", "sample_token")
+_ENGINE_EXPORTS = ("Request", "ServingEngine", "sample_token",
+                   "RequestError", "EngineStalledError", "ERROR_KINDS")
+_INVARIANT_EXPORTS = ("InvariantViolation", "audit", "scheduler_dump")
 
 
 def __getattr__(name):
     if name in _ENGINE_EXPORTS:
         from repro.serving import engine
         return getattr(engine, name)
+    if name in _INVARIANT_EXPORTS:
+        from repro.serving import invariants
+        return getattr(invariants, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -83,6 +83,23 @@ reclaimed under pool pressure.  With sharing off (the default) the
 engine is byte-identical to the PR 4 behavior and stays the parity
 oracle.
 
+Failure semantics (DESIGN.md §robustness): every way a request can
+fail is a *structured, per-request* outcome, never a mid-serve abort —
+``Request.error`` carries a ``RequestError`` with a ``kind`` from the
+taxonomy (``oversize | deadline | pool_exhausted | swap_failed |
+numerics | cancelled``) and the rest of the batch keeps serving.
+Per-request deadlines (``deadline_steps`` / ``ttft_deadline_steps``,
+in engine steps), a public ``cancel(rid)`` that unwinds a request at
+any lifecycle stage, bounded retry-with-backoff for transient
+admission failures, NaN/inf logit quarantine of single slots, and
+swap-in failure degrading to recompute all route through the same
+``_fail_request`` unwind.  A seedable ``FaultInjector``
+(``serving/faults.py``) can force each of those rare paths
+deterministically, and ``invariants.audit`` (``ServeConfig.audit``)
+cross-checks refcounts / free list / block tables after every step.
+A ``stall_steps`` no-progress watchdog turns scheduler livelock into
+``EngineStalledError`` with a state dump instead of a silent spin.
+
 Every sequence carries its own position: the decode stack (and on TPU
 the Pallas kernel) masks per-sequence lengths, so a mixed-length batch
 pays for the cache it occupies, not for ``max_seq_len``.  With KQ-SVD
@@ -101,25 +118,84 @@ import numpy as np
 from repro.config import ModelConfig, ServeConfig
 from repro.core.calibration import ModelProjections
 from repro.core.compressed import cache_footprint
-from repro.models.model import build_model
+from repro.serving import invariants
+from repro.serving.faults import FaultInjector, SwapFailed, checksum
 from repro.serving.paged_cache import (BlockTables, PagePool,
                                        PagePoolExhausted, PrefixIndex,
                                        copy_page, pages_needed, swap_in,
                                        swap_out)
+from repro.models.model import build_model
+
+# the structured failure taxonomy (DESIGN.md §robustness): every
+# terminal non-success outcome of a request is exactly one of these
+ERROR_KINDS = ("oversize", "deadline", "pool_exhausted", "swap_failed",
+               "numerics", "cancelled")
 
 
 @dataclasses.dataclass
+class RequestError:
+    """Why a request terminally failed (``Request.error``).
+
+    kind: one of ``ERROR_KINDS`` —
+      * ``oversize``: worst-case page footprint exceeds the whole pool
+        (could never complete, even alone);
+      * ``deadline``: ``ttft_deadline_steps`` / ``deadline_steps``
+        budget exhausted before the first / last token;
+      * ``pool_exhausted``: transient admission allocation failed more
+        than ``ServeConfig.admission_retries`` times (backoff spent);
+      * ``swap_failed``: a swapped-out cache could not be restored and
+        recompute fallback is disabled (``swap_fallback=False``);
+      * ``numerics``: non-finite next-token logits — the slot was
+        quarantined so the rest of the batch keeps decoding;
+      * ``cancelled``: ``engine.cancel(rid)``.
+    """
+    kind: str
+    detail: str = ""
+    step: int = -1                     # engine step of the failure
+
+    def __post_init__(self) -> None:
+        if self.kind not in ERROR_KINDS:
+            raise ValueError(f"unknown error kind {self.kind!r} "
+                             f"(known: {ERROR_KINDS})")
+
+
+class EngineStalledError(RuntimeError):
+    """``step()`` made no scheduling progress for ``stall_steps``
+    consecutive iterations (e.g. preemption livelock under a tiny
+    pool).  Carries a scheduler-state dump instead of spinning
+    ``generate()`` forever."""
+
+    def __init__(self, n_steps: int, dump: str):
+        self.n_steps = n_steps
+        self.dump = dump
+        super().__init__(
+            f"engine made no scheduling progress for {n_steps} "
+            f"consecutive steps (no new tokens, no prefill advance, "
+            f"no completions)\n{dump}")
+
+
+@dataclasses.dataclass(eq=False)
 class Request:
     rid: int
     prompt: np.ndarray                 # (S,) int32
     max_new_tokens: int = 16
     priority: int = 0                  # SLA tier: preemption evicts lower
                                        # priority first (ties: LIFO stamp)
+    # deadlines in engine steps since start() (None = unbounded):
+    # ttft bounds the wait for the *first* token, deadline_steps the
+    # whole request; exceeding either fails the request with
+    # error.kind == "deadline" and unwinds it (DESIGN.md §robustness)
+    deadline_steps: Optional[int] = None
+    ttft_deadline_steps: Optional[int] = None
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     truncated: bool = False            # hit max_seq_len before max_new_tokens
-    failed: bool = False               # rejected at admission: worst case
-                                       # exceeds the whole page pool
+    error: Optional[RequestError] = None   # structured terminal failure
+
+    @property
+    def failed(self) -> bool:
+        """Terminal failure of any kind (``error`` holds the cause)."""
+        return self.error is not None
 
 
 def sample_token(logits: jnp.ndarray, temperature: float, rng) -> jnp.ndarray:
@@ -130,9 +206,14 @@ def sample_token(logits: jnp.ndarray, temperature: float, rng) -> jnp.ndarray:
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, sc: ServeConfig,
-                 projections: Optional[ModelProjections] = None):
+                 projections: Optional[ModelProjections] = None,
+                 faults: Optional[FaultInjector] = None):
         self.cfg = cfg
         self.sc = sc
+        # explicit injector (tests / chaos drivers) wins over the
+        # config-built chaos schedule; None = no injection
+        self._faults_arg = faults
+        self.faults: Optional[FaultInjector] = None
         self.model = build_model(cfg)
         self.params = params
         self.proj = (self.model.projections_pytree(projections)
@@ -351,6 +432,19 @@ class ServingEngine:
                     f"request {r.rid}: prompt length {len(r.prompt)}"
                     f" exceeds max_seq_len {T}")
         self._pending: List[Request] = list(requests)
+        self._all_requests: List[Request] = list(requests)
+        # fault injection (DESIGN.md §robustness): an injector passed
+        # to the constructor is reused across drains (tests own its
+        # schedule); the config-built chaos schedule is rebuilt per
+        # start() so every drain reproduces bit-for-bit from
+        # (chaos_seed, chaos_rate)
+        if self._faults_arg is not None:
+            self.faults = self._faults_arg
+        elif sc.chaos_seed is not None:
+            self.faults = FaultInjector.chaos(sc.chaos_seed,
+                                              sc.chaos_rate)
+        else:
+            self.faults = None
         self._reserved = [0] * B   # worst-case *logical* pages per slot
         #                            (growth cap on the block-table row)
         self._charged = [0] * B    # worst-case pages the slot may newly
@@ -364,6 +458,7 @@ class ServingEngine:
         if sc.paged:
             self.pool = PagePool(sc.total_pages, sc.watermark_high,
                                  sc.watermark_low)
+            self.pool.faults = self.faults
             self._btabs = BlockTables(B, sc.pages_per_seq)
             self._cache = self.model.init_paged_cache(
                 sc.total_pages + 1, sc.page_size, self.ranks)
@@ -382,6 +477,20 @@ class ServingEngine:
         self.n_swapped_in = 0
         self.n_failed = 0
         self.preempted_rids: List[int] = []
+        # robustness bookkeeping (DESIGN.md §robustness)
+        self._step_count = 0
+        self._no_progress = 0      # consecutive no-progress steps
+        self._progress = False     # set by prefill advance / emits /
+        #                            completions within the current step
+        self._retry: Dict[int, tuple] = {}   # id(req) -> (n, retry_at)
+        self._pf_best: Dict[int, int] = {}   # id(req) -> prefill high-
+        #                                      watermark (absolute pos):
+        #                                      re-prefill after preemption
+        #                                      is thrash, not progress
+        self.n_completed = 0
+        self.n_retried = 0         # admission alloc retries (backoff)
+        self.n_swap_fallbacks = 0  # swap faults degraded to recompute
+        self.error_counts: Dict[str, int] = {k: 0 for k in ERROR_KINDS}
         # prefix-sharing bookkeeping + counters (DESIGN.md
         # §prefix-sharing)
         self._chain_key = [PrefixIndex.ROOT] * B  # parent for next insert
@@ -431,6 +540,88 @@ class ServingEngine:
         return np.concatenate([np.asarray(r.prompt, np.int32),
                                np.asarray(r.out_tokens, np.int32)])
 
+    # -- failure semantics (DESIGN.md §robustness) --------------------------
+
+    def _fires(self, point: str) -> bool:
+        """One hit at a fault-injection point (no-op without an
+        injector)."""
+        return self.faults is not None and self.faults.fires(point)
+
+    def _fail_request(self, r: Request, kind: str,
+                      detail: str = "") -> None:
+        """Terminally fail ``r`` with a structured error and unwind it
+        from wherever it lives in the lifecycle: pending queue,
+        occupied slot (any of mid-prefill / decoding), or the host-RAM
+        swap store.  Page references, index pins and the decode mask
+        are released exactly as a normal harvest would — the one
+        unwind path ``cancel``, deadlines, numerics quarantine and
+        terminal swap failure all share."""
+        r.error = RequestError(kind=kind, detail=detail,
+                               step=self._step_count)
+        r.done = True
+        self.n_failed += 1
+        self.error_counts[kind] += 1
+        self._progress = True          # terminal outcome: state moved
+        self._retry.pop(id(r), None)
+        self._pf_best.pop(id(r), None)
+        self._swapped.pop(id(r), None)
+        # identity, not ==: Request arrays make __eq__ ambiguous
+        self._pending = [p for p in self._pending if p is not r]
+        for b in range(self.sc.max_batch):
+            if self._slot_req[b] is r:
+                self._release(b)
+                self._done = self._done.at[b].set(True)
+                break
+
+    def cancel(self, rid: int, detail: str = "cancelled by caller"
+               ) -> bool:
+        """Cancel request ``rid`` at any lifecycle stage — pending,
+        mid-prefill, decoding, or swapped out — releasing its pages,
+        refcounts and index pins; the rest of the batch is untouched.
+        Returns whether a live request was cancelled (False: unknown
+        rid, or already terminal)."""
+        assert self._started, "call start(requests) first"
+        for r in self._all_requests:
+            if r.rid == rid and not r.done:
+                self._fail_request(r, "cancelled", detail)
+                return True
+        return False
+
+    def _check_deadlines(self) -> None:
+        """Fail requests whose step budget ran out (TTFT: no first
+        token yet; total: not done).  Deadlines are engine steps since
+        ``start()`` — the scheduler's own clock, so chaos runs
+        reproduce deterministically."""
+        now = self._step_count
+        for r in self._all_requests:
+            if r.done:
+                continue
+            ttft = r.ttft_deadline_steps
+            if ttft is not None and not r.out_tokens and now > ttft:
+                self._fail_request(
+                    r, "deadline",
+                    f"no first token after {ttft} steps (TTFT budget)")
+            elif r.deadline_steps is not None and now > r.deadline_steps:
+                self._fail_request(
+                    r, "deadline",
+                    f"incomplete after {r.deadline_steps} steps "
+                    f"({len(r.out_tokens)}/{r.max_new_tokens} tokens)")
+
+    def _quarantine_nonfinite(self, live: np.ndarray,
+                              emits_np: np.ndarray) -> None:
+        """NaN/inf logit guard: fail *only* the offending slots
+        (error.kind == "numerics") and keep the batch.  The poisoned
+        chunk's sampled tokens are discarded for those slots — they
+        were drawn from garbage — and their pages go back to the pool
+        (never indexed: only a finished harvest leaves index pins)."""
+        finite = np.asarray(jnp.all(jnp.isfinite(self._logits), axis=-1))
+        for b in np.nonzero(live & ~finite)[0]:
+            r = self._slot_req[int(b)]
+            emits_np[:, b] = False      # drop this chunk's tokens
+            self._fail_request(r, "numerics",
+                               "non-finite next-token logits")
+            live[b] = False
+
     # -- prefix sharing (DESIGN.md §prefix-sharing) -------------------------
 
     def _cap_share(self, L: int, hits, logits):
@@ -475,7 +666,11 @@ class ServingEngine:
         if n <= 0:
             return []
         if self._pindex is not None and n > self.pool.free_count:
-            self.n_reclaimed += self._pindex.reclaim(self.pool, n)
+            # prefix_reclaim fault: the pass reclaims nothing (pins
+            # that cannot be dropped right now) — callers fall back to
+            # their exhaustion handling (retry / preempt)
+            if not self._fires("prefix_reclaim"):
+                self.n_reclaimed += self._pindex.reclaim(self.pool, n)
         return self.pool.alloc(n)
 
     def _fork_candidates(self, b: int, lo: int, hi: int) -> List[int]:
@@ -496,6 +691,8 @@ class ServingEngine:
         a fresh page, row repointed, one reference dropped on the
         original (other sharers and the index keep reading it)."""
         old = int(self._btabs.rows[b, j])
+        if self._fires("copy_page"):
+            raise PagePoolExhausted("injected copy_page fault")
         new = self._alloc(1)[0]
         self._cache = self._fork_page(self._cache, np.int32(old),
                                       np.int32(new))
@@ -664,6 +861,13 @@ class ServingEngine:
         i = scanned = 0
         while i < len(self._pending) and scanned < sc.admit_window:
             r = self._pending[i]
+            rt = self._retry.get(id(r))
+            if rt is not None and self._step_count < rt[1]:
+                # backing off after a transient admission alloc
+                # failure: not eligible again until its retry step
+                i += 1
+                scanned += 1
+                continue
             if r.max_new_tokens - len(r.out_tokens) <= 0:
                 # nothing (left) to decode: resolve at admission
                 r.done = True
@@ -674,10 +878,10 @@ class ServingEngine:
                 if worst > self.pool.n_pages:
                     # infeasible even alone: its distinct pages (shared
                     # or not) can never fit the pool simultaneously
-                    r.done = True
-                    r.failed = True
-                    self.n_failed += 1
-                    self._pending.pop(i)
+                    self._fail_request(
+                        r, "oversize",
+                        f"worst case {worst} pages exceeds the "
+                        f"{self.pool.n_pages}-page pool")
                     continue
                 shared = self._probe_share(r)
                 worst_private = worst - shared[0] + shared[2]
@@ -739,17 +943,32 @@ class ServingEngine:
                     phys = self._alloc(n_priv)
                 except PagePoolExhausted:
                     # accounting said it fit but the pool disagrees
-                    # (e.g. another admission this pass consumed the
-                    # headroom): roll the admission back and let the
-                    # request wait instead of aborting the batch
+                    # (another admission this pass consumed the
+                    # headroom, or an injected alloc fault): roll the
+                    # admission back and retry with exponential
+                    # backoff; a request whose retry budget is spent
+                    # fails terminally (pool_exhausted) instead of
+                    # waiting forever
                     if shared:
                         self.pool.free(shared)
                     self._slot_req[b] = None
                     self._slot_prompt[b] = None
                     self._reserved[b] = 0
                     self._charged[b] = 0
+                    n_tries, _ = self._retry.get(id(r), (0, 0))
+                    if n_tries >= sc.admission_retries:
+                        self._fail_request(
+                            r, "pool_exhausted",
+                            f"admission allocation failed "
+                            f"{n_tries + 1} times (backoff spent)")
+                        continue
+                    self._retry[id(r)] = (
+                        n_tries + 1,
+                        self._step_count + min(1 << n_tries, 32))
+                    self.n_retried += 1
                     self._pending.insert(0, r)
                     break
+                self._retry.pop(id(r), None)     # clean slate on success
                 self.n_shared_pages += len(shared)
                 self.n_shared_tokens += shared_tokens
                 self._private[b] = n_priv
@@ -761,10 +980,27 @@ class ServingEngine:
                 self._indexed_upto[b] = full_tokens
                 if id(r) in self._swapped:
                     st = self._swapped.pop(id(r))
-                    self._swap_in_slot(b, st["bufs"])
-                    self._activate(b, r, jnp.asarray(st["logits"]))
-                    self.n_swapped_in += 1
-                    continue
+                    detail = ""
+                    if self._fires("swap_in"):
+                        detail = "injected swap_in fault"
+                    elif checksum(st["bufs"]) != st["crc"]:
+                        detail = "swap buffer failed checksum " \
+                                 "verification"
+                    if not detail:
+                        self._swap_in_slot(b, st["bufs"])
+                        self._activate(b, r, jnp.asarray(st["logits"]))
+                        self.n_swapped_in += 1
+                        continue
+                    if not sc.swap_fallback:
+                        self._release(b)
+                        self._fail_request(r, "swap_failed", detail)
+                        continue
+                    # degrade to recompute: the pages just assigned
+                    # already cover the effective prompt (generated
+                    # tokens ride as prompt suffix), so fall through
+                    # to the normal prefill path below — greedy
+                    # outputs are unchanged, only latency is paid
+                    self.n_swap_fallbacks += 1
             if sc.chunked_prefill:
                 if slog is not None:
                     # whole prompt served from the index, next-token
@@ -808,6 +1044,8 @@ class ServingEngine:
                 continue
             if self._late_match(b):
                 continue                     # whole prompt mapped in
+            if self._fires("prefill_delay"):
+                continue   # injected slow prefill: chunk runs later
             r = self._slot_req[b]
             prompt = self._slot_prompt[b]
             start = self._prefilled[b]
@@ -835,6 +1073,12 @@ class ServingEngine:
             self.prefill_chunk_shapes.add(bucket)
             self.n_prefill_chunks += 1
             self._prefilled[b] = start + n
+            # watchdog progress is the per-request prefill *high
+            # watermark*: re-prefilling after a preemption is thrash,
+            # not progress, so only new ground counts
+            if start + n > self._pf_best.get(id(r), 0):
+                self._pf_best[id(r)] = start + n
+                self._progress = True
             budget -= 1
             if self._pindex is not None:
                 # chunks whose pages are now complete become shareable
@@ -891,6 +1135,15 @@ class ServingEngine:
                           if self._cache["steps"] is not None else None)
         self._cache = cache
 
+    def _corrupt_swap(self, bufs: Dict[str, Any]) -> Dict[str, Any]:
+        """Deterministically bit-flip one byte of the first leaf of a
+        swapped buffer (the ``swap_corrupt`` fault: the flip happens
+        *after* the checksum was recorded, so swap-in detects it)."""
+        leaves, treedef = jax.tree.flatten(bufs)
+        leaves[0] = self.faults.corrupt("swap_corrupt",
+                                        np.asarray(leaves[0]))
+        return jax.tree.unflatten(treedef, leaves)
+
     def _preempt(self, b: int) -> None:
         """Evict slot ``b`` and requeue its request at the head of the
         pending queue.  Recompute mode (and any mid-prefill victim,
@@ -902,11 +1155,26 @@ class ServingEngine:
         mid_prefill = self._prefilled[b] is not None
         if self.sc.preempt_mode == "swap" and not mid_prefill:
             pos = int(np.asarray(self._pos)[b])  # == len(effective prompt)
-            self._swapped[id(r)] = {
-                "logits": np.asarray(self._logits[b]),
-                "bufs": self._swap_out_slot(b, pos),
-            }
-            self.n_swapped_out += 1
+            try:
+                if self._fires("swap_out"):
+                    raise SwapFailed("injected swap_out fault")
+                bufs = self._swap_out_slot(b, pos)
+                # integrity receipt: swap-in re-checks it before
+                # restoring, so a corrupted host buffer degrades to
+                # recompute instead of silently resuming from garbage
+                crc = checksum(bufs)
+                if self._fires("swap_corrupt"):
+                    bufs = self._corrupt_swap(bufs)
+                self._swapped[id(r)] = {
+                    "logits": np.asarray(self._logits[b]),
+                    "bufs": bufs,
+                    "crc": crc,
+                }
+                self.n_swapped_out += 1
+            except SwapFailed:
+                # nothing saved: the victim requeues in recompute
+                # mode — its generated tokens ride as prompt suffix
+                self.n_swap_fallbacks += 1
         self._pending.insert(0, r)
         self._release(b)
         self._done = self._done.at[b].set(True)
@@ -931,7 +1199,9 @@ class ServingEngine:
         ``low_extra`` slack pages are also free (thrash guard)."""
         deficit = sum(needs.values())
         if self._pindex is not None and deficit > self.pool.free_count:
-            self.n_reclaimed += self._pindex.reclaim(self.pool, deficit)
+            if not self._fires("prefix_reclaim"):
+                self.n_reclaimed += self._pindex.reclaim(self.pool,
+                                                         deficit)
         if deficit <= self.pool.free_count:
             return
         cand = sorted((b for b in range(self.sc.max_batch)
@@ -982,14 +1252,30 @@ class ServingEngine:
         for b, pages in forks.items():
             if not live[b]:                  # evicted above
                 continue
-            for j in pages:
-                if self.pool.ref(int(self._btabs.rows[b, j])) > 1:
-                    self._cow_fork(b, j)     # sharer may have been evicted
+            try:
+                for j in pages:
+                    if self.pool.ref(int(self._btabs.rows[b, j])) > 1:
+                        self._cow_fork(b, j)  # sharer may be evicted
+            except PagePoolExhausted:
+                # pool dry at fork time (exhaustion race or injected
+                # fault): preempt the would-be writer; it requeues and
+                # retries when pages free up
+                self._preempt(b)
+                live[b] = False
         for b, extra in grow.items():
             if not live[b]:
                 continue
             have = len(self._btabs.slot_pages[b])
-            self._btabs.assign(b, self._alloc(extra), start=have)
+            try:
+                phys = self._alloc(extra)
+            except PagePoolExhausted:
+                # growth allocation failed (race / injected): evict
+                # this slot rather than abort the batch — reserve
+                # admission makes this unreachable without injection
+                self._preempt(b)
+                live[b] = False
+                continue
+            self._btabs.assign(b, phys, start=have)
             # grown pages are private: without this the reserve-mode
             # outstanding-growth sum double-counts them (once in
             # used_count, once in charged - private) and admission
@@ -1002,8 +1288,34 @@ class ServingEngine:
         then admit again, so a slot freed by the harvest starts its
         next request in the *same* step instead of idling for a full
         chunk (the refill-bubble fix).  Returns whether any work
-        remains (the ``generate`` drain condition)."""
+        remains (the ``generate`` drain condition).
+
+        Wraps the scheduling body with the robustness rails
+        (DESIGN.md §robustness): per-request deadlines are checked
+        before scheduling, ``invariants.audit`` runs after it
+        (``ServeConfig.audit``), and a no-progress watchdog turns
+        ``stall_steps`` consecutive do-nothing iterations (no new
+        prefill ground, no emitted tokens, no terminal outcomes) into
+        ``EngineStalledError`` instead of spinning ``generate``
+        forever."""
         assert self._started, "call start(requests) first"
+        self._step_count += 1
+        self._progress = False
+        self._check_deadlines()
+        busy = self._step_inner()
+        if self.sc.audit:
+            invariants.audit(self)
+        if busy and not self._progress:
+            self._no_progress += 1
+            if (self.sc.stall_steps
+                    and self._no_progress >= self.sc.stall_steps):
+                raise EngineStalledError(
+                    self._no_progress, invariants.scheduler_dump(self))
+        else:
+            self._no_progress = 0
+        return busy
+
+    def _step_inner(self) -> bool:
         sc = self.sc
         B = sc.max_batch
         self._admit()
@@ -1040,7 +1352,17 @@ class ServingEngine:
         (self._logits, self._cache, self._pos, self._emitted, self._done,
          self._trunc, self.rng) = carry
         toks_np = np.asarray(toks)            # (N, B)
-        emits_np = np.asarray(emits)
+        emits_np = np.array(emits)            # writable: quarantine
+                                              # masks poisoned slots
+        if self._fires("nan_logits"):
+            # kernel numerics fault: poison the lowest live slot's
+            # next-token logits (the guard below quarantines it)
+            b0 = int(np.nonzero(live)[0][0])
+            self._logits = self._logits.at[b0].set(jnp.nan)
+        if sc.guard_numerics:
+            self._quarantine_nonfinite(live, emits_np)
+        if emits_np[:, live].any():
+            self._progress = True
         done_np = np.asarray(self._done)
         trunc_np = np.asarray(self._trunc)
         freed = False
@@ -1055,6 +1377,9 @@ class ServingEngine:
                 r.done = True
                 r.truncated = bool(trunc_np[b])
                 self._release(b, finished=True)
+                self._retry.pop(id(r), None)
+                self._pf_best.pop(id(r), None)
+                self.n_completed += 1
                 freed = True
         if freed and self._pending:
             # refill the freed slots now: the next request prefills in

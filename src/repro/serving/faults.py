@@ -1,0 +1,227 @@
+"""Deterministic fault injection for the paged serving engine.
+
+DESIGN.md §robustness.  A ``FaultInjector`` owns a set of *named fault
+points* — well-known places in the engine and page store where rare
+production failures (pool exhaustion mid-COW, a failed or corrupted
+host-RAM swap, a slow prefill, NaN logits out of a kernel) can be
+forced to happen on demand:
+
+=================  ======================================================
+point              effect when it fires
+=================  ======================================================
+``page_alloc``     ``PagePool.alloc`` raises ``PagePoolExhausted`` even
+                   though pages are free (exhaustion race)
+``copy_page``      the copy-on-write fork in ``engine._cow_fork`` fails
+                   its page allocation (pool dry at fork time)
+``swap_out``       ``engine._swap_out_slot`` raises ``SwapFailed`` (the
+                   host buffer could not be written)
+``swap_in``        ``engine._swap_in_slot`` raises ``SwapFailed`` (the
+                   host buffer could not be read back)
+``swap_corrupt``   the swapped host buffer is bit-flipped after its
+                   checksum was taken — swap-in detects the mismatch
+                   and degrades to recompute
+``prefix_reclaim`` ``PrefixIndex.reclaim`` reclaims nothing this pass
+                   (pins that cannot be dropped right now)
+``prefill_delay``  a slot's prefill chunk is skipped this step (slow
+                   prefill completion; the chunk runs on a later step)
+``nan_logits``     one live slot's next-token logits are poisoned with
+                   NaN after the decode chunk (kernel numerics fault)
+=================  ======================================================
+
+Every fault above except ``nan_logits`` is *recoverable*: the engine
+degrades (retry with backoff, preempt-and-requeue, swap->recompute
+fallback) and the affected requests still complete with
+token-for-token parity under greedy decoding.  ``nan_logits`` is
+*terminal* for the offending request — the numerics guard quarantines
+the slot and fails it with a structured ``RequestError`` while the
+rest of the batch keeps serving — so the parity-preserving default
+schedule (``FaultInjector.chaos``, what the ``paged-chaos`` CI leg
+runs under every serving test) excludes it; chaos tests that assert
+the error taxonomy arm it explicitly.
+
+Schedules are **deterministic**: each point owns an independent
+counter and an independent seeded RNG stream (derived from
+``(seed, point)``), consumed exactly once per hit — so a chaos run
+reproduces bit-for-bit from ``(schedule, seed)`` regardless of how
+many *other* points were hit in between, and shrinking a failing
+schedule to one point does not reshuffle its firings.  A trigger is
+either ``nth`` (fire on exactly the nth hit of the point, 1-based) or
+``prob`` (an independent Bernoulli draw per hit); ``times`` bounds
+the total firings of a spec (``None`` = unlimited).
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+FAULT_POINTS = (
+    "page_alloc",
+    "copy_page",
+    "swap_out",
+    "swap_in",
+    "swap_corrupt",
+    "prefix_reclaim",
+    "prefill_delay",
+    "nan_logits",
+)
+
+# the parity-preserving subset (see module docstring): every point the
+# engine fully recovers from with unchanged greedy outputs
+RECOVERABLE_POINTS = tuple(p for p in FAULT_POINTS if p != "nan_logits")
+
+
+class SwapFailed(RuntimeError):
+    """A host-RAM swap could not complete (or failed verification)."""
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """One trigger rule at one fault point.
+
+    Exactly one of ``nth`` (fire on that hit index, 1-based) or
+    ``prob`` (independent per-hit Bernoulli) must be set.  ``times``
+    caps how often the spec may fire (``None`` = unlimited)."""
+
+    point: str
+    nth: Optional[int] = None
+    prob: Optional[float] = None
+    times: Optional[int] = 1
+    fired: int = 0
+
+    def __post_init__(self) -> None:
+        if self.point not in FAULT_POINTS:
+            raise ValueError(
+                f"unknown fault point {self.point!r} "
+                f"(known: {FAULT_POINTS})")
+        if (self.nth is None) == (self.prob is None):
+            raise ValueError("set exactly one of nth= or prob=")
+        if self.nth is not None and self.nth < 1:
+            raise ValueError("nth is 1-based")
+        if self.prob is not None and not 0.0 <= self.prob <= 1.0:
+            raise ValueError("prob must be in [0, 1]")
+
+
+class FaultInjector:
+    """Seeded, per-point-deterministic fault scheduler.
+
+    Usage::
+
+        inj = FaultInjector(seed=0)
+        inj.add("page_alloc", nth=3)           # the 3rd alloc fails
+        inj.add("swap_corrupt", prob=0.5, times=None)
+        ...
+        if inj.fires("page_alloc"):
+            raise PagePoolExhausted("injected")
+
+    ``fires`` advances the point's hit counter whether or not any spec
+    matches, so the schedule is a pure function of the sequence of
+    hits at that point.  ``fired_log`` records every firing as
+    ``(point, hit_index)`` — the reproducibility receipt chaos tests
+    assert on — and ``points_fired()`` is the coverage set.
+    """
+
+    def __init__(self, seed: int = 0):
+        self.seed = seed
+        self._specs: Dict[str, List[FaultSpec]] = {}
+        self._hits: Dict[str, int] = {}
+        self._rng: Dict[str, np.random.Generator] = {}
+        self.fired_log: List[Tuple[str, int]] = []
+
+    def add(self, point: str, nth: Optional[int] = None,
+            prob: Optional[float] = None,
+            times: Optional[int] = 1) -> "FaultInjector":
+        spec = FaultSpec(point, nth=nth, prob=prob, times=times)
+        self._specs.setdefault(spec.point, []).append(spec)
+        return self                              # chainable
+
+    @classmethod
+    def chaos(cls, seed: int, rate: float = 0.05,
+              points: Tuple[str, ...] = RECOVERABLE_POINTS
+              ) -> "FaultInjector":
+        """The standard chaos schedule: every (recoverable) point
+        armed with an unlimited per-hit probability ``rate``.  This is
+        what ``ServeConfig.chaos_seed`` builds and the ``paged-chaos``
+        CI leg runs the whole serving suite under."""
+        inj = cls(seed)
+        for p in points:
+            inj.add(p, prob=rate, times=None)
+        return inj
+
+    def _stream(self, point: str) -> np.random.Generator:
+        rng = self._rng.get(point)
+        if rng is None:
+            # independent per-point stream: firing order at one point
+            # never depends on traffic at another
+            crc = zlib.crc32(point.encode())
+            rng = np.random.default_rng((self.seed, crc))
+            self._rng[point] = rng
+        return rng
+
+    def hits(self, point: str) -> int:
+        """How many times ``point`` has been reached so far."""
+        return self._hits.get(point, 0)
+
+    def fires(self, point: str) -> bool:
+        """Register one hit at ``point``; True if any spec triggers.
+
+        The per-point RNG is consumed exactly once per hit whenever
+        any probabilistic spec is armed at the point, even when a
+        ``times`` budget is already spent — keeping later draws
+        aligned across schedule variations."""
+        if point not in FAULT_POINTS:
+            raise ValueError(f"unknown fault point {point!r}")
+        hit = self._hits.get(point, 0) + 1
+        self._hits[point] = hit
+        specs = self._specs.get(point, ())
+        draw = None
+        if any(s.prob is not None for s in specs):
+            draw = float(self._stream(point).random())
+        fired = False
+        for s in specs:
+            if s.times is not None and s.fired >= s.times:
+                continue
+            if s.nth is not None:
+                if hit != s.nth:
+                    continue
+            elif draw is None or draw >= s.prob:
+                continue
+            s.fired += 1
+            fired = True
+        if fired:
+            self.fired_log.append((point, hit))
+        return fired
+
+    def corrupt(self, point: str, buf: np.ndarray) -> np.ndarray:
+        """Deterministically bit-flip one element of ``buf`` (used by
+        the ``swap_corrupt`` fault after the checksum was taken)."""
+        flat = np.ascontiguousarray(buf).view(np.uint8).reshape(-1)
+        idx = int(self._stream(point).integers(flat.size))
+        out = flat.copy()
+        out[idx] ^= 0xFF
+        return np.frombuffer(out.tobytes(), dtype=buf.dtype).reshape(
+            buf.shape)
+
+    def points_fired(self) -> Tuple[str, ...]:
+        """Distinct points that fired at least once (coverage)."""
+        seen = []
+        for p, _ in self.fired_log:
+            if p not in seen:
+                seen.append(p)
+        return tuple(seen)
+
+
+def checksum(bufs) -> int:
+    """crc32 over a pytree of host numpy buffers (swap verification:
+    ``swap_out`` records it, ``swap_in`` re-checks before restoring —
+    a corrupted buffer degrades to recompute instead of silently
+    resuming from garbage)."""
+    import jax
+
+    crc = 0
+    for leaf in jax.tree.leaves(bufs):
+        arr = np.ascontiguousarray(np.asarray(leaf))
+        crc = zlib.crc32(arr.tobytes(), crc)
+    return crc

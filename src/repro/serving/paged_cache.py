@@ -79,6 +79,10 @@ class PagePool:
         self._refs = np.zeros(n_pages + 1, np.int32)
         self.high_pages = max(1, int(round(high_watermark * n_pages)))
         self.low_extra = int(round(low_watermark * n_pages))
+        # optional FaultInjector (DESIGN.md §robustness): the engine
+        # attaches its injector here so ``page_alloc`` exhaustion races
+        # can be forced deterministically
+        self.faults = None
 
     @property
     def free_count(self) -> int:
@@ -99,7 +103,15 @@ class PagePool:
 
     def alloc(self, n: int) -> List[int]:
         """Pop ``n`` pages at refcount 1; raises PagePoolExhausted
-        (allocating none) if fewer than ``n`` are free."""
+        (allocating none) if fewer than ``n`` are free — or when the
+        attached injector fires ``page_alloc`` (a forced exhaustion
+        race; callers recover exactly as they would from the real
+        thing)."""
+        if n and self.faults is not None and self.faults.fires(
+                "page_alloc"):
+            raise PagePoolExhausted(
+                f"injected page_alloc fault (need {n}, "
+                f"{len(self._free)} free)")
         if n > len(self._free):
             raise PagePoolExhausted(
                 f"need {n} pages, {len(self._free)} free"

@@ -16,8 +16,11 @@ from repro.config import ServeConfig
 # paged-preempt additionally switches to optimistic admission over a
 # deliberately small pool so preempt-and-requeue actually fires under
 # pytest; paged-prefix turns on cross-request prefix sharing with
-# copy-on-write (refcounted pages + prefix index); the default (dense)
-# keeps the exact-length parity oracle.
+# copy-on-write (refcounted pages + prefix index); paged-chaos layers
+# a seeded FaultInjector (recoverable points only — greedy outputs
+# stay token-for-token intact) plus per-step invariant auditing on top
+# of the full optimistic+swap+sharing stack; the default (dense) keeps
+# the exact-length parity oracle.
 ENGINE = os.environ.get("REPRO_ENGINE", "dense")
 
 
@@ -36,19 +39,30 @@ def serve_config(**kw) -> ServeConfig:
     on share_prefix: every serving test runs through the refcounted
     page store with the prefix index live (matches on the tests'
     random prompts are rare — the leg asserts sharing never perturbs
-    generations)."""
-    if ENGINE in ("paged", "paged-preempt", "paged-prefix"):
+    generations).  REPRO_ENGINE=paged-chaos is the hardest leg: the
+    preempt pool + optimistic admission + swap preemption + sharing,
+    with a seeded chaos FaultInjector (ServeConfig.chaos_seed; the
+    default schedule arms only recoverable fault points, so every
+    greedy parity assertion still holds bit-for-bit) and
+    invariants.audit after every step (audit=True)."""
+    if ENGINE in ("paged", "paged-preempt", "paged-prefix",
+                  "paged-chaos"):
         kw.setdefault("paged", True)
         kw.setdefault("page_size", 4)
         kw.setdefault("chunked_prefill", True)
         kw.setdefault("prefill_chunk", 8)
-    if ENGINE == "paged-preempt":
+    if ENGINE in ("paged-preempt", "paged-chaos"):
         T = kw.get("max_seq_len", 4096)
         kw.setdefault("n_pages", max(2, T // kw["page_size"]))
         kw.setdefault("admission", "optimistic")
         kw.setdefault("watermark_low", 0.1)
     if ENGINE == "paged-prefix":
         kw.setdefault("share_prefix", True)
+    if ENGINE == "paged-chaos":
+        kw.setdefault("share_prefix", True)
+        kw.setdefault("preempt_mode", "swap")
+        kw.setdefault("chaos_seed", 0)
+        kw.setdefault("audit", True)
     return ServeConfig(**kw)
 
 

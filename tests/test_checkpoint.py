@@ -64,5 +64,61 @@ def test_atomic_commit_no_tmp_left(tmp_path):
     m = CheckpointManager(str(tmp_path), keep=2, async_save=False)
     m.save(1, tree())
     assert not any(d.endswith(".tmp") for d in os.listdir(str(tmp_path)))
+    assert not any(f.endswith(".part")
+                   for f in os.listdir(os.path.join(str(tmp_path),
+                                                    "step_00000001")))
     assert open(os.path.join(str(tmp_path), "LATEST")).read() \
         == "step_00000001"
+
+
+def test_torn_write_preserves_previous_checkpoint(tmp_path, monkeypatch):
+    """Kill the writer mid-shard (partial bytes on disk, no fsync, no
+    rename): the torn step must be invisible to ``list_steps`` /
+    ``restore`` and the previous checkpoint must load intact — the
+    crash window the .part + fsync + rename protocol closes
+    (DESIGN.md §robustness)."""
+    m = CheckpointManager(str(tmp_path), keep=5, async_save=False)
+    t = tree()
+    m.save(1, t, extra={"train_step": 1})
+
+    def torn_savez(f, **arrays):
+        f.write(b"PK\x03\x04 torn npz header")   # partial garbage
+        raise KeyboardInterrupt("simulated crash mid-write")
+
+    monkeypatch.setattr(np, "savez", torn_savez)
+    with pytest.raises(KeyboardInterrupt):
+        m.save(2, t, extra={"train_step": 2})
+    monkeypatch.undo()
+
+    # the torn step never became visible; its bytes sit in .tmp/.part
+    assert m.list_steps() == [1]
+    assert open(os.path.join(str(tmp_path), "LATEST")).read() \
+        == "step_00000001"
+    out, meta = m.restore(t)
+    assert meta["extra"]["train_step"] == 1
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # a crash between the shard commit and the index commit is equally
+    # recoverable: the step directory was never renamed into place
+    real_commit = CheckpointManager._commit_file
+
+    def torn_index(path, write_fn):
+        if path.endswith("index.json"):
+            raise KeyboardInterrupt("simulated crash before index")
+        real_commit(path, write_fn)
+
+    monkeypatch.setattr(CheckpointManager, "_commit_file",
+                        staticmethod(torn_index))
+    with pytest.raises(KeyboardInterrupt):
+        m.save(3, t, extra={"train_step": 3})
+    monkeypatch.undo()
+    assert m.list_steps() == [1]
+    _, meta = m.restore(t)
+    assert meta["extra"]["train_step"] == 1
+
+    # and the writer recovers on the next clean save
+    m.save(4, t, extra={"train_step": 4})
+    assert m.list_steps() == [1, 4]
+    _, meta = m.restore(t)
+    assert meta["extra"]["train_step"] == 4

@@ -289,7 +289,9 @@ def test_paged_engine_too_big_prompt_fails():
     reqs = [Request(rid=0, prompt=prompt, max_new_tokens=4)]
     eng.generate(reqs)
     assert reqs[0].failed and reqs[0].done and not reqs[0].out_tokens
+    assert reqs[0].error.kind == "oversize"
     assert eng.n_failed == 1
+    assert eng.error_counts["oversize"] == 1
 
 
 def test_paged_engine_too_big_growth_fails():
@@ -304,6 +306,7 @@ def test_paged_engine_too_big_growth_fails():
     reqs = [Request(rid=0, prompt=prompt, max_new_tokens=12)]
     eng.generate(reqs)
     assert reqs[0].failed and reqs[0].done and not reqs[0].out_tokens
+    assert reqs[0].error.kind == "oversize"
 
 
 def test_paged_engine_truncation_matches_dense():

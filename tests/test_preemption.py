@@ -255,7 +255,9 @@ def test_too_big_request_fails_without_aborting_batch():
         eng, _ = ServingEngine(cfg, params, sc), None
         eng.generate(reqs)
         assert reqs[1].failed and reqs[1].done and not reqs[1].out_tokens
+        assert reqs[1].error.kind == "oversize", admission
         assert eng.n_failed == 1
+        assert eng.error_counts["oversize"] == 1
         assert len(reqs[0].out_tokens) == 4
         assert len(reqs[2].out_tokens) == 3
         assert eng.pool.free_count == eng.pool.n_pages
