@@ -89,6 +89,9 @@ RATIO_PAIRS = (
     ("decode_ttft_chunked", "decode_ttft_staged"),
     # piggybacked prefill+decode step vs the pure chunked prefill
     ("decode_mixed_step", "decode_ttft_chunked"),
+    # token-budget fused iteration (one jit dispatch) vs the same work
+    # as separate dispatches: fusing must never cost more than it saves
+    ("decode_fused_step", "decode_mixed_step"),
     # oversubscribed-pool scheduling overhead: optimistic admission
     # with preempt-and-requeue (recompute / host-RAM swap) vs reserve
     # admission on an ample pool (DESIGN.md §preemption); engine-drain

@@ -11,7 +11,11 @@ cache: the time grid is bounded by the actual max length, so the cost of
 a decode step tracks ``max(lengths)``, not ``max_seq_len``
 (DESIGN.md §decode).  The ``decode_ttft_*`` / ``decode_mixed_step``
 rows price chunked page-direct prefill against the dense-staging
-oracle and the piggybacked prefill+decode step (DESIGN.md §prefill).
+oracle and the piggybacked prefill+decode step (DESIGN.md §prefill);
+``decode_fused_step`` re-runs the mixed step's exact work as a single
+jitted dispatch — the token-budget scheduler's fused iteration
+(DESIGN.md §scheduler) — so its quotient against ``decode_mixed_step``
+gates the launch-overhead saving of fusing.
 The ``decode_reserve`` / ``decode_preempt_*`` rows are an *engine*
 scenario: the same oversubscribed request batch (total pool pages <
 sum of the requests' worst cases) served end-to-end under reserve
@@ -216,9 +220,27 @@ def run(B: int = 4, Hkv: int = 8, m: int = 8, T: int = 4096,
         o2, _, _ = prefill_chunk_call(0, kp0, vp0)
         return o1, o2
 
+    @jax.jit
+    def fused_step():        # same work as mixed_step, ONE dispatch:
+        # the token-budget scheduler's fused iteration (DESIGN.md
+        # §scheduler) traces chunk-append + prefill attention + the
+        # decode batch into a single jit, so the host pays one launch
+        # where mixed_step pays one per op
+        pos0 = jnp.asarray([0], jnp.int32)
+        kpool = append_chunk(kp0, btab1, pos0, k_ch[0], valid1)
+        vpool = append_chunk(vp0, btab1, pos0, v_ch[0], valid1)
+        o2 = kq_prefill_paged_attention_op(
+            q_ch[0], kpool, vpool, jnp.asarray([C], jnp.int32),
+            pos0, btab1, scale=scale, max_len=Lp)
+        o1 = kq_decode_paged_attention_op(qc2, kp, vp, lens_full,
+                                          btab_full, scale=scale,
+                                          max_len=T)
+        return o1, o2
+
     _, us_ttft_c = timed(ttft_chunked)
     _, us_ttft_s = timed(ttft_staged)
     _, us_mixed = timed(mixed_step, reps=5)
+    _, us_fused = timed(fused_step, reps=5)
     chunk_buf = 2 * Gv * C * R * kp.dtype.itemsize
     stage_buf = 2 * Gv * T * R * kp.dtype.itemsize
     rows.append(("decode_ttft_chunked", us_ttft_c,
@@ -229,9 +251,12 @@ def run(B: int = 4, Hkv: int = 8, m: int = 8, T: int = 4096,
                  f"compiles=per-length"))
     rows.append(("decode_mixed_step", us_mixed,
                  f"decode_B={Bv};chunk={C};overlap=step-level"))
+    rows.append(("decode_fused_step", us_fused,
+                 f"decode_B={Bv};chunk={C};overlap=one-dispatch"))
     print(f"prefill ttft: chunked {us_ttft_c:.0f}us "
           f"(buf {chunk_buf}B) vs staged {us_ttft_s:.0f}us "
-          f"(buf {stage_buf}B); mixed step {us_mixed:.0f}us")
+          f"(buf {stage_buf}B); mixed step {us_mixed:.0f}us, "
+          f"fused {us_fused:.0f}us ({us_mixed/us_fused:.2f}x)")
 
     rows.extend(_preemption_rows())
     rows.extend(_shared_prefix_rows())

@@ -384,6 +384,19 @@ class ServeConfig:
     # one per mid-prefill slot — bounds the latency a decode iteration
     # pays for concurrent prompt admission
     prefill_chunks_per_step: int = 1
+    # global per-step token budget (DESIGN.md §scheduler, vLLM /
+    # sarathi style): 0 keeps the legacy per-request scheduling.  When
+    # positive, every step() builds one budget of this many tokens:
+    # each decoding slot charges 1 token first, prefill chunks fill the
+    # remainder (the last chunk truncates to the residual budget
+    # instead of skipping the step), admission stops once occupied
+    # slots reach the budget, and one prefill chunk fuses into the
+    # decode dispatch (a single device call per step).  Per-step cost
+    # is then bounded by max_num_batched_tokens regardless of the
+    # prefill:decode mix.  Requires chunked_prefill (budget truncation
+    # needs chunk-granular prefill; the exact-length and legacy chunked
+    # paths stay the parity oracles).
+    max_num_batched_tokens: int = 0
     # admission policy for the paged pool (DESIGN.md §preemption):
     # "reserve" (PR 2, the parity oracle) admits only when a request's
     # *worst-case* page footprint fits the unreserved pool; "optimistic"
@@ -504,6 +517,15 @@ class ServeConfig:
                     f"compile at that shape)")
             if b[0] <= 0:
                 raise ValueError("prefill buckets must be positive")
+        if self.max_num_batched_tokens < 0:
+            raise ValueError(
+                "max_num_batched_tokens must be >= 0 (0 disables the "
+                "token-budget scheduler)")
+        if self.max_num_batched_tokens and not self.chunked_prefill:
+            raise ValueError(
+                "max_num_batched_tokens schedules prefill at chunk "
+                "granularity (truncating the last chunk to the residual "
+                "budget) and requires chunked_prefill=True")
 
     @property
     def buckets(self) -> Tuple[int, ...]:

@@ -158,6 +158,11 @@ def kq_prefill_paged_attention(qc, kc_pool, vc_pool, lengths, pos0,
     last occupied page — with (m*S, ps) score tiles instead of (m, ps).
     Bucket-padded queries (``pos0 + s >= lengths``) fall back to a
     full-prefix mask: garbage rows, isolated and sliced by the caller.
+    Budget-truncated chunks (DESIGN.md §scheduler: the token-budget
+    scheduler cuts the last chunk of a step at the residual budget)
+    need no kernel-side support — truncation only shrinks the valid
+    prefix, so it reaches this entry as a smaller ``lengths`` under the
+    same bucket shape and the padding mask covers the cut tail.
 
     Returns (B, H, S, Rv) group-aggregated values.
     """

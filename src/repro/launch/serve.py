@@ -51,6 +51,14 @@ def main() -> None:
                     help="comma-separated padded chunk lengths (largest "
                          "must equal --prefill-chunk); empty derives by "
                          "doubling")
+    ap.add_argument("--max-batched-tokens", type=int, default=0,
+                    help="global per-step token budget (DESIGN.md "
+                         "§scheduler): each decoding slot charges 1 "
+                         "token, prefill chunks fill the remainder "
+                         "(the last chunk truncated to it) and one "
+                         "chunk fuses into the decode dispatch.  0 = "
+                         "legacy per-request scheduling.  Implies "
+                         "chunked prefill (and so --paged).")
     ap.add_argument("--admission", default="reserve",
                     choices=["reserve", "optimistic"],
                     help="paged admission policy (DESIGN.md §preemption):"
@@ -107,6 +115,11 @@ def main() -> None:
     ap.add_argument("--chaos-rate", type=float, default=0.05,
                     help="per-hit fault probability under --chaos-seed")
     args = ap.parse_args()
+    if args.max_batched_tokens and not args.prefill_chunk:
+        print("--max-batched-tokens schedules prefill at chunk "
+              "granularity: enabling chunked prefill "
+              "(--prefill-chunk 8)")
+        args.prefill_chunk = 8
     if args.share_prefix and not args.prefill_chunk:
         print("--share-prefix prefills only the unshared tail: enabling "
               "chunked prefill (--prefill-chunk 8)")
@@ -161,7 +174,8 @@ def main() -> None:
                      prefix_index_capacity=args.prefix_index_capacity,
                      audit=args.audit,
                      chaos_seed=args.chaos_seed,
-                     chaos_rate=args.chaos_rate)
+                     chaos_rate=args.chaos_rate,
+                     max_num_batched_tokens=args.max_batched_tokens)
     eng = ServingEngine(cfg, params, sc, projections=proj)
     rng = np.random.default_rng(0)
     lens = rng.integers(min(4, args.prompt_len), args.prompt_len + 1,
@@ -223,6 +237,26 @@ def main() -> None:
         print(f"prefill compiles: {len(eng.prefill_chunk_shapes)} chunk "
               f"shape(s) {sorted(eng.prefill_chunk_shapes)} of "
               f"{len(sc.buckets)} bucket(s) {list(sc.buckets)}")
+    if args.max_batched_tokens:
+        # per-step budget accounting (DESIGN.md §scheduler): how the
+        # global token budget split between decode charges and prefill
+        # fill, and how often a chunk fused into the decode dispatch
+        log = eng.budget_log
+        dec = sum(e["n_decode"] for e in log)
+        pf = sum(e["prefill_tokens"] for e in log)
+        print(f"token budget {args.max_batched_tokens}/step over "
+              f"{len(log)} step(s): {dec} decode + {pf} prefill "
+              f"token(s) scheduled, {eng.n_fused_steps} fused "
+              f"iteration(s), {eng.n_truncated_chunks} chunk(s) "
+              f"truncated at the residual budget")
+        for e in log[:12]:
+            print(f"  step {e['step']:3d}: budget={e['budget']:3d} "
+                  f"decode={e['n_decode']:2d} "
+                  f"prefill={e['prefill_tokens']:3d} "
+                  f"admitted={e['admitted']}"
+                  + ("  [fused]" if e["fused"] else ""))
+        if len(log) > 12:
+            print(f"  ... {len(log) - 12} more step(s)")
 
 
 if __name__ == "__main__":

@@ -460,7 +460,9 @@ def attn_prefill_chunk(p, x, cache: Dict, pos0, cfg: ModelConfig,
 
     x: (B, S, D) chunk whose first real token sits at position
     ``pos0[b]``; ``valid``: (B, S) marks real (non-bucket-padding)
-    tokens, which must form a contiguous prefix.  The chunk's
+    tokens, which must form a contiguous prefix — or a (B,) count of
+    real tokens per row (the budget-truncated form, DESIGN.md
+    §scheduler), forwarded as counts to ``append_chunk``.  The chunk's
     (compressed) k/v entries are written through ``block_table`` into
     the page pool — padding routes to the garbage page — and the
     chunk's queries attend the already-written pages (earlier chunks
@@ -483,6 +485,11 @@ def attn_prefill_chunk(p, x, cache: Dict, pos0, cfg: ModelConfig,
     pos0 = batched_positions(pos0, B)
     if valid is None:
         valid = jnp.ones((B, S), bool)
+    # cache writes take either form; the count form stays counts so
+    # the paged-store primitive exercises its own truncation contract
+    wvalid = valid
+    if valid.ndim == 1:
+        valid = jnp.arange(S)[None, :] < valid[:, None]      # (B, S)
     positions = pos0[:, None] + jnp.arange(S)[None, :]       # (B, S)
     q, k_new, v_new = _qkv(p, x, cfg, positions[:, None, :])
     T = block_table.shape[1] * cache[
@@ -494,8 +501,8 @@ def attn_prefill_chunk(p, x, cache: Dict, pos0, cfg: ModelConfig,
     if proj is not None:
         k_st = jnp.einsum("bhtd,hdr->bhtr", k_new, proj["a_k"])
         v_st = jnp.einsum("bhtd,hdr->bhtr", v_new, proj["a_v"])
-        kc = append_chunk(cache["kc"], block_table, pos0, k_st, valid)
-        vc = append_chunk(cache["vc"], block_table, pos0, v_st, valid)
+        kc = append_chunk(cache["kc"], block_table, pos0, k_st, wvalid)
+        vc = append_chunk(cache["vc"], block_table, pos0, v_st, wvalid)
         new_cache = dict(cache, kc=kc, vc=vc)
         qg = q.reshape(B, Hkv, m_p, S, dh)
         qc = jnp.einsum("bgmsd,gdr->bgmsr", qg, proj["b_q"])
@@ -517,8 +524,8 @@ def attn_prefill_chunk(p, x, cache: Dict, pos0, cfg: ModelConfig,
         c_v = proj["c_v"].reshape(Hkv, -1, m, cfg.d_model)
         y = jnp.einsum("bgmsr,grmd->bsd", agg[:, :, :m], c_v)
     else:
-        kk = append_chunk(cache["k"], block_table, pos0, k_new, valid)
-        vv = append_chunk(cache["v"], block_table, pos0, v_new, valid)
+        kk = append_chunk(cache["k"], block_table, pos0, k_new, wvalid)
+        vv = append_chunk(cache["v"], block_table, pos0, v_new, wvalid)
         new_cache = dict(cache, k=kk, v=vv)
         k_seq = gather_pages(kk, block_table)
         v_seq = gather_pages(vv, block_table)

@@ -15,6 +15,7 @@ from __future__ import annotations
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.models import attention as attn_mod
@@ -156,9 +157,13 @@ def apply_layer(p: Dict, x, cfg: ModelConfig, layer_idx: int, mode: str,
         else:
             y, new_cache = ssm_mod.ssm_decode(p["ssm"], h, cache, cfg.ssm)
     x = x + y
-    x, aux = _ffn_apply(p, x, cfg, layer_idx, mode,
-                        token_mask if mode in ("decode", "chunk")
-                        else None)
+    ffn_mask = token_mask if mode in ("decode", "chunk") else None
+    if ffn_mask is not None and mode == "chunk" and ffn_mask.ndim == 1:
+        # budget-truncated count form (DESIGN.md §scheduler): the
+        # attention path consumes counts natively, but MoE routing
+        # needs the expanded per-token prefix mask
+        ffn_mask = jnp.arange(x.shape[1])[None, :] < ffn_mask[:, None]
+    x, aux = _ffn_apply(p, x, cfg, layer_idx, mode, ffn_mask)
     return x, new_cache, captures, aux
 
 

@@ -100,6 +100,19 @@ cross-checks refcounts / free list / block tables after every step.
 A ``stall_steps`` no-progress watchdog turns scheduler livelock into
 ``EngineStalledError`` with a state dump instead of a silent spin.
 
+Token-budget scheduling (``ServeConfig.max_num_batched_tokens``,
+DESIGN.md §scheduler): with a positive budget every ``step()`` spends
+one global token budget instead of the per-request admit loop — each
+decoding slot charges 1 token first, admission stops once occupancy
+reaches the budget, and prefill chunks fill the residual (the last
+chunk truncated to it, sarathi-style).  One staged chunk fuses into
+the decode scan's dispatch (``_fused_step``), so the common steady
+state is a *single* device call per step and per-step cost is bounded
+by the budget whatever the prefill:decode mix.  Greedy outputs are
+scheduling-invariant, so the legacy path (budget 0, the default)
+stays the token-for-token parity oracle; the chaos / audit layers run
+unchanged on either scheduler.
+
 Every sequence carries its own position: the decode stack (and on TPU
 the Pallas kernel) masks per-sequence lengths, so a mixed-length batch
 pays for the cache it occupies, not for ``max_seq_len``.  With KQ-SVD
@@ -176,6 +189,14 @@ class EngineStalledError(RuntimeError):
 
 @dataclasses.dataclass(eq=False)
 class Request:
+    """One generation request, mutated in place as it is served.
+
+    Inputs: ``rid`` (caller's id), ``prompt``, ``max_new_tokens``,
+    optional ``priority`` tier and per-request deadlines.  Outputs:
+    ``out_tokens`` accumulates generated ids; exactly one terminal
+    outcome holds afterwards — ``done`` (optionally ``truncated``) or
+    ``failed`` with ``error`` carrying the structured cause.  The
+    lifecycle state machine is documented in docs/SERVING.md."""
     rid: int
     prompt: np.ndarray                 # (S,) int32
     max_new_tokens: int = 16
@@ -199,12 +220,30 @@ class Request:
 
 
 def sample_token(logits: jnp.ndarray, temperature: float, rng) -> jnp.ndarray:
+    """Sample next-token ids from ``(B, V)`` logits.
+
+    Greedy argmax at ``temperature <= 0`` (the deterministic parity
+    mode every scheduling-invariance test relies on); otherwise a
+    temperature-scaled categorical draw from ``rng``."""
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1)
     return jax.random.categorical(rng, logits / temperature, axis=-1)
 
 
 class ServingEngine:
+    """Continuous-batching serving engine (see the module docstring
+    for the full design).
+
+    Public surface: ``start(requests)`` allocates serving state,
+    ``step()`` advances one scheduling iteration, ``generate`` is the
+    start-and-drain loop, ``cancel(rid)`` unwinds one request at any
+    lifecycle stage.  Requests mutate in place — ``out_tokens``
+    accumulates, ``done``/``truncated``/``error`` report the terminal
+    outcome.  Counters (``n_preempted``, ``n_failed``,
+    ``error_counts``, ``budget_log``, ...) expose scheduler behavior
+    to tests, benches and the CLI; docs/SERVING.md is the operator
+    guide."""
+
     def __init__(self, cfg: ModelConfig, params, sc: ServeConfig,
                  projections: Optional[ModelProjections] = None,
                  faults: Optional[FaultInjector] = None):
@@ -227,6 +266,7 @@ class ServingEngine:
         self._paged_insert = jax.jit(self._paged_insert_impl)
         self._prefill_chunk = jax.jit(self._prefill_chunk_impl)
         self._decode_chunk = jax.jit(self._decode_chunk_impl)
+        self._fused_step = jax.jit(self._fused_step_impl)
         self._fork_page = jax.jit(self._fork_page_impl)
         self.rng = jax.random.PRNGKey(sc.seed)
         # distinct chunk shapes traced so far — the compile-count bound
@@ -264,9 +304,12 @@ class ServingEngine:
         pos0: (1,) tokens already written for this sequence.  Writes
         the chunk's entries straight into the page pools through
         ``btab_row`` and returns the logits of the last *valid* token
-        (the next-token carry once the final chunk lands).  Compiles
-        once per bucket shape."""
-        valid = jnp.arange(tokens.shape[1])[None, :] < n_valid[:, None]
+        (the next-token carry once the final chunk lands).  ``n_valid``
+        flows down as a per-row count (the budget-truncated
+        ``append_chunk`` form, DESIGN.md §scheduler) — the model layer
+        derives the prefix mask where it needs one.  Compiles once per
+        bucket shape."""
+        valid = n_valid
         kw: Dict[str, Any] = {"block_table": btab_row}
         if self.proj is not None:
             kw["proj"] = proj
@@ -278,17 +321,17 @@ class ServingEngine:
 
     def _insert_impl(self, cache, slot_cache, slot):
         """Write a single-sequence cache into batch slot ``slot``."""
-        def at_batch0(big, small):
+        def _at_batch0(big, small):
             return jax.lax.dynamic_update_slice_in_dim(
                 big, small.astype(big.dtype), slot, 0)
 
-        def at_batch1(big, small):          # scanned steps: (n_steps, B, ...)
+        def _at_batch1(big, small):          # scanned steps: (n_steps, B, ...)
             return jax.lax.dynamic_update_slice_in_dim(
                 big, small.astype(big.dtype), slot, 1)
 
-        out = {"prefix": jax.tree.map(at_batch0, cache["prefix"],
+        out = {"prefix": jax.tree.map(_at_batch0, cache["prefix"],
                                       slot_cache["prefix"])}
-        out["steps"] = (jax.tree.map(at_batch1, cache["steps"],
+        out["steps"] = (jax.tree.map(_at_batch1, cache["steps"],
                                      slot_cache["steps"])
                         if cache["steps"] is not None else None)
         return out
@@ -306,21 +349,21 @@ class ServingEngine:
         ps = self.sc.page_size
         n = phys.shape[0]
 
-        def repage0(pool, dense):           # dense (1, Hkv, T, R)
+        def _repage0(pool, dense):           # dense (1, Hkv, T, R)
             hkv, t, r = dense.shape[1:]
             pages = dense[0].reshape(hkv, t // ps, ps, r).transpose(
                 1, 0, 2, 3)
             return pool.at[phys].set(pages[:n].astype(pool.dtype))
 
-        def repage1(pool, dense):           # (n_steps, 1, Hkv, T, R)
+        def _repage1(pool, dense):           # (n_steps, 1, Hkv, T, R)
             nl, _, hkv, t, r = dense.shape
             pages = dense[:, 0].reshape(nl, hkv, t // ps, ps, r).transpose(
                 0, 2, 1, 3, 4)
             return pool.at[:, phys].set(pages[:, :n].astype(pool.dtype))
 
-        out = {"prefix": jax.tree.map(repage0, cache["prefix"],
+        out = {"prefix": jax.tree.map(_repage0, cache["prefix"],
                                       slot_cache["prefix"])}
-        out["steps"] = (jax.tree.map(repage1, cache["steps"],
+        out["steps"] = (jax.tree.map(_repage1, cache["steps"],
                                      slot_cache["steps"])
                         if cache["steps"] is not None else None)
         return out
@@ -330,14 +373,14 @@ class ServingEngine:
         (the device half of a copy-on-write fork; the host half
         repoints the writer's block-table row at ``dst``).  Scalar
         src/dst, so this compiles once."""
-        def c0(pool):                       # prefix leaves: (P, ...)
+        def _c0(pool):                       # prefix leaves: (P, ...)
             return copy_page(pool, src, dst)
 
-        def c1(pools):                      # scanned steps: (n_steps, P, ...)
+        def _c1(pools):                      # scanned steps: (n_steps, P, ...)
             return pools.at[:, dst].set(pools[:, src])
 
-        out = {"prefix": jax.tree.map(c0, cache["prefix"])}
-        out["steps"] = (jax.tree.map(c1, cache["steps"])
+        out = {"prefix": jax.tree.map(_c0, cache["prefix"])}
+        out["steps"] = (jax.tree.map(_c1, cache["steps"])
                         if cache["steps"] is not None else None)
         return out
 
@@ -353,7 +396,7 @@ class ServingEngine:
         temp = self.sc.temperature
         eos = self.sc.eos_token
 
-        def decode(cache, tokens, fpos, live):
+        def _decode(cache, tokens, fpos, live):
             kw: Dict[str, Any] = {"block_table": block_table,
                                   "token_mask": live}
             if self.proj is not None:
@@ -361,7 +404,7 @@ class ServingEngine:
             return self.model.decode_step(params, cache, tokens, fpos,
                                           **kw)
 
-        def body(carry, _):
+        def _body(carry, _):
             logits, cache, pos, emitted, done, trunc, rng = carry
             rng, sub = jax.random.split(rng)
             nxt = sample_token(logits, temp, sub).astype(jnp.int32)  # (B,)
@@ -383,16 +426,16 @@ class ServingEngine:
             # touch pages that were recycled to other sequences or that
             # a concurrent chunked prefill is filling)
 
-            def step(ops):
-                lg, new_cache = decode(ops[0], ops[1][:, None], ops[2],
+            def _step(ops):
+                lg, new_cache = _decode(ops[0], ops[1][:, None], ops[2],
                                        ops[3])
                 return lg[:, 0], new_cache
 
-            def skip(ops):
+            def _skip(ops):
                 return logits, ops[0]
 
             new_logits, cache = jax.lax.cond(
-                jnp.any(active), step, skip, (cache, nxt, feed_pos,
+                jnp.any(active), _step, _skip, (cache, nxt, feed_pos,
                                               active))
             pos = jnp.where(active, pos + 1, pos)
             return ((new_logits, cache, pos, emitted, done, trunc, rng),
@@ -400,8 +443,31 @@ class ServingEngine:
 
         carry = (logits, cache, pos, emitted, done, trunc, rng)
         carry, (toks, emits) = jax.lax.scan(
-            body, carry, None, length=self.sc.decode_chunk)
+            _body, carry, None, length=self.sc.decode_chunk)
         return carry, toks, emits
+
+    def _fused_step_impl(self, params, proj, cache, pf_tokens, pf_pos0,
+                         pf_n_valid, pf_row, logits, pos, emitted,
+                         max_new, done, trunc, rng, block_table):
+        """One fused scheduling iteration: a prefill chunk piggybacks
+        on the decode scan in a single device dispatch (sarathi-style,
+        DESIGN.md §scheduler).
+
+        The chunk's pages are written first, then the decode scan runs
+        against the updated pools — safe in either order, because a
+        mid-prefill slot's block-table row exports as the garbage page
+        to the scan, so its masked writes cannot touch the pages the
+        chunk is filling.  Compiles once per prefill bucket shape (the
+        decode half is shape-stable), so the compile bound stays
+        ``len(buckets)`` for this path.  Returns
+        ``(chunk last-valid logits, decode carry, tokens, emit mask)``.
+        """
+        last, cache = self._prefill_chunk_impl(
+            params, proj, cache, pf_tokens, pf_pos0, pf_n_valid, pf_row)
+        carry, toks, emits = self._decode_chunk_impl(
+            params, proj, cache, logits, pos, emitted, max_new, done,
+            trunc, rng, block_table)
+        return last, carry, toks, emits
 
     # -- capacity accounting --------------------------------------------------
 
@@ -425,12 +491,16 @@ class ServingEngine:
         sc = self.sc
         B, T = sc.max_batch, sc.max_seq_len
         # validate before any work: a mid-serve raise would abandon
-        # already-admitted in-flight requests
-        for r in requests:
-            if len(r.prompt) > T:
-                raise ValueError(
-                    f"request {r.rid}: prompt length {len(r.prompt)}"
-                    f" exceeds max_seq_len {T}")
+        # already-admitted in-flight requests.  The budget scheduler
+        # instead fails oversize prompts per-request at admission
+        # (error.kind == "oversize") — one batch member can never
+        # abort the rest (DESIGN.md §scheduler).
+        if not sc.max_num_batched_tokens:
+            for r in requests:
+                if len(r.prompt) > T:
+                    raise ValueError(
+                        f"request {r.rid}: prompt length {len(r.prompt)}"
+                        f" exceeds max_seq_len {T}")
         self._pending: List[Request] = list(requests)
         self._all_requests: List[Request] = list(requests)
         # fault injection (DESIGN.md §robustness): an injector passed
@@ -503,6 +573,10 @@ class ServingEngine:
         self.n_reclaimed = 0       # index entries dropped under pressure
         self.n_prefill_chunks = 0
         self.peak_used_pages = 0
+        # token-budget scheduler bookkeeping (DESIGN.md §scheduler)
+        self.budget_log: List[Dict[str, Any]] = []
+        self.n_fused_steps = 0         # prefill chunk rode the decode scan
+        self.n_truncated_chunks = 0    # chunks cut at the residual budget
         self._logits = jnp.zeros((B, self.cfg.vocab_size), jnp.float32)
         self._pos = jnp.zeros((B,), jnp.int32)
         self._emitted = jnp.zeros((B,), jnp.int32)
@@ -518,6 +592,11 @@ class ServingEngine:
         # (None = slot empty or fully prefilled)
         self._prefilled: List[Optional[int]] = [None] * B
         self._pf_next = 0          # round-robin cursor over prefill slots
+        # budget scheduler only: while set, _activate defers into this
+        # queue instead of arming the slot (see _step_inner_budget —
+        # a slot armed between the live-mask snapshot and the decode
+        # scan would decode against a garbage block-table row)
+        self._activation_queue: Optional[List[tuple]] = None
         self._started = True
 
     def _busy(self) -> bool:
@@ -750,7 +829,18 @@ class ServingEngine:
         return False
 
     def _activate(self, b: int, r: Request, last_logits) -> None:
-        """Arm slot ``b`` for decode once its prompt cache is in place."""
+        """Arm slot ``b`` for decode once its prompt cache is in place.
+
+        Under the token-budget scheduler the call may be *deferred*:
+        between the step's live-mask snapshot and its decode scan, a
+        newly completed slot must stay ``done`` (its block-table row
+        exports as garbage to the scan — arming it early would decode
+        it into the void and silently burn its budget), so the
+        activation lands after the scan and the slot joins decode next
+        step, where it is charged like any other decoding slot."""
+        if self._activation_queue is not None:
+            self._activation_queue.append((b, r, np.asarray(last_logits)))
+            return
         self._logits = self._logits.at[b].set(last_logits)
         self._pos = self._pos.at[b].set(len(self._slot_prompt[b]))
         self._emitted = self._emitted.at[b].set(0)
@@ -873,6 +963,17 @@ class ServingEngine:
                 r.done = True
                 self._pending.pop(i)
                 continue
+            if (sc.max_num_batched_tokens
+                    and len(r.prompt) > sc.max_seq_len):
+                # budget scheduler: an over-long prompt is a structured
+                # per-request failure here, not a start()-time abort —
+                # the page-pool check below cannot catch it because the
+                # worst-case footprint is capped at max_seq_len
+                self._fail_request(
+                    r, "oversize",
+                    f"prompt length {len(r.prompt)} exceeds "
+                    f"max_seq_len {sc.max_seq_len}")
+                continue
             if sc.paged:
                 worst = self._worst_case_pages(r)
                 if worst > self.pool.n_pages:
@@ -892,8 +993,11 @@ class ServingEngine:
             return self._pending.pop(i)
         return None
 
-    def _admit(self) -> None:
-        """Fill free slots from the pending queue.
+    def _admit(self, limit: Optional[int] = None) -> int:
+        """Fill free slots from the pending queue; returns how many
+        requests were admitted.  ``limit`` caps the count (the budget
+        scheduler admits only while total occupancy stays within the
+        per-step token budget; None = every free slot).
 
         Exact-length path: prefill the whole (effective) prompt now
         (one compile per distinct length) and insert.  Chunked path:
@@ -906,7 +1010,14 @@ class ServingEngine:
         entirely.  Swap victims skip both match and prefill: their
         saved pages are restored byte-exact into private pages."""
         sc = self.sc
+
+        def _occupied() -> int:
+            return sum(q is not None for q in self._slot_req)
+
+        occ0 = _occupied()
         for b in range(sc.max_batch):
+            if limit is not None and _occupied() - occ0 >= limit:
+                break
             if self._slot_req[b] is not None:
                 continue
             r = self._next_admissible()
@@ -1023,6 +1134,96 @@ class ServingEngine:
                 self._cache = self._insert(self._cache, slot_cache,
                                            np.int32(b))
             self._activate(b, r, plogits[0, -1])
+        return _occupied() - occ0
+
+    def _prep_chunk(self, b: int, cap: Optional[int] = None):
+        """Stage slot ``b``'s next prefill chunk host-side: late-bind
+        shared chunks, copy-on-write fork any shared page the chunk
+        will write, size the chunk (``cap`` truncates it to the
+        residual token budget, sarathi-style) and pad it to its
+        bucket.  Returns ``(b, r, start, n, bucket, toks)`` ready for
+        dispatch, or None when the slot needs no chunk this pass
+        (empty / fully late-matched / fault-delayed / preempted at
+        fork / failed at bucketing)."""
+        sc = self.sc
+        if self._prefilled[b] is None:
+            return None
+        if self._late_match(b):
+            return None                      # whole prompt mapped in
+        if self._fires("prefill_delay"):
+            return None  # injected slow prefill: chunk runs later
+        r = self._slot_req[b]
+        prompt = self._slot_prompt[b]
+        start = self._prefilled[b]
+        n = min(sc.prefill_chunk, len(prompt) - start)
+        if cap is not None and n > cap:
+            n = cap                          # residual-budget truncation
+            self.n_truncated_chunks += 1
+        try:
+            # a chunk starting inside a shared page (the first
+            # unshared token of a partially-matched prefix) must
+            # fork it before writing (DESIGN.md §prefix-sharing)
+            for j in self._fork_candidates(b, start, start + n):
+                self._cow_fork(b, j)
+        except PagePoolExhausted:
+            # optimistic admission may find the pool dry at fork
+            # time (another slot's growth won the race): preempt
+            # this slot; it requeues and retries when pages free
+            self._preempt(b)
+            return None
+        try:
+            bucket = sc.bucket_for(n)
+        except ValueError as e:
+            # a chunk no bucket holds can never prefill: structured
+            # per-request failure, not an engine abort (the scheduler
+            # sizes chunks within (0, prefill_chunk], so this is
+            # defense in depth against config/bucket drift)
+            self._fail_request(r, "oversize", str(e))
+            return None
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :n] = prompt[start: start + n]
+        return b, r, start, n, bucket, toks
+
+    def _finish_chunk(self, b: int, r: Request, start: int, n: int,
+                      bucket: int, last) -> None:
+        """Host-side bookkeeping after a staged chunk's device call
+        landed (standalone or fused): advance the prefill cursor,
+        count watchdog progress, index completed pages, and activate
+        the slot for decode when the prompt is fully written."""
+        prompt = self._slot_prompt[b]
+        self.prefill_chunk_shapes.add(bucket)
+        self.n_prefill_chunks += 1
+        self._prefilled[b] = start + n
+        # watchdog progress is the per-request prefill *high
+        # watermark*: re-prefilling after a preemption is thrash,
+        # not progress, so only new ground counts
+        if start + n > self._pf_best.get(id(r), 0):
+            self._pf_best[id(r)] = start + n
+            self._progress = True
+        if self._pindex is not None:
+            # chunks whose pages are now complete become shareable
+            ps = self.sc.page_size
+            while self._indexed_upto[b] + ps <= self._prefilled[b]:
+                j = self._indexed_upto[b] // ps
+                key = PrefixIndex.child_key(
+                    self._chain_key[b], prompt[j * ps: (j + 1) * ps])
+                self._pindex.insert(key, int(self._btabs.rows[b, j]),
+                                    ps, self.pool)
+                self._chain_key[b] = key
+                self._indexed_upto[b] += ps
+        if self._prefilled[b] == len(prompt):
+            self._prefilled[b] = None        # complete: join decode
+            self._activate(b, r, last[0])
+
+    def _dispatch_chunk(self, prep) -> None:
+        """Run one staged chunk as its own device call."""
+        b, r, start, n, bucket, toks = prep
+        last, self._cache = self._prefill_chunk(
+            self.params, self.proj, self._cache, jnp.asarray(toks),
+            jnp.asarray([start], jnp.int32),
+            jnp.asarray([n], jnp.int32),
+            jnp.asarray(self._btabs.rows[b: b + 1]))
+        self._finish_chunk(b, r, start, n, bucket, last)
 
     def _prefill_step(self, budget: Optional[int] = None) -> int:
         """Advance in-flight chunked prefills by up to ``budget``
@@ -1031,7 +1232,10 @@ class ServingEngine:
         Each chunk is padded to its bucket and written straight into
         the slot's pages; the slot joins decode when the last chunk
         lands.  Returns the unspent budget, so the post-harvest refill
-        pass shares one per-step bound instead of doubling it."""
+        pass shares one per-step bound instead of doubling it.  (The
+        token-budget scheduler does not use this: it stages chunks
+        against the step's residual token budget in
+        ``_step_inner_budget`` instead.)"""
         sc = self.sc
         B = sc.max_batch
         if budget is None:
@@ -1040,60 +1244,11 @@ class ServingEngine:
             if budget == 0:
                 break
             b = (self._pf_next + off) % B
-            if self._prefilled[b] is None:
+            prep = self._prep_chunk(b)
+            if prep is None:
                 continue
-            if self._late_match(b):
-                continue                     # whole prompt mapped in
-            if self._fires("prefill_delay"):
-                continue   # injected slow prefill: chunk runs later
-            r = self._slot_req[b]
-            prompt = self._slot_prompt[b]
-            start = self._prefilled[b]
-            n = min(sc.prefill_chunk, len(prompt) - start)
-            try:
-                # a chunk starting inside a shared page (the first
-                # unshared token of a partially-matched prefix) must
-                # fork it before writing (DESIGN.md §prefix-sharing)
-                for j in self._fork_candidates(b, start, start + n):
-                    self._cow_fork(b, j)
-            except PagePoolExhausted:
-                # optimistic admission may find the pool dry at fork
-                # time (another slot's growth won the race): preempt
-                # this slot; it requeues and retries when pages free
-                self._preempt(b)
-                continue
-            bucket = sc.bucket_for(n)
-            toks = np.zeros((1, bucket), np.int32)
-            toks[0, :n] = prompt[start: start + n]
-            last, self._cache = self._prefill_chunk(
-                self.params, self.proj, self._cache, jnp.asarray(toks),
-                jnp.asarray([start], jnp.int32),
-                jnp.asarray([n], jnp.int32),
-                jnp.asarray(self._btabs.rows[b: b + 1]))
-            self.prefill_chunk_shapes.add(bucket)
-            self.n_prefill_chunks += 1
-            self._prefilled[b] = start + n
-            # watchdog progress is the per-request prefill *high
-            # watermark*: re-prefilling after a preemption is thrash,
-            # not progress, so only new ground counts
-            if start + n > self._pf_best.get(id(r), 0):
-                self._pf_best[id(r)] = start + n
-                self._progress = True
+            self._dispatch_chunk(prep)
             budget -= 1
-            if self._pindex is not None:
-                # chunks whose pages are now complete become shareable
-                ps = sc.page_size
-                while self._indexed_upto[b] + ps <= self._prefilled[b]:
-                    j = self._indexed_upto[b] // ps
-                    key = PrefixIndex.child_key(
-                        self._chain_key[b], prompt[j * ps: (j + 1) * ps])
-                    self._pindex.insert(key, int(self._btabs.rows[b, j]),
-                                        ps, self.pool)
-                    self._chain_key[b] = key
-                    self._indexed_upto[b] += ps
-            if self._prefilled[b] == len(prompt):
-                self._prefilled[b] = None    # complete: join decode
-                self._activate(b, r, last[0])
         self._pf_next = (self._pf_next + 1) % B
         return budget
 
@@ -1104,15 +1259,15 @@ class ServingEngine:
         layer to host RAM (before its pages are released)."""
         row = self._btabs.rows[b].copy()
 
-        def out0(pool):                     # prefix leaves: (P, ...)
+        def _out0(pool):                     # prefix leaves: (P, ...)
             return swap_out(pool, row, n_tokens)
 
-        def out1(pools):                    # scanned steps: (n_steps, P, ...)
+        def _out1(pools):                    # scanned steps: (n_steps, P, ...)
             return np.stack([swap_out(pools[i], row, n_tokens)
                              for i in range(pools.shape[0])])
 
-        bufs = {"prefix": jax.tree.map(out0, self._cache["prefix"])}
-        bufs["steps"] = (jax.tree.map(out1, self._cache["steps"])
+        bufs = {"prefix": jax.tree.map(_out0, self._cache["prefix"])}
+        bufs["steps"] = (jax.tree.map(_out1, self._cache["steps"])
                          if self._cache["steps"] is not None else None)
         return bufs
 
@@ -1121,16 +1276,16 @@ class ServingEngine:
         block-table row — byte-exact, so generations resume unchanged."""
         row = self._btabs.rows[b].copy()
 
-        def in0(pool, vals):
+        def _in0(pool, vals):
             return swap_in(pool, row, vals)
 
-        def in1(pools, vals):
+        def _in1(pools, vals):
             return jnp.stack([swap_in(pools[i], row, vals[i])
                               for i in range(pools.shape[0])])
 
-        cache = {"prefix": jax.tree.map(in0, self._cache["prefix"],
+        cache = {"prefix": jax.tree.map(_in0, self._cache["prefix"],
                                         bufs["prefix"])}
-        cache["steps"] = (jax.tree.map(in1, self._cache["steps"],
+        cache["steps"] = (jax.tree.map(_in1, self._cache["steps"],
                                        bufs["steps"])
                           if self._cache["steps"] is not None else None)
         self._cache = cache
@@ -1317,6 +1472,8 @@ class ServingEngine:
 
     def _step_inner(self) -> bool:
         sc = self.sc
+        if sc.max_num_batched_tokens:
+            return self._step_inner_budget()
         B = sc.max_batch
         self._admit()
         if sc.paged:
@@ -1351,6 +1508,22 @@ class ServingEngine:
             self.rng, btab_dev)
         (self._logits, self._cache, self._pos, self._emitted, self._done,
          self._trunc, self.rng) = carry
+        freed = self._harvest(live, toks, emits)
+        if freed and self._pending:
+            # refill the freed slots now: the next request prefills in
+            # this very step instead of sitting idle for one chunk
+            # (within the step's remaining prefill-chunk budget)
+            self._admit()
+            if sc.chunked_prefill and pf_budget:
+                self._prefill_step(pf_budget)
+        return self._busy()
+
+    def _harvest(self, live: np.ndarray, toks, emits) -> bool:
+        """Collect one decode chunk's outcomes host-side: append the
+        emitted tokens to their requests, quarantine non-finite slots,
+        and release slots whose request finished.  Returns whether any
+        slot was freed (the same-step refill trigger)."""
+        sc = self.sc
         toks_np = np.asarray(toks)            # (N, B)
         emits_np = np.array(emits)            # writable: quarantine
                                               # masks poisoned slots
@@ -1366,7 +1539,7 @@ class ServingEngine:
         done_np = np.asarray(self._done)
         trunc_np = np.asarray(self._trunc)
         freed = False
-        for b in range(B):
+        for b in range(sc.max_batch):
             if not live[b]:
                 continue
             r = self._slot_req[b]
@@ -1381,13 +1554,118 @@ class ServingEngine:
                 self._pf_best.pop(id(r), None)
                 self.n_completed += 1
                 freed = True
+        return freed
+
+    def _step_inner_budget(self) -> bool:
+        """One token-budget scheduling iteration (DESIGN.md §scheduler,
+        ``ServeConfig.max_num_batched_tokens > 0``).
+
+        The step builds a single token budget and spends it in a fixed
+        order: (1) every decodable slot charges one token (they were
+        admitted in earlier steps and cannot be deferred without
+        stalling their streams); (2) admission fills free slots only
+        while total occupancy stays within the budget, since every
+        occupied slot is a future per-step decode charge; (3) prefill
+        chunks fill the residual round-robin, the last chunk truncated
+        to whatever remains (sarathi-style) instead of skipping the
+        step.  One staged chunk then *fuses* into the decode dispatch
+        (``_fused_step``) so the prompt rides the decode batch's
+        memory-bound iteration; any further staged chunks (and all
+        chunks on steps with nothing decoding) dispatch standalone.
+        Per-step device work is thereby bounded by
+        ``max_num_batched_tokens`` whatever the prefill:decode mix —
+        the legacy path's cost instead grows with
+        ``prefill_chunks_per_step`` full chunks on top of the scan."""
+        sc = self.sc
+        B = sc.max_batch
+        budget = sc.max_num_batched_tokens
+        # (1) decode charges first
+        live = np.array([self._slot_req[b] is not None
+                         and self._prefilled[b] is None
+                         for b in range(B)])
+        if live.any():
+            # may preempt LIFO victims (optimistic admission) when the
+            # chunk's growth would exhaust the pool — mutates ``live``
+            self._ensure_chunk_headroom(live)
+        n_decode = int(live.sum())
+        residual = max(budget - n_decode, 0)
+        # slots completing from here to the scan (chunk landed, late
+        # prefix match, swap-in restore) defer their activation: the
+        # scan must not decode a slot the live mask snapshotted as
+        # non-decodable (its row exports as garbage)
+        self._activation_queue = queue = []
+        # (2) admission under the same budget
+        n_occ = sum(q is not None for q in self._slot_req)
+        n_admitted = self._admit(limit=max(budget - n_occ, 0))
+        self.peak_used_pages = max(self.peak_used_pages,
+                                   self.pool.used_count)
+        # (3) prefill chunks fill the residual
+        chunks: List[tuple] = []
+        spent_pf = 0
+        for off in range(B):
+            if residual - spent_pf <= 0:
+                break
+            prep = self._prep_chunk((self._pf_next + off) % B,
+                                    cap=residual - spent_pf)
+            if prep is None:
+                continue
+            chunks.append(prep)
+            spent_pf += prep[3]
+        self._pf_next = (self._pf_next + 1) % B
+        fused = chunks.pop(0) if (live.any() and chunks) else None
+        for prep in chunks:
+            self._dispatch_chunk(prep)
+        freed = False
+        if live.any():
+            # mid-prefill / evicted rows export as garbage so the
+            # scan's masked writes cannot touch pages a prefill is
+            # filling or that were recycled — which is also what makes
+            # fusing the chunk into the same dispatch safe
+            btab_dev = self._btabs.device(live=live)
+            self.peak_used_pages = max(self.peak_used_pages,
+                                       self.pool.used_count)
+            if fused is not None:
+                fb, fr, fstart, fn, fbucket, ftoks = fused
+                last, carry, toks, emits = self._fused_step(
+                    self.params, self.proj, self._cache,
+                    jnp.asarray(ftoks),
+                    jnp.asarray([fstart], jnp.int32),
+                    jnp.asarray([fn], jnp.int32),
+                    jnp.asarray(self._btabs.rows[fb: fb + 1]),
+                    self._logits, self._pos, self._emitted,
+                    self._max_new, self._done, self._trunc, self.rng,
+                    btab_dev)
+                (self._logits, self._cache, self._pos, self._emitted,
+                 self._done, self._trunc, self.rng) = carry
+                # after the carry unpack: activation must overwrite
+                # the stale decode logits for the finishing slot
+                self._finish_chunk(fb, fr, fstart, fn, fbucket, last)
+                self.n_fused_steps += 1
+            else:
+                carry, toks, emits = self._decode_chunk(
+                    self.params, self.proj, self._cache, self._logits,
+                    self._pos, self._emitted, self._max_new,
+                    self._done, self._trunc, self.rng, btab_dev)
+                (self._logits, self._cache, self._pos, self._emitted,
+                 self._done, self._trunc, self.rng) = carry
+            freed = self._harvest(live, toks, emits)
+        # flush deferred activations: the armed slots join decode next
+        # step (and are charged there); a slot unwound since queueing
+        # (failed / preempted mid-step) is skipped
+        self._activation_queue = None
+        for qb, qr, qlog in queue:
+            if self._slot_req[qb] is qr:
+                self._activate(qb, qr, jnp.asarray(qlog))
+        self.budget_log.append({
+            "step": self._step_count, "budget": budget,
+            "n_decode": n_decode, "prefill_tokens": spent_pf,
+            "admitted": n_admitted, "fused": fused is not None})
         if freed and self._pending:
-            # refill the freed slots now: the next request prefills in
-            # this very step instead of sitting idle for one chunk
-            # (within the step's remaining prefill-chunk budget)
-            self._admit()
-            if sc.chunked_prefill and pf_budget:
-                self._prefill_step(pf_budget)
+            # same-step refill under the same occupancy cap; the new
+            # request's prefill starts next step (this step's residual
+            # is already spent)
+            n_occ = sum(q is not None for q in self._slot_req)
+            self._admit(limit=max(budget - n_occ, 0))
         return self._busy()
 
     def generate(self, requests: List[Request]) -> List[Request]:

@@ -133,6 +133,9 @@ class FaultInjector:
     def add(self, point: str, nth: Optional[int] = None,
             prob: Optional[float] = None,
             times: Optional[int] = 1) -> "FaultInjector":
+        """Arm fault ``point``: fire on its ``nth`` hit and/or with
+        per-hit probability ``prob``, at most ``times`` times (None =
+        unlimited).  Chainable."""
         spec = FaultSpec(point, nth=nth, prob=prob, times=times)
         self._specs.setdefault(spec.point, []).append(spec)
         return self                              # chainable

@@ -86,10 +86,12 @@ class PagePool:
 
     @property
     def free_count(self) -> int:
+        """Pages currently on the free list."""
         return len(self._free)
 
     @property
     def used_count(self) -> int:
+        """Pages currently allocated (including shared/pinned ones)."""
         return self.n_pages - len(self._free)
 
     def ref(self, page: int) -> int:
@@ -405,13 +407,19 @@ def append_chunk(pool: jnp.ndarray, block_table: jnp.ndarray,
     position of each sequence's first chunk token; vals: (B, Hkv, S, R)
     chunk entries; valid: (B, S) bool — bucket-padding entries (False)
     are routed to the garbage page, so padded chunk tails can never
-    touch a real page (DESIGN.md §prefill).  Positions past the block
-    table's logical capacity are clamped before the dereference; only
-    padding can reach them, so the clamped rows are garbage-routed
-    anyway.
+    touch a real page (DESIGN.md §prefill).  ``valid`` may instead be a
+    (B,) int count of real tokens per row — the budget-truncated form
+    (DESIGN.md §scheduler): a chunk cut at the residual token budget
+    passes how many leading entries are real and the mask is derived
+    here, since truncation always keeps a contiguous prefix.  Positions
+    past the block table's logical capacity are clamped before the
+    dereference; only padding can reach them, so the clamped rows are
+    garbage-routed anyway.
     """
     ps = pool.shape[2]
     B, Hkv, S, R = vals.shape
+    if valid.ndim == 1:                 # per-row count -> prefix mask
+        valid = jnp.arange(S)[None, :] < valid[:, None]
     n_pages = block_table.shape[1]
     pos = pos0[:, None] + jnp.arange(S)[None, :]            # (B, S)
     logical = jnp.minimum(pos // ps, n_pages - 1)

@@ -19,8 +19,12 @@ from repro.config import ServeConfig
 # copy-on-write (refcounted pages + prefix index); paged-chaos layers
 # a seeded FaultInjector (recoverable points only — greedy outputs
 # stay token-for-token intact) plus per-step invariant auditing on top
-# of the full optimistic+swap+sharing stack; the default (dense) keeps
-# the exact-length parity oracle.
+# of the full optimistic+swap+sharing stack; paged-budget runs that
+# same chaos stack through the token-budget scheduler
+# (ServeConfig.max_num_batched_tokens, DESIGN.md §scheduler) so every
+# serving test exercises fused prefill+decode iterations and
+# residual-budget chunk truncation; the default (dense) keeps the
+# exact-length parity oracle.
 ENGINE = os.environ.get("REPRO_ENGINE", "dense")
 
 
@@ -44,25 +48,34 @@ def serve_config(**kw) -> ServeConfig:
     with a seeded chaos FaultInjector (ServeConfig.chaos_seed; the
     default schedule arms only recoverable fault points, so every
     greedy parity assertion still holds bit-for-bit) and
-    invariants.audit after every step (audit=True)."""
+    invariants.audit after every step (audit=True).
+    REPRO_ENGINE=paged-budget keeps that whole chaos stack and
+    additionally turns on the token-budget scheduler with a small
+    per-step budget, so decode charges, residual-truncated prefill
+    chunks, and fused iterations all fire under every serving test —
+    greedy outputs still must match the dense leg token-for-token."""
     if ENGINE in ("paged", "paged-preempt", "paged-prefix",
-                  "paged-chaos"):
+                  "paged-chaos", "paged-budget"):
         kw.setdefault("paged", True)
         kw.setdefault("page_size", 4)
         kw.setdefault("chunked_prefill", True)
         kw.setdefault("prefill_chunk", 8)
-    if ENGINE in ("paged-preempt", "paged-chaos"):
+    if ENGINE in ("paged-preempt", "paged-chaos", "paged-budget"):
         T = kw.get("max_seq_len", 4096)
         kw.setdefault("n_pages", max(2, T // kw["page_size"]))
         kw.setdefault("admission", "optimistic")
         kw.setdefault("watermark_low", 0.1)
     if ENGINE == "paged-prefix":
         kw.setdefault("share_prefix", True)
-    if ENGINE == "paged-chaos":
+    if ENGINE in ("paged-chaos", "paged-budget"):
         kw.setdefault("share_prefix", True)
         kw.setdefault("preempt_mode", "swap")
         kw.setdefault("chaos_seed", 0)
         kw.setdefault("audit", True)
+    if ENGINE == "paged-budget":
+        # small enough that residual truncation and budget-capped
+        # admission actually happen under the tests' max_batch=4
+        kw.setdefault("max_num_batched_tokens", 6)
     return ServeConfig(**kw)
 
 

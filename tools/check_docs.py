@@ -1,0 +1,84 @@
+"""Docs drift guard (CI `docs` job; no third-party deps).
+
+Two checks, exit 1 on any failure:
+
+* every relative markdown link in ``docs/*.md`` (and the root
+  ``README.md``-style docs it links to) resolves to a real file —
+  external ``http(s)``/``mailto`` targets and pure in-page ``#anchors``
+  are skipped;
+* every ``ServeConfig`` dataclass field is mentioned in
+  ``docs/SERVING.md``, so adding a serving knob without documenting it
+  for operators fails CI (``repro.config`` is pure dataclasses and
+  imports without jax).
+
+Run locally:  PYTHONPATH=src python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+DOCS = REPO / "docs"
+SERVING_MD = DOCS / "SERVING.md"
+
+# [text](target) — markdown inline links; images share the syntax bar
+# the leading "!" and resolve the same way
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+# fenced code blocks must not contribute false links
+FENCE_RE = re.compile(r"```.*?```", re.S)
+
+
+def iter_links(md: pathlib.Path):
+    text = FENCE_RE.sub("", md.read_text())
+    for m in LINK_RE.finditer(text):
+        yield m.group(1)
+
+
+def check_links() -> list[str]:
+    errors = []
+    for md in sorted(DOCS.glob("*.md")):
+        for target in iter_links(md):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path, _, _frag = target.partition("#")
+            if not path:                     # pure in-page anchor
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(REPO)}: broken link "
+                              f"-> {target}")
+    return errors
+
+
+def check_serve_config_fields() -> list[str]:
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.config import ServeConfig
+    if not SERVING_MD.exists():
+        return [f"{SERVING_MD.relative_to(REPO)} is missing"]
+    text = SERVING_MD.read_text()
+    errors = []
+    for f in dataclasses.fields(ServeConfig):
+        if f.name not in text:
+            errors.append(f"docs/SERVING.md: ServeConfig field "
+                          f"{f.name!r} is undocumented")
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + check_serve_config_fields()
+    for e in errors:
+        print(f"check_docs: {e}")
+    if errors:
+        print(f"check_docs: FAIL ({len(errors)} problem(s))")
+        return 1
+    n_docs = len(list(DOCS.glob('*.md')))
+    print(f"check_docs: OK ({n_docs} doc(s), all links resolve, "
+          f"ServeConfig fully documented)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
