@@ -37,7 +37,7 @@ REGRESSION_RATIO_THRESHOLD ?= 2.0
 FMT_PATHS := benchmarks/check_regression.py \
              tests/test_check_regression.py
 
-.PHONY: verify test lint check-regression bench-quick bench chaos
+.PHONY: verify test lint check-regression bench-quick bench chaos longctx
 
 # bench-quick rewrites BENCH_decode.json, so it must run after the
 # regression gate has read the committed baseline — the recipe (not a
@@ -53,6 +53,12 @@ test:
 # invariant auditing (tests/conftest.py maps REPRO_ENGINE)
 chaos:
 	REPRO_ENGINE=paged-chaos $(PY) -m pytest -x -q
+
+# the paged-longctx CI leg, runnable locally: the whole suite against
+# the paged stack with split-KV flash-decoding (decode_splits=3 —
+# greedy outputs must match the splits=1 legs)
+longctx:
+	REPRO_ENGINE=paged-longctx $(PY) -m pytest -x -q
 
 lint:
 	@if command -v ruff >/dev/null 2>&1; then \

@@ -103,10 +103,17 @@ RATIO_PAIRS = (
     # refcount bookkeeping regressions on the admission hot path;
     # engine-drain timings, so 2x-widened like the preempt pairs
     ("decode_shared_prefix", "decode_reserve", 2.0),
-    # per-step invariant auditing (DESIGN.md §robustness) vs the same
-    # un-audited drain: gates the audit's host-side cross-check cost;
+    # sampled invariant auditing (DESIGN.md §robustness,
+    # ServeConfig.audit_every) vs the same un-audited drain: gates the
+    # audit's host-side cross-check cost at the benched sampling rate;
     # engine-drain timings, so 2x-widened like the other drain pairs
     ("decode_audit_on", "decode_reserve", 2.0),
+    # split-KV flash-decoding on one long page chain vs the unsplit
+    # kernel (DESIGN.md §split-kv): the split variant must never cost
+    # more than the serial chain it parallelizes (baseline quotient
+    # <= 1.0; the TPU win is grid parallelism — interpret mode only
+    # bounds the combine-pass overhead)
+    ("decode_longctx_split", "decode_longctx"),
 )
 
 

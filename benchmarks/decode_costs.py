@@ -16,6 +16,10 @@ oracle and the piggybacked prefill+decode step (DESIGN.md §prefill);
 jitted dispatch — the token-budget scheduler's fused iteration
 (DESIGN.md §scheduler) — so its quotient against ``decode_mixed_step``
 gates the launch-overhead saving of fusing.
+The ``decode_longctx`` / ``decode_longctx_split`` rows price one
+long page chain decoded through a single program chain vs the
+split-KV flash-decoding variant (partial (out, LSE) spans merged by a
+log-sum-exp combine, DESIGN.md §split-kv).
 The ``decode_reserve`` / ``decode_preempt_*`` rows are an *engine*
 scenario: the same oversubscribed request batch (total pool pages <
 sum of the requests' worst cases) served end-to-end under reserve
@@ -38,7 +42,8 @@ import numpy as np
 
 from benchmarks.common import Row, timed
 from repro.core.compressed import cache_footprint
-from repro.kernels.kq_decode import (kq_decode_attention_op,
+from repro.kernels.kq_decode import (default_decode_splits,
+                                     kq_decode_attention_op,
                                      kq_decode_paged_attention_op,
                                      kq_prefill_paged_attention_op)
 from repro.models.attention import (decode_attention,
@@ -161,6 +166,38 @@ def run(B: int = 4, Hkv: int = 8, m: int = 8, T: int = 4096,
         print(f"paged[{tag}]: max_len={L} pages={occupied}/"
               f"{Bv * pages_per_seq} {us:.0f}us "
               f"hbm={occupied * page_bytes}B (dense {dense_hbm}B)")
+
+    # -- split-KV flash-decoding at long context (DESIGN.md §split-kv):
+    # ONE slot owning every pool page — the scenario where the unsplit
+    # kernel serializes the whole chain through a single program chain
+    # while the rest of the grid idles.  The split variant cuts the
+    # chain into ``default_decode_splits`` spans along a parallel grid
+    # axis; the ``decode_longctx_split/decode_longctx`` quotient gates
+    # it (<= 1.0x; the win is grid parallelism on real TPU — in CPU
+    # interpret mode the program count is equal, so the quotient sits
+    # near 1).
+    n_long = Bv * pages_per_seq
+    L_long = n_long * ps
+    btab_l = jnp.asarray(perm[:n_long][None, :])
+    lens_l = jnp.asarray([L_long], jnp.int32)
+    q_l = qc2[:1]
+    n_split = default_decode_splits(L_long, ps)
+    span = -(-n_long // n_split)
+    _, us_long = timed(kq_decode_paged_attention_op, q_l, kp, vp,
+                       lens_l, btab_l, reps=5, scale=scale,
+                       max_len=L_long)
+    _, us_split = timed(kq_decode_paged_attention_op, q_l, kp, vp,
+                        lens_l, btab_l, reps=5, scale=scale,
+                        max_len=L_long, num_splits=n_split)
+    rows.append(("decode_longctx", us_long,
+                 f"length={L_long};pages={n_long};page_size={ps};"
+                 f"num_splits=1"))
+    rows.append(("decode_longctx_split", us_split,
+                 f"length={L_long};pages={n_long};page_size={ps};"
+                 f"num_splits={n_split};span_pages={span}"))
+    print(f"longctx: L={L_long} pages={n_long} unsplit {us_long:.0f}us "
+          f"vs split[{n_split}] {us_split:.0f}us "
+          f"({us_long/us_split:.2f}x)")
 
     # -- chunked prefill into pages (DESIGN.md §prefill): time-to-first-
     # token through bucket-compiled chunk writes vs the exact-length
@@ -306,10 +343,15 @@ def _preemption_rows() -> List[Row]:
         "decode_preempt_swap": ServeConfig(
             **base, n_pages=n_small, admission="optimistic",
             preempt_mode="swap"),
-        # per-step invariant auditing (DESIGN.md §robustness): same
+        # sampled invariant auditing (DESIGN.md §robustness): same
         # ample-pool drain as decode_reserve, so the quotient against
-        # it prices the audit's host-side cross-checks alone
-        "decode_audit_on": ServeConfig(**base, audit=True),
+        # it prices the audit's host-side cross-checks alone.  The
+        # audit walks every page/slot structure, so auditing every
+        # step scales with pool size; audit_every=4 bounds that to a
+        # quarter of the steps (the n_audits/steps derived fields
+        # document the sampling)
+        "decode_audit_on": ServeConfig(**base, audit=True,
+                                       audit_every=4),
     }
     rows: List[Row] = []
     print("\n== decode_costs: oversubscribed-pool admission scenario ==")
@@ -322,11 +364,16 @@ def _preemption_rows() -> List[Row]:
         served, us = timed(lambda e=eng: e.generate(mk_reqs()), reps=3,
                            budget_s=1.5)
         assert all(r.done and not r.failed for r in served)
+        extra = ""
+        if sc.audit:
+            extra = (f";audit_every={sc.audit_every}"
+                     f";audits={eng.n_audits}"
+                     f";steps={eng._step_count}")
         rows.append((name, us,
                      f"pool_pages={sc.total_pages};"
                      f"worst_case_pages={oversub};"
                      f"preemptions={eng.n_preempted};"
-                     f"swaps={eng.n_swapped_out}"))
+                     f"swaps={eng.n_swapped_out}" + extra))
         print(f"{name}: {us:.0f}us pool={sc.total_pages} "
               f"(worst {oversub}) preemptions={eng.n_preempted} "
               f"swaps={eng.n_swapped_out}")

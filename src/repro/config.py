@@ -454,12 +454,24 @@ class ServeConfig:
     # recomputing the victim's cache from its effective prompt; False =
     # fail the request terminally with error.kind == "swap_failed"
     swap_fallback: bool = True
+    # run the invariants.audit pass every Nth step() (1 = every step,
+    # the parity default).  The audit walks every page/slot structure,
+    # so its cost scales with pool size; sampling keeps chaos-leg
+    # coverage while bounding per-step overhead.  Only meaningful with
+    # audit=True.
+    audit_every: int = 1
     # chaos mode: build FaultInjector.chaos(chaos_seed, chaos_rate) at
     # every start() — all recoverable fault points armed with an
     # unlimited per-hit Bernoulli at chaos_rate.  None = no injection.
     # An injector passed to the engine constructor wins over this.
     chaos_seed: Optional[int] = None
     chaos_rate: float = 0.05
+    # split-KV flash-decoding fan-out for the paged decode attention
+    # read (DESIGN.md §split-kv): 1 = the unsplit kernel (parity
+    # oracle); >1 cuts each slot's KV range into that many spans with
+    # a log-sum-exp combine; 0 = derive from max_seq_len/page_size via
+    # kernels.kq_decode.default_decode_splits.  Requires paged=True.
+    decode_splits: int = 1
 
     def __post_init__(self) -> None:
         if self.admission not in ("reserve", "optimistic"):
@@ -526,6 +538,18 @@ class ServeConfig:
                 "max_num_batched_tokens schedules prefill at chunk "
                 "granularity (truncating the last chunk to the residual "
                 "budget) and requires chunked_prefill=True")
+        if self.audit_every < 1:
+            raise ValueError(
+                "audit_every must be >= 1 (1 audits every step)")
+        if self.decode_splits < 0:
+            raise ValueError(
+                "decode_splits must be >= 0 (0 derives the heuristic, "
+                "1 is the unsplit kernel)")
+        if self.decode_splits != 1 and not self.paged:
+            raise ValueError(
+                "decode_splits splits the paged decode kernel's page "
+                "chain and requires paged=True (the dense path has no "
+                "page chain to split)")
 
     @property
     def buckets(self) -> Tuple[int, ...]:

@@ -1,3 +1,4 @@
+"""Flash attention kernel package: jit'd op + pure-jnp oracle."""
 from repro.kernels.flash.ops import flash_attention_op
 from repro.kernels.flash.ref import flash_attention_ref
 

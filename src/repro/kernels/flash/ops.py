@@ -17,6 +17,7 @@ from repro.kernels.flash.flash import flash_attention
                                              "block_k", "interpret"))
 def flash_attention_op(q, k, v, *, causal=True, window=0, block_q=512,
                        block_k=512, interpret=None):
+    """jit'd flash attention (``flash_attention``); q/k/v (B,H,T,d)."""
     if interpret is None:
         interpret = default_interpret()
     return flash_attention(q, k, v, causal=causal, window=window,

@@ -5,5 +5,6 @@ from repro.models.attention import reference_attention
 
 
 def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    """Dense softmax-attention oracle matching ``flash_attention_op``."""
     return reference_attention(q, k, v, causal=causal, window=window,
                                scale=scale).astype(q.dtype)

@@ -1,11 +1,23 @@
-from repro.kernels.kq_decode.ops import (kq_decode_attention_op,
+"""Compressed-cache decode attention kernels: jit'd ops + oracles.
+
+Dense varlen, paged, paged-prefill, and the split-KV flash-decoding
+variant (``num_splits`` on the paged op, ``default_decode_splits``
+heuristic, ``combine_split_partials`` merge) — see DESIGN.md
+§paged-cache / §split-kv.
+"""
+from repro.kernels.kq_decode.ops import (default_decode_splits,
+                                         kq_decode_attention_op,
                                          kq_decode_paged_attention_op,
                                          kq_prefill_paged_attention_op)
+from repro.kernels.kq_decode.paged import combine_split_partials
 from repro.kernels.kq_decode.ref import (kq_decode_attention_ref,
                                          kq_decode_paged_attention_ref,
+                                         kq_decode_paged_attention_split_ref,
                                          kq_prefill_paged_attention_ref)
 
-__all__ = ["kq_decode_attention_op", "kq_decode_attention_ref",
+__all__ = ["combine_split_partials", "default_decode_splits",
+           "kq_decode_attention_op", "kq_decode_attention_ref",
            "kq_decode_paged_attention_op", "kq_decode_paged_attention_ref",
+           "kq_decode_paged_attention_split_ref",
            "kq_prefill_paged_attention_op",
            "kq_prefill_paged_attention_ref"]

@@ -24,11 +24,29 @@ from repro.kernels.kq_decode.paged import (kq_decode_paged_attention,
                                            kq_prefill_paged_attention)
 
 
+def default_decode_splits(max_len: int, page_size: int, *,
+                          max_splits: int = 8,
+                          min_pages_per_split: int = 4) -> int:
+    """Split-count heuristic from the static length bound (DESIGN.md
+    §split-kv): one split per ``min_pages_per_split`` pages of
+    ``ceil(max_len / page_size)``, capped at ``max_splits``.
+
+    Short chains (fewer than ``2 * min_pages_per_split`` pages) get 1 —
+    the unsplit kernel — because the combine pass and the extra
+    output blocks only pay for themselves when a span is long enough
+    to keep a program busy.  Monotone in ``max_len``, so bucketed
+    serving configs resolve a stable split count per bucket.
+    """
+    pages = -(-max(1, int(max_len)) // max(1, int(page_size)))
+    return max(1, min(int(max_splits), pages // int(min_pages_per_split)))
+
+
 @functools.partial(jax.jit,
                    static_argnames=("block_t", "scale", "interpret",
                                     "max_len", "pad_lanes"))
 def kq_decode_attention_op(qc, kc, vc, lengths, *, block_t=256, scale=1.0,
                            interpret=None, max_len=None, pad_lanes=None):
+    """jit'd dense varlen decode attention (``kq_decode_attention``)."""
     return kq_decode_attention(qc, kc, vc, lengths, block_t=block_t,
                                scale=scale, interpret=interpret,
                                max_len=max_len, pad_lanes=pad_lanes)
@@ -41,6 +59,8 @@ def kq_prefill_paged_attention_op(qc, kc_pool, vc_pool, lengths, pos0,
                                   block_table, *, scale=1.0,
                                   interpret=None, max_len=None,
                                   pad_lanes=None):
+    """jit'd paged prefill-append attention
+    (``kq_prefill_paged_attention``)."""
     return kq_prefill_paged_attention(qc, kc_pool, vc_pool, lengths, pos0,
                                       block_table, scale=scale,
                                       interpret=interpret, max_len=max_len,
@@ -49,11 +69,19 @@ def kq_prefill_paged_attention_op(qc, kc_pool, vc_pool, lengths, pos0,
 
 @functools.partial(jax.jit,
                    static_argnames=("scale", "interpret", "max_len",
-                                    "pad_lanes"))
+                                    "pad_lanes", "num_splits"))
 def kq_decode_paged_attention_op(qc, kc_pool, vc_pool, lengths, block_table,
                                  *, scale=1.0, interpret=None,
-                                 max_len=None, pad_lanes=None):
+                                 max_len=None, pad_lanes=None,
+                                 num_splits=1):
+    """jit'd paged decode attention (``kq_decode_paged_attention``).
+
+    ``num_splits`` is static: 1 dispatches the single-program-chain
+    kernel, >1 the split-KV flash-decoding variant; use
+    ``default_decode_splits`` to derive it from the length bound.
+    """
     return kq_decode_paged_attention(qc, kc_pool, vc_pool, lengths,
                                      block_table, scale=scale,
                                      interpret=interpret, max_len=max_len,
-                                     pad_lanes=pad_lanes)
+                                     pad_lanes=pad_lanes,
+                                     num_splits=num_splits)

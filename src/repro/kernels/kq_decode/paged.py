@@ -27,6 +27,16 @@ lane-padded by the op wrapper (``ops.py``).
 attends the pages already written for it, with a per-query causal
 position mask — chunked prefill streams the same pools the decode
 kernel reads, no dense staging buffer.
+
+``num_splits > 1`` selects the split-KV flash-decoding variant
+(DESIGN.md §split-kv): the page chain is cut into ``num_splits``
+contiguous spans, the grid gains a split axis — (B, Hkv, S, span) —
+and each split's program chain accumulates its own partial
+(out, LSE) pair into per-split output blocks through the same
+block-table index-map machinery.  ``combine_split_partials`` then
+merges the splits with the numerically stable log-sum-exp rule.  A
+32k-token sequence no longer serializes its whole chain through one
+program: spans are independent along a parallelizable grid axis.
 """
 from __future__ import annotations
 
@@ -87,6 +97,152 @@ def _kq_decode_paged_kernel(len_ref, btab_ref, q_ref, k_ref, v_ref, o_ref,
     def _finish():
         denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
         o_ref[0, 0, :, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def _kq_decode_paged_split_kernel(len_ref, btab_ref, q_ref, k_ref, v_ref,
+                                  o_ref, lse_ref, m_ref, l_ref, acc_ref, *,
+                                  page_size: int, span: int, scale: float):
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+    t = pl.program_id(3)
+    nt = pl.num_programs(3)
+    length = len_ref[b]
+    # logical page of this program: page ``t`` of split ``s``'s span
+    page = s * span + t
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Programs past this sequence's last page — including every program
+    # of a split whose whole span lies beyond it — are no-ops: the
+    # block-table deref was clamped (no DMA) and the update is
+    # predicated off, so the split emits an empty (0, -inf) partial.
+    @pl.when(page * page_size < length)
+    def _update():
+        q = q_ref[0, 0].astype(jnp.float32)               # (m, Rk)
+        k = k_ref[0, 0].astype(jnp.float32)               # (ps, Rk)
+        s_ = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * scale
+        tpos = page * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s_.shape, 1)
+        s_ = jnp.where(tpos < length, s_, NEG_INF)        # (m, ps)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s_.max(axis=1))
+        p = jnp.exp(s_ - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        v = v_ref[0, 0].astype(jnp.float32)               # (ps, Rv)
+        # zero the tail page's dead rows: 0 * garbage = NaN otherwise
+        row = page * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (v.shape[0], 1), 0)
+        v = jnp.where(row < length, v, 0.0)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(t == nt - 1)
+    def _finish():
+        # partial (out, LSE) pair for this split: out is the split's own
+        # normalized softmax aggregate, lse = m + log(l) its partition
+        # mass.  An empty split (l == 0) emits out = 0 and
+        # lse ≈ NEG_INF + log(1e-30) — far enough below any live
+        # split's lse that its combine weight underflows to exactly 0,
+        # and equal across splits when *all* are empty (length 0), so
+        # the merged output is 0 like the unsplit kernel's.
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, 0, :, :] = acc_ref[...] / denom[:, None]
+        lse = m_ref[...] + jnp.log(denom)
+        # lse is per query row; broadcast across the lane axis so the
+        # output block keeps the (m, Rv) tile shape Mosaic expects —
+        # the wrapper reads lane 0
+        lse_ref[0, 0, 0, :, :] = jnp.broadcast_to(
+            lse[:, None], lse_ref.shape[3:])
+
+
+def combine_split_partials(o_parts, lse):
+    """Merge per-split partial (out, LSE) pairs — the flash-decoding
+    combine pass (DESIGN.md §split-kv).
+
+    o_parts: (..., S, m, Rv) split-local softmax aggregates; lse:
+    (..., S, m) split-local log-sum-exp (``m_s + log l_s``).  With
+    ``lse* = max_s lse_s`` and weights ``w_s = exp(lse_s - lse*)``,
+    the exact softmax over the concatenated splits is
+    ``sum_s w_s out_s / sum_s w_s`` — subtracting the running max
+    keeps every exponent <= 0, so the merge never overflows no matter
+    how the score mass is distributed across splits.  Returns
+    (..., m, Rv) in f32.
+    """
+    m_star = jnp.max(lse, axis=-2, keepdims=True)
+    w = jnp.exp(lse - m_star)                            # (..., S, m)
+    num = jnp.sum(w[..., None] * o_parts, axis=-3)
+    den = jnp.maximum(jnp.sum(w, axis=-2), 1e-30)
+    return num / den[..., None]
+
+
+def _kq_decode_paged_split(qg, kc_pool, vc_pool, lengths, block_table, *,
+                           scale: float, interpret: bool, span: int,
+                           n_splits: int, bound: int):
+    """Launch the split-KV grid and merge the partials.
+
+    qg: (B, Hkv, m, Rk) group-reshaped queries; spans/splits are
+    resolved by the caller (``span * n_splits >= ceil(bound / ps)``,
+    no empty trailing split).  Grid is (B, Hkv, S, span); each
+    (b, g, s) program chain walks pages ``s*span + t`` of the block
+    table and emits f32 partial blocks ``o_parts`` (B, Hkv, S, m, Rv)
+    and lane-broadcast ``lse_parts`` (B, Hkv, S, m, Rv), merged here
+    by ``combine_split_partials``.  Returns (B, Hkv, m, Rv) in the
+    query dtype.
+    """
+    B, Hkv, m, Rk = qg.shape
+    ps = kc_pool.shape[2]
+    Rv = vc_pool.shape[-1]
+    grid = (B, Hkv, n_splits, span)
+
+    def _kv_map(b, g, s, t, lens, btab):
+        # same clamp-then-deref as the unsplit kernel, with the logical
+        # page taken from this split's span; programs past the last
+        # occupied page (or in a wholly-empty split) repeat a physical
+        # page id and issue no fresh DMA
+        last = jnp.maximum((lens[b] + ps - 1) // ps - 1, 0)
+        return (btab[b, jnp.minimum(s * span + t, last)], g, 0, 0)
+
+    kernel = functools.partial(_kq_decode_paged_split_kernel,
+                               page_size=ps, span=span, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, m, Rk),
+                         lambda b, g, s, t, lens, btab: (b, g, 0, 0)),
+            pl.BlockSpec((1, 1, ps, Rk), _kv_map),
+            pl.BlockSpec((1, 1, ps, Rv), _kv_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, m, Rv),
+                         lambda b, g, s, t, lens, btab: (b, g, s, 0, 0)),
+            pl.BlockSpec((1, 1, 1, m, Rv),
+                         lambda b, g, s, t, lens, btab: (b, g, s, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((m,), jnp.float32),
+            pltpu.VMEM((m,), jnp.float32),
+            pltpu.VMEM((m, Rv), jnp.float32),
+        ],
+    )
+    o_parts, lse_parts = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, n_splits, m, Rv), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, n_splits, m, Rv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths, block_table, qg, kc_pool, vc_pool)
+    out = combine_split_partials(o_parts, lse_parts[..., 0])
+    return out.astype(qg.dtype)
 
 
 def _kq_prefill_paged_kernel(len_ref, pos0_ref, btab_ref, q_ref, k_ref,
@@ -237,7 +393,8 @@ def kq_decode_paged_attention(qc, kc_pool, vc_pool, lengths, block_table,
                               *, scale: float = 1.0,
                               interpret: Optional[bool] = None,
                               max_len: Optional[int] = None,
-                              pad_lanes: Optional[bool] = None):
+                              pad_lanes: Optional[bool] = None,
+                              num_splits: int = 1):
     """qc: (B,H,Rk); kc_pool: (P,Hkv,ps,Rk); vc_pool: (P,Hkv,ps,Rv).
 
     ``lengths``: (B,) int32 live cache entries per sequence;
@@ -249,6 +406,14 @@ def kq_decode_paged_attention(qc, kc_pool, vc_pool, lengths, block_table,
     for Mosaic and slices the output back — exact (see
     ``kq_decode_attention``).
 
+    ``num_splits > 1`` runs the split-KV flash-decoding variant
+    (DESIGN.md §split-kv): the bounded page chain is cut into up to
+    ``num_splits`` contiguous spans processed by independent program
+    chains along a fourth grid axis, and their partial (out, LSE)
+    pairs are merged by ``combine_split_partials``.  ``num_splits=1``
+    (and any bound that fits one page) dispatches the single-program
+    kernel unchanged — the bitwise parity oracle for the split path.
+
     Returns (B, H, Rv) group-aggregated values.
     """
     if interpret is None:
@@ -259,7 +424,8 @@ def kq_decode_paged_attention(qc, kc_pool, vc_pool, lengths, block_table,
             out = kq_decode_paged_attention(
                 pad_to_lane(qc), pad_to_lane(kc_pool),
                 pad_to_lane(vc_pool), lengths, block_table, scale=scale,
-                interpret=interpret, max_len=max_len, pad_lanes=False)
+                interpret=interpret, max_len=max_len, pad_lanes=False,
+                num_splits=num_splits)
             return out[..., :rv]
     B, H, Rk = qc.shape
     P, Hkv, ps, _ = kc_pool.shape
@@ -277,8 +443,22 @@ def kq_decode_paged_attention(qc, kc_pool, vc_pool, lengths, block_table,
     elif not isinstance(lengths, jax.core.Tracer):
         bound = max(1, min(T, int(jnp.max(lengths))))
     lengths = jnp.minimum(lengths, bound)
-    grid = (B, Hkv, pl.cdiv(bound, ps))
+    nt = pl.cdiv(bound, ps)
     qg = qc.reshape(B, Hkv, m, Rk)
+    # a split shorter than one page is an empty program chain: clamp,
+    # then re-derive the split count from the span so no trailing
+    # split starts past the bound (nt=8, num_splits=3 -> span 3,
+    # splits 3; nt=4, num_splits=3 -> span 2, splits 2)
+    n_splits = max(1, min(int(num_splits), nt))
+    if n_splits > 1:
+        span = pl.cdiv(nt, n_splits)
+        n_splits = pl.cdiv(nt, span)
+    if n_splits > 1:
+        return _kq_decode_paged_split(
+            qg, kc_pool, vc_pool, lengths, block_table, scale=scale,
+            interpret=interpret, span=span, n_splits=n_splits,
+            bound=bound).reshape(B, H, Rv)
+    grid = (B, Hkv, nt)
 
     def _kv_map(b, g, t, lens, btab):
         # clamp to the last occupied logical page, then dereference the

@@ -42,6 +42,61 @@ def kq_decode_paged_attention_ref(qc, kc_pool, vc_pool, lengths,
     return kq_decode_attention_ref(qc, kc, vc, lengths, scale=scale)
 
 
+def kq_decode_paged_attention_split_ref(qc, kc_pool, vc_pool, lengths,
+                                        block_table, *, num_splits: int,
+                                        scale: float = 1.0):
+    """Split-KV oracle: per-span partial (out, LSE) pairs merged by the
+    log-sum-exp rule, written independently of the kernel's combine
+    helper so tests can cross-check both.
+
+    Mirrors the kernel wrapper's span resolution (page-aligned spans,
+    ``span = ceil(n_pages / S)`` with empty trailing splits dropped),
+    computes each span's masked softmax aggregate and partition mass
+    in plain jnp, and merges with ``w_s = exp(lse_s - max_s lse_s)``.
+    Must match ``kq_decode_paged_attention_ref`` to fp tolerance for
+    every (length, num_splits).
+    """
+    B, H, Rk = qc.shape
+    Hkv, ps = kc_pool.shape[1], kc_pool.shape[2]
+    m = H // Hkv
+    kc = gather_pages(kc_pool, block_table)                  # (B,Hkv,T,Rk)
+    vc = gather_pages(vc_pool, block_table)
+    T = kc.shape[2]
+    n_pages = block_table.shape[1]
+    lengths = jnp.asarray(lengths, jnp.int32)
+    if lengths.ndim == 0:
+        lengths = jnp.broadcast_to(lengths, (B,))
+    S = max(1, min(int(num_splits), n_pages))
+    span = -(-n_pages // S)
+    S = -(-n_pages // span)
+    qg = qc.reshape(B, Hkv, m, Rk).astype(jnp.float32)
+    t = jnp.arange(T)
+    o_parts, lses = [], []
+    for s_idx in range(S):
+        lo, hi = s_idx * span * ps, min((s_idx + 1) * span * ps, T)
+        sc = jnp.einsum("bgmr,bgtr->bgmt", qg,
+                        kc[:, :, lo:hi].astype(jnp.float32),
+                        preferred_element_type=jnp.float32) * scale
+        valid = ((t[lo:hi][None, :] < lengths[:, None]))     # (B, hi-lo)
+        sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+        mx = jnp.max(sc, axis=-1)                            # (B,Hkv,m)
+        p = jnp.exp(sc - mx[..., None])
+        p = jnp.where(valid[:, None, None, :], p, 0.0)
+        l = jnp.sum(p, axis=-1)
+        den = jnp.maximum(l, 1e-30)
+        o = jnp.einsum("bgmt,bgtr->bgmr", p,
+                       vc[:, :, lo:hi].astype(jnp.float32)) / den[..., None]
+        o_parts.append(o)
+        lses.append(jnp.where(l > 0, mx + jnp.log(den), NEG_INF))
+    o_parts = jnp.stack(o_parts, axis=-3)                    # (B,Hkv,S,m,Rv)
+    lse = jnp.stack(lses, axis=-2)                           # (B,Hkv,S,m)
+    m_star = jnp.max(lse, axis=-2, keepdims=True)
+    w = jnp.exp(lse - m_star)
+    num = jnp.sum(w[..., None] * o_parts, axis=-3)
+    out = num / jnp.maximum(jnp.sum(w, axis=-2), 1e-30)[..., None]
+    return out.reshape(B, H, -1).astype(qc.dtype)
+
+
 def kq_prefill_paged_attention_ref(qc, kc_pool, vc_pool, lengths, pos0,
                                    block_table, *, scale: float = 1.0):
     """Oracle for the prefill-append kernel: gather pages, then masked

@@ -1,3 +1,4 @@
+"""SSD (state-space dual) chunk-scan kernel package: op + oracle."""
 from repro.kernels.ssd.ops import ssd_chunk_scan_op
 from repro.kernels.ssd.ref import ssd_chunk_scan_ref
 

@@ -15,6 +15,7 @@ from repro.kernels.ssd.ssd import ssd_chunk_scan
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_chunk_scan_op(x, a, dt, B, C, *, chunk=128, interpret=None):
+    """jit'd SSD chunk scan (``ssd_chunk_scan``) over chunked time."""
     if interpret is None:
         interpret = default_interpret()
     return ssd_chunk_scan(x, a, dt, B, C, chunk=chunk,

@@ -256,6 +256,53 @@ def decode_attention(q, cache_k, cache_v, valid_mask, scale):
     return agg                                              # (B,Hkv,m,rv)
 
 
+def split_decode_attention(q, cache_k, cache_v, valid_mask, scale,
+                           num_splits):
+    """Split-KV twin of ``decode_attention`` (DESIGN.md §split-kv): the
+    time axis is cut into ``num_splits`` contiguous segments, each
+    segment contributes a partial (out, LSE) pair, and the pairs merge
+    with the log-sum-exp rule — the same math as the Pallas split
+    kernel's combine pass, in plain lax.  Exercised as the paged decode
+    path whenever ``decode_splits > 1`` without ``use_pallas``, so the
+    whole serving suite covers the split+combine algebra on CPU.
+
+    q: (B,H,1,dk); cache_k/v: (B,Hkv,T,*); valid_mask: (T,) or (B,T).
+    Returns (B,Hkv,m,rv) like ``decode_attention``.
+    """
+    B, H, _, dk = q.shape
+    Hkv, T = cache_k.shape[1], cache_k.shape[2]
+    m = H // Hkv
+    S = max(1, min(int(num_splits), T))
+    seg = -(-T // S)
+    S = -(-T // seg)
+    qg = q.reshape(B, Hkv, m, dk)
+    s = jnp.einsum("bgmd,bgtd->bgmt", qg, cache_k,
+                   preferred_element_type=jnp.float32) * scale
+    if valid_mask.ndim == 1:
+        vm = jnp.broadcast_to(valid_mask[None, :], (B, T))
+    else:
+        vm = valid_mask
+    s = jnp.where(vm[:, None, None, :], s, NEG_INF)
+    pad = S * seg - T
+    s = jnp.pad(s, ((0, 0),) * 3 + ((0, pad),),
+                constant_values=NEG_INF).reshape(B, Hkv, m, S, seg)
+    vmp = jnp.pad(vm, ((0, 0), (0, pad))).reshape(B, 1, 1, S, seg)
+    v = jnp.pad(cache_v.astype(jnp.float32),
+                ((0, 0), (0, 0), (0, pad), (0, 0)))
+    v = v.reshape(B, Hkv, S, seg, -1)
+    mx = jnp.max(s, axis=-1)                                 # (B,Hkv,m,S)
+    p = jnp.where(vmp, jnp.exp(s - mx[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    den = jnp.maximum(l, 1e-30)
+    o = jnp.einsum("bgmst,bgstr->bgmsr", p, v) / den[..., None]
+    lse = jnp.where(l > 0, mx + jnp.log(den), NEG_INF)       # (B,Hkv,m,S)
+    m_star = jnp.max(lse, axis=-1, keepdims=True)
+    w = jnp.exp(lse - m_star)
+    num = jnp.sum(w[..., None] * o, axis=-2)                 # (B,Hkv,m,rv)
+    agg = num / jnp.maximum(jnp.sum(w, axis=-1), 1e-30)[..., None]
+    return agg.astype(cache_v.dtype)
+
+
 def chunk_decode_attention(qg, cache_k, cache_v, qpos, scale):
     """A chunk of S queries over a cache (lax reference for the paged
     prefill kernel).  qg: (B,Hkv,m,S,dk); cache_k/v: (B,Hkv,T,*);
@@ -537,7 +584,8 @@ def attn_prefill_chunk(p, x, cache: Dict, pos0, cfg: ModelConfig,
 
 
 def attn_decode(p, x, cache: Dict, pos, cfg: ModelConfig,
-                proj: Optional[Dict] = None, block_table=None):
+                proj: Optional[Dict] = None, block_table=None,
+                num_splits: int = 1):
     """One-token decode.  x: (B,1,D); pos: (B,) per-sequence index of the
     new token (a scalar broadcasts — legacy lock-step batches).
 
@@ -546,7 +594,12 @@ def attn_decode(p, x, cache: Dict, pos, cfg: ModelConfig,
     ``block_table`` is the (B, n_pages) slot->physical-page map; the new
     entry is appended through the table and attention reads the pages in
     place (Pallas) or via a gather (lax reference).  Dense (per-slot)
-    caches remain the default and the parity oracle."""
+    caches remain the default and the parity oracle.
+
+    ``num_splits`` (static, paged only) selects split-KV flash-decoding
+    (DESIGN.md §split-kv): the Pallas path passes it to the paged
+    kernel, the lax path routes through ``split_decode_attention``; 1
+    is the unsplit parity oracle."""
     B = x.shape[0]
     dh = cfg.d_head
     scale = 1.0 / math.sqrt(dh)
@@ -620,14 +673,20 @@ def attn_decode(p, x, cache: Dict, pos, cfg: ModelConfig,
         Hkv = cfg.n_kv_heads
         agg = kq_decode_paged_attention(
             qq.reshape(B, -1, qq.shape[-1]), keys, vals, pos + 1,
-            block_table, scale=scale,
-            max_len=T).reshape(B, Hkv, -1, vals.shape[-1])
+            block_table, scale=scale, max_len=T,
+            num_splits=num_splits).reshape(B, Hkv, -1, vals.shape[-1])
     elif paged:
         # lax reference: materialize each slot's pages, then the dense
-        # masked decode (parity oracle for the paged kernel)
+        # masked decode (parity oracle for the paged kernel); with
+        # decode_splits > 1 the split twin runs the same partial-LSE
+        # merge the split kernel uses
         k_seq = gather_pages(keys, block_table)
         v_seq = gather_pages(vals, block_table)
-        agg = decode_attention(qq, k_seq, v_seq, valid, scale)
+        if num_splits > 1:
+            agg = split_decode_attention(qq, k_seq, v_seq, valid, scale,
+                                         num_splits)
+        else:
+            agg = decode_attention(qq, k_seq, v_seq, valid, scale)
     elif proj is not None and cfg.use_pallas and not W:
         # TPU runtime hot path: the Pallas kernel streams the compressed
         # cache with per-sequence lengths (interpret-mode on CPU)

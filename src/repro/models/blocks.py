@@ -108,12 +108,14 @@ def _ffn_apply(p: Dict, x, cfg: ModelConfig, layer_idx: int, mode: str,
 def apply_layer(p: Dict, x, cfg: ModelConfig, layer_idx: int, mode: str,
                 cache: Optional[Dict] = None, pos=None,
                 proj: Optional[Dict] = None, max_len: int = 0,
-                block_table=None, token_mask=None):
+                block_table=None, token_mask=None, num_splits: int = 1):
     """Returns (x, new_cache, captures, aux).
 
     ``block_table`` (decode only) routes attention through the paged
     cache; ``token_mask`` (B, S) marks live tokens so MoE routing skips
-    finished/empty serving slots (both DESIGN.md §paged-cache)."""
+    finished/empty serving slots (both DESIGN.md §paged-cache).
+    ``num_splits`` (decode only, static) selects split-KV
+    flash-decoding in the paged attention path (DESIGN.md §split-kv)."""
     kind = cfg.layer_kinds()[layer_idx]
     x = shard(x, ("pod", "data"), None, None)
     h = rms_norm(x, p["ln1"], cfg.rms_eps)
@@ -136,7 +138,8 @@ def apply_layer(p: Dict, x, cfg: ModelConfig, layer_idx: int, mode: str,
                 valid=token_mask)
         else:
             y, new_cache = attn_mod.attn_decode(p["attn"], h, cache, pos,
-                                                cfg, proj, block_table)
+                                                cfg, proj, block_table,
+                                                num_splits)
     elif kind == "mla":
         if mode == "train":
             y = mla_mod.mla_train(p["attn"], h, cfg)

@@ -125,7 +125,7 @@ class LM:
 
     def _apply_step(self, step_params, x, mode, step_cache=None, pos=None,
                     step_proj=None, max_len=0, block_table=None,
-                    token_mask=None):
+                    token_mask=None, num_splits=1):
         cfg = self.cfg
         new_caches, captures, aux_t = [], None, _zero_aux()
         for j, layer_idx in enumerate(self.step_template):
@@ -135,7 +135,7 @@ class LM:
                                   and len(step_proj)) else None
             x, nc, caps, aux = apply_layer(
                 lp, x, cfg, layer_idx, mode, lc, pos, lproj, max_len,
-                block_table, token_mask)
+                block_table, token_mask, num_splits)
             new_caches.append(nc)
             if caps is not None:
                 captures = caps
@@ -147,7 +147,8 @@ class LM:
     # -- full stack ----------------------------------------------------------
 
     def _run_stack(self, params, x, mode, cache=None, pos=None, proj=None,
-                   max_len: int = 0, block_table=None, token_mask=None):
+                   max_len: int = 0, block_table=None, token_mask=None,
+                   num_splits: int = 1):
         """Returns (x, cache_out, captures_list, aux)."""
         cfg = self.cfg
         aux = _zero_aux()
@@ -161,7 +162,8 @@ class LM:
                      if (proj is not None and is_attn) else None)
             x, nc, caps, la = apply_layer(lp, x, cfg, layer_idx, mode,
                                           lc, pos, lproj, max_len,
-                                          block_table, token_mask)
+                                          block_table, token_mask,
+                                          num_splits)
             prefix_cache_out.append(nc)
             if caps is not None:
                 captures_list.append(caps)
@@ -182,7 +184,7 @@ class LM:
                            if step_proj is not None else None)
                     x, co, caps, sa = self._apply_step(
                         sp, x, mode, sc, pos, spj, max_len,
-                        block_table, token_mask)
+                        block_table, token_mask, num_splits)
                     outs.append(co)
                     if caps is not None:
                         captures_list.append(caps)
@@ -193,7 +195,7 @@ class LM:
             else:
                 x, steps_cache_out, caps_stacked, s_aux = self._scan_steps(
                     params["steps"], x, mode, cache, pos, step_proj,
-                    max_len, block_table, token_mask)
+                    max_len, block_table, token_mask, num_splits)
                 aux = jax.tree.map(lambda a, b: a + b, aux, s_aux)
                 if caps_stacked is not None:
                     for i in range(len(self.steps)):
@@ -207,7 +209,8 @@ class LM:
         return x, cache_out, captures_list, aux
 
     def _scan_steps(self, steps_params, x, mode, cache, pos, step_proj,
-                    max_len, block_table=None, token_mask=None):
+                    max_len, block_table=None, token_mask=None,
+                    num_splits=1):
         cfg = self.cfg
         has_cache_in = mode in ("decode", "chunk")
         emit_cache = mode in ("prefill", "decode", "chunk")
@@ -220,7 +223,7 @@ class LM:
             spj = xs[-1] if step_proj is not None else None
             x, co, caps, sa = self._apply_step(sp, x, mode, sc, pos, spj,
                                                max_len, block_table,
-                                               token_mask)
+                                               token_mask, num_splits)
             aux = jax.tree.map(lambda a, b: a + b, aux, sa)
             ys = []
             if emit_cache:
@@ -292,21 +295,25 @@ class LM:
         return self._logits(params, x), cache
 
     def decode_step(self, params, cache, tokens, pos, proj=None,
-                    block_table=None, token_mask=None):
+                    block_table=None, token_mask=None, num_splits=1):
         """tokens: (B, 1) int32; pos: per-sequence (B,) index of each new
         token (a scalar broadcasts — legacy lock-step decode).
 
         ``block_table``: (B, n_pages) int32 — present iff ``cache`` is
         paged (pool-shaped leaves; DESIGN.md §paged-cache).
         ``token_mask``: (B,) bool of live slots; dead slots are excluded
-        from MoE capacity assignment."""
+        from MoE capacity assignment.  ``num_splits`` (static Python
+        int, paged only): split-KV flash-decoding fan-out for the
+        attention read (DESIGN.md §split-kv); 1 is the unsplit parity
+        oracle."""
         pos = attn_mod.batched_positions(pos, tokens.shape[0])
         x = self._embed(params, {"tokens": tokens})
         tm = token_mask[:, None] if token_mask is not None else None
         x, cache, _, _ = self._run_stack(params, x, "decode", cache=cache,
                                          pos=pos, proj=proj,
                                          block_table=block_table,
-                                         token_mask=tm)
+                                         token_mask=tm,
+                                         num_splits=num_splits)
         x = rms_norm(x, params["final_norm"], self.cfg.rms_eps)
         return self._logits(params, x), cache
 

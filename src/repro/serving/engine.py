@@ -131,6 +131,7 @@ import numpy as np
 from repro.config import ModelConfig, ServeConfig
 from repro.core.calibration import ModelProjections
 from repro.core.compressed import cache_footprint
+from repro.kernels.kq_decode import default_decode_splits
 from repro.serving import invariants
 from repro.serving.faults import FaultInjector, SwapFailed, checksum
 from repro.serving.paged_cache import (BlockTables, PagePool,
@@ -261,6 +262,15 @@ class ServingEngine:
                       if projections is not None else (0, 0))
         if sc.paged:
             self._validate_paged()
+        # split-KV flash-decoding fan-out (DESIGN.md §split-kv):
+        # resolved once at construction — 0 derives the heuristic from
+        # the static length bound, so every decode dispatch compiles
+        # with one static split count
+        self._decode_splits = 1
+        if sc.paged:
+            self._decode_splits = (sc.decode_splits or
+                                   default_decode_splits(sc.max_seq_len,
+                                                         sc.page_size))
         self._prefill = jax.jit(self._prefill_impl)
         self._insert = jax.jit(self._insert_impl)
         self._paged_insert = jax.jit(self._paged_insert_impl)
@@ -401,6 +411,8 @@ class ServingEngine:
                                   "token_mask": live}
             if self.proj is not None:
                 kw["proj"] = proj
+            if block_table is not None:
+                kw["num_splits"] = self._decode_splits
             return self.model.decode_step(params, cache, tokens, fpos,
                                           **kw)
 
@@ -558,6 +570,7 @@ class ServingEngine:
         #                                      re-prefill after preemption
         #                                      is thrash, not progress
         self.n_completed = 0
+        self.n_audits = 0          # invariants.audit passes actually run
         self.n_retried = 0         # admission alloc retries (backoff)
         self.n_swap_fallbacks = 0  # swap faults degraded to recompute
         self.error_counts: Dict[str, int] = {k: 0 for k in ERROR_KINDS}
@@ -1447,8 +1460,9 @@ class ServingEngine:
 
         Wraps the scheduling body with the robustness rails
         (DESIGN.md §robustness): per-request deadlines are checked
-        before scheduling, ``invariants.audit`` runs after it
-        (``ServeConfig.audit``), and a no-progress watchdog turns
+        before scheduling, ``invariants.audit`` runs after it on every
+        ``ServeConfig.audit_every``-th step (``ServeConfig.audit``;
+        the counter is ``n_audits``), and a no-progress watchdog turns
         ``stall_steps`` consecutive do-nothing iterations (no new
         prefill ground, no emitted tokens, no terminal outcomes) into
         ``EngineStalledError`` instead of spinning ``generate``
@@ -1458,8 +1472,9 @@ class ServingEngine:
         self._progress = False
         self._check_deadlines()
         busy = self._step_inner()
-        if self.sc.audit:
+        if self.sc.audit and self._step_count % self.sc.audit_every == 0:
             invariants.audit(self)
+            self.n_audits += 1
         if busy and not self._progress:
             self._no_progress += 1
             if (self.sc.stall_steps

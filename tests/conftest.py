@@ -23,8 +23,10 @@ from repro.config import ServeConfig
 # same chaos stack through the token-budget scheduler
 # (ServeConfig.max_num_batched_tokens, DESIGN.md §scheduler) so every
 # serving test exercises fused prefill+decode iterations and
-# residual-budget chunk truncation; the default (dense) keeps the
-# exact-length parity oracle.
+# residual-budget chunk truncation; paged-longctx runs the paged stack
+# with split-KV flash-decoding (ServeConfig.decode_splits > 1, DESIGN.md
+# §split-kv) so every parity test also covers the split+combine decode
+# path; the default (dense) keeps the exact-length parity oracle.
 ENGINE = os.environ.get("REPRO_ENGINE", "dense")
 
 
@@ -53,13 +55,19 @@ def serve_config(**kw) -> ServeConfig:
     additionally turns on the token-budget scheduler with a small
     per-step budget, so decode charges, residual-truncated prefill
     chunks, and fused iterations all fire under every serving test —
-    greedy outputs still must match the dense leg token-for-token."""
+    greedy outputs still must match the dense leg token-for-token.
+    REPRO_ENGINE=paged-longctx runs the paged stack with split-KV
+    flash-decoding (decode_splits=3 — odd, so the tests' page chains
+    split into uneven spans and boundary cases fire); greedy outputs
+    must stay identical to the decode_splits=1 paged leg."""
     if ENGINE in ("paged", "paged-preempt", "paged-prefix",
-                  "paged-chaos", "paged-budget"):
+                  "paged-chaos", "paged-budget", "paged-longctx"):
         kw.setdefault("paged", True)
         kw.setdefault("page_size", 4)
         kw.setdefault("chunked_prefill", True)
         kw.setdefault("prefill_chunk", 8)
+    if ENGINE == "paged-longctx":
+        kw.setdefault("decode_splits", 3)
     if ENGINE in ("paged-preempt", "paged-chaos", "paged-budget"):
         T = kw.get("max_seq_len", 4096)
         kw.setdefault("n_pages", max(2, T // kw["page_size"]))
@@ -72,6 +80,10 @@ def serve_config(**kw) -> ServeConfig:
         kw.setdefault("preempt_mode", "swap")
         kw.setdefault("chaos_seed", 0)
         kw.setdefault("audit", True)
+        # sampled auditing (ServeConfig.audit_every): every 2nd step
+        # still catches cross-step corruption while covering the
+        # sampling arithmetic itself on the hardest legs
+        kw.setdefault("audit_every", 2)
     if ENGINE == "paged-budget":
         # small enough that residual truncation and budget-capped
         # admission actually happen under the tests' max_batch=4

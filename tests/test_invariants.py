@@ -73,6 +73,53 @@ def test_audit_clean_through_full_lifecycle(setup):
     assert eng.n_preempted >= 1                 # pressure was real
 
 
+def test_audit_every_samples_steps(setup):
+    """audit_every=k runs the audit pass on every k-th step only: the
+    n_audits counter lands at step_count // k, and the sampled drain
+    still finishes with identical outcomes."""
+    cfg, model, params = setup
+    outs = {}
+    for k in (1, 3):
+        reqs = _reqs(cfg, max_new=6)
+        eng = _start(cfg, params, reqs, n_pages=6, audit=True,
+                     audit_every=k)
+        steps = 0
+        while eng.step():
+            steps += 1
+            assert steps < 200
+        assert eng.n_audits == eng._step_count // k
+        assert all(r.done and not r.failed for r in reqs)
+        outs[k] = [list(r.out_tokens) for r in reqs]
+    assert outs[1] == outs[3]                   # sampling never perturbs
+
+
+def test_audit_count_independent_of_pool_size(setup):
+    """The *number* of audit passes is a pure function of step count
+    and audit_every — growing the pool must not add audits (the
+    per-pass cost is what scales with pool size; sampling is the lever
+    that bounds the total)."""
+    cfg, model, params = setup
+    counts = {}
+    for n_pages in (12, 48):        # both ample: same admission schedule
+        reqs = _reqs(cfg, max_new=4, n=3)
+        eng = _start(cfg, params, reqs, n_pages=n_pages, audit=True,
+                     audit_every=2, admission="reserve",
+                     preempt_mode="recompute", share_prefix=False)
+        steps = 0
+        while eng.step():
+            steps += 1
+            assert steps < 200
+        counts[n_pages] = (eng.n_audits, eng._step_count)
+    assert counts[12] == counts[48]
+
+
+def test_audit_every_validation():
+    with pytest.raises(ValueError):
+        ServeConfig(audit_every=0)
+    with pytest.raises(ValueError):
+        ServeConfig(audit_every=-2)
+
+
 def _run_until_live(eng):
     """Step until at least one slot is occupied and owns pages."""
     for _ in range(16):
