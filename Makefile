@@ -37,7 +37,7 @@ REGRESSION_RATIO_THRESHOLD ?= 2.0
 FMT_PATHS := benchmarks/check_regression.py \
              tests/test_check_regression.py
 
-.PHONY: verify test lint check-regression bench-quick bench chaos longctx
+.PHONY: verify test lint check-regression bench-quick bench chaos longctx quant
 
 # bench-quick rewrites BENCH_decode.json, so it must run after the
 # regression gate has read the committed baseline — the recipe (not a
@@ -59,6 +59,14 @@ chaos:
 # greedy outputs must match the splits=1 legs)
 longctx:
 	REPRO_ENGINE=paged-longctx $(PY) -m pytest -x -q
+
+# the paged-quant CI leg, runnable locally: the whole suite against
+# int8 scale-pool pages (ServeConfig.cache_quant, DESIGN.md
+# §page-layouts) layered over the budget-leg stack — sharing, swap
+# preemption, chaos, sampled audits, token budget — with per-step
+# dynamic split derivation (decode_splits=0)
+quant:
+	REPRO_ENGINE=paged-quant $(PY) -m pytest -x -q
 
 lint:
 	@if command -v ruff >/dev/null 2>&1; then \

@@ -114,6 +114,12 @@ RATIO_PAIRS = (
     # <= 1.0; the TPU win is grid parallelism — interpret mode only
     # bounds the combine-pass overhead)
     ("decode_longctx_split", "decode_longctx"),
+    # quantized page layouts (DESIGN.md §page-layouts) vs the fp paged
+    # decode at the same occupancy: int8 runs the dequantize-on-the-fly
+    # kernel; svdq runs the lax unpack+dequantize twin, whose gather
+    # plus bit-unpacking is real extra work — 2x-widened
+    ("decode_paged_int8", "decode_paged_full"),
+    ("decode_paged_svdq", "decode_paged_full", 2.0),
 )
 
 

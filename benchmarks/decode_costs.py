@@ -16,6 +16,13 @@ oracle and the piggybacked prefill+decode step (DESIGN.md §prefill);
 jitted dispatch — the token-budget scheduler's fused iteration
 (DESIGN.md §scheduler) — so its quotient against ``decode_mixed_step``
 gates the launch-overhead saving of fusing.
+The ``decode_paged_int8`` / ``decode_paged_svdq`` rows price the same
+full-occupancy paged decode on quantized page layouts
+(DESIGN.md §page-layouts): int8 scale-pool pages through the
+dequantize-on-the-fly kernel and SVDq per-rank-bit packed pages
+through the lax unpack twin — their hbm_bytes scale with the packed
+page stride and the ``resident_x`` field is the extra resident
+sequences the same pool holds.
 The ``decode_longctx`` / ``decode_longctx_split`` rows price one
 long page chain decoded through a single program chain vs the
 split-KV flash-decoding variant (partial (out, LSE) spans merged by a
@@ -48,7 +55,9 @@ from repro.kernels.kq_decode import (default_decode_splits,
                                      kq_prefill_paged_attention_op)
 from repro.models.attention import (decode_attention,
                                     int8_decode_attention, quantize_int8)
-from repro.serving.paged_cache import append_chunk, pages_needed
+from repro.serving.page_layouts import Int8Layout, SvdqLayout
+from repro.serving.paged_cache import (append_chunk, gather_pages,
+                                       pages_needed)
 
 
 def _hbm_bytes(*arrays) -> int:
@@ -166,6 +175,63 @@ def run(B: int = 4, Hkv: int = 8, m: int = 8, T: int = 4096,
         print(f"paged[{tag}]: max_len={L} pages={occupied}/"
               f"{Bv * pages_per_seq} {us:.0f}us "
               f"hbm={occupied * page_bytes}B (dense {dense_hbm}B)")
+
+    # -- quantized page layouts (DESIGN.md §page-layouts): the same
+    # full-occupancy decode on int8 scale-pool pages (the pallas kernel
+    # dequantizes on the fly — HBM reads stay int8) and on SVDq
+    # per-rank-bit packed pages (lax-only: unpack + dequantize the
+    # gathered pages, then the fp decode twin).  Each row's hbm_bytes
+    # scale with the *packed* page stride; the derived ``resident_x``
+    # quotient (fp page bytes / packed page bytes) is how many more
+    # resident sequences the same physical pool holds at that layout.
+    occ_full = int(sum(pages_needed(int(x), ps)
+                       for x in np.asarray(lens_full)))
+    kp8, kps = quantize_int8(kp)
+    vp8, vps = quantize_int8(vp)
+    kps = kps[..., None].astype(jnp.bfloat16)            # (P,Gv,ps,1)
+    vps = vps[..., None].astype(jnp.bfloat16)
+    _, us_p8 = timed(kq_decode_paged_attention_op, qc2, kp8, vp8,
+                     lens_full, btab_full, reps=5, scale=scale,
+                     max_len=T, kscale=kps, vscale=vps)
+    int8_page = Gv * ps * sum(Int8Layout().token_bytes(s, R)
+                              for s in ("k", "v"))
+    rows.append(("decode_paged_int8", us_p8,
+                 f"max_len={T};page_size={ps};"
+                 f"occupied_pages={occ_full};"
+                 f"page_bytes={int8_page};fp_page_bytes={page_bytes};"
+                 f"hbm_bytes={occ_full * int8_page};"
+                 f"resident_x={page_bytes / int8_page:.2f}"))
+    sv = SvdqLayout()
+    enc_k = sv.encode("k", kp)
+    enc_v = sv.encode("v", vp)
+    q_sv = qc2[:, :, None, :]                            # (Bv,H,1,R)
+    valid_sv = jnp.arange(T)[None, :] < lens_full[:, None]
+
+    @jax.jit
+    def svdq_step(kc_, ksc_, vc_, vsc_):
+        k_seq = sv.decode("k", {
+            "kc": gather_pages(kc_, btab_full),
+            "kscale": gather_pages(ksc_, btab_full)}, R)
+        v_seq = sv.decode("v", {
+            "vc": gather_pages(vc_, btab_full),
+            "vscale": gather_pages(vsc_, btab_full)}, R)
+        return decode_attention(q_sv, k_seq, v_seq, valid_sv, scale)
+
+    _, us_sv = timed(svdq_step, enc_k["kc"], enc_k["kscale"],
+                     enc_v["vc"], enc_v["vscale"], reps=5)
+    sv_page = Gv * ps * sum(sv.token_bytes(s, R) for s in ("k", "v"))
+    sv_bits = sv.resolve_bits(R)
+    rows.append(("decode_paged_svdq", us_sv,
+                 f"max_len={T};page_size={ps};"
+                 f"occupied_pages={occ_full};"
+                 f"bits_hi={sv_bits[0]};bits_lo={sv_bits[-1]};"
+                 f"page_bytes={sv_page};fp_page_bytes={page_bytes};"
+                 f"hbm_bytes={occ_full * sv_page};"
+                 f"resident_x={page_bytes / sv_page:.2f}"))
+    print(f"paged layouts: int8 {us_p8:.0f}us "
+          f"(page {int8_page}B, x{page_bytes / int8_page:.2f} resident) "
+          f"svdq {us_sv:.0f}us "
+          f"(page {sv_page}B, x{page_bytes / sv_page:.2f} resident)")
 
     # -- split-KV flash-decoding at long context (DESIGN.md §split-kv):
     # ONE slot owning every pool page — the scenario where the unsplit

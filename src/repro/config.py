@@ -142,7 +142,11 @@ class ModelConfig:
     compression: CompressionConfig = field(default_factory=CompressionConfig)
     # runtime knobs
     dtype: str = "bfloat16"
-    cache_quant: str = "none"            # none | int8 (compressed cache)
+    cache_quant: str = "none"            # none | int8 | svdq (compressed
+                                         # cache; serving/page_layouts.py)
+    svdq_bits: Tuple[int, ...] = ()      # per-rank key bits for svdq,
+                                         # non-increasing {8,4,2}; () =>
+                                         # default_svdq_bits at the rank
     use_pallas: bool = False             # TPU path; CPU dry-run uses lax
     scan_layers: bool = True             # stack layers & lax.scan over them
     remat_policy: str = "nothing"        # nothing | dots | full
@@ -469,9 +473,21 @@ class ServeConfig:
     # split-KV flash-decoding fan-out for the paged decode attention
     # read (DESIGN.md §split-kv): 1 = the unsplit kernel (parity
     # oracle); >1 cuts each slot's KV range into that many spans with
-    # a log-sum-exp combine; 0 = derive from max_seq_len/page_size via
-    # kernels.kq_decode.default_decode_splits.  Requires paged=True.
+    # a log-sum-exp combine; 0 = dynamic — the engine re-derives the
+    # count *per step* from the live maximum sequence length
+    # (kernels.kq_decode.default_decode_splits), snapped down to
+    # {1, 2, 4, 8} so the decode dispatch compiles at most four split
+    # variants.  Requires paged=True.
     decode_splits: int = 1
+    # page byte format (DESIGN.md §page-layouts): "none" keeps fp pages
+    # (serving/page_layouts.FpLayout, the bitwise parity oracle);
+    # "int8" stores int8 data pages plus per-token bf16 scale pools;
+    # "svdq" adds per-rank bit allocation on the key side (8/4/2 bits
+    # packed into one uint8 stride).  Quantized layouts require
+    # paged=True and compression projections; "svdq" additionally
+    # requires chunked_prefill=True (the exact-length dense staging
+    # path has no packed-page writer).
+    cache_quant: str = "none"
 
     def __post_init__(self) -> None:
         if self.admission not in ("reserve", "optimistic"):
@@ -550,6 +566,21 @@ class ServeConfig:
                 "decode_splits splits the paged decode kernel's page "
                 "chain and requires paged=True (the dense path has no "
                 "page chain to split)")
+        if self.cache_quant not in ("none", "int8", "svdq"):
+            raise ValueError(
+                f"unknown cache_quant {self.cache_quant!r} "
+                f"(none | int8 | svdq)")
+        if self.cache_quant != "none" and not self.paged:
+            raise ValueError(
+                "cache_quant selects a paged page layout "
+                "(DESIGN.md §page-layouts) and requires paged=True; "
+                "dense int8 is selected on the ModelConfig instead")
+        if self.cache_quant == "svdq" and not self.chunked_prefill:
+            raise ValueError(
+                "cache_quant='svdq' packs sub-byte ranks at page-write "
+                "time and requires chunked_prefill=True (the "
+                "exact-length dense staging path has no packed-page "
+                "writer)")
 
     @property
     def buckets(self) -> Tuple[int, ...]:

@@ -11,12 +11,14 @@ from repro.kernels.kq_decode.ops import (default_decode_splits,
                                          kq_prefill_paged_attention_op)
 from repro.kernels.kq_decode.paged import combine_split_partials
 from repro.kernels.kq_decode.ref import (kq_decode_attention_ref,
+                                         kq_decode_paged_attention_int8_ref,
                                          kq_decode_paged_attention_ref,
                                          kq_decode_paged_attention_split_ref,
                                          kq_prefill_paged_attention_ref)
 
 __all__ = ["combine_split_partials", "default_decode_splits",
            "kq_decode_attention_op", "kq_decode_attention_ref",
+           "kq_decode_paged_attention_int8_ref",
            "kq_decode_paged_attention_op", "kq_decode_paged_attention_ref",
            "kq_decode_paged_attention_split_ref",
            "kq_prefill_paged_attention_op",

@@ -73,15 +73,19 @@ def kq_prefill_paged_attention_op(qc, kc_pool, vc_pool, lengths, pos0,
 def kq_decode_paged_attention_op(qc, kc_pool, vc_pool, lengths, block_table,
                                  *, scale=1.0, interpret=None,
                                  max_len=None, pad_lanes=None,
-                                 num_splits=1):
+                                 num_splits=1, kscale=None, vscale=None):
     """jit'd paged decode attention (``kq_decode_paged_attention``).
 
     ``num_splits`` is static: 1 dispatches the single-program-chain
     kernel, >1 the split-KV flash-decoding variant; use
     ``default_decode_splits`` to derive it from the length bound.
+    ``kscale``/``vscale`` (both or neither) select the int8 page
+    layout: int8 kc/vc pools dequantized in-register against the
+    (P, Hkv, ps, 1) scale pools (DESIGN.md §page-layouts).
     """
     return kq_decode_paged_attention(qc, kc_pool, vc_pool, lengths,
                                      block_table, scale=scale,
                                      interpret=interpret, max_len=max_len,
                                      pad_lanes=pad_lanes,
-                                     num_splits=num_splits)
+                                     num_splits=num_splits,
+                                     kscale=kscale, vscale=vscale)

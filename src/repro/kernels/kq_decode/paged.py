@@ -37,6 +37,13 @@ block-table index-map machinery.  ``combine_split_partials`` then
 merges the splits with the numerically stable log-sum-exp rule.  A
 32k-token sequence no longer serializes its whole chain through one
 program: spans are independent along a parallelizable grid axis.
+
+Both decode variants accept optional ``kscale``/``vscale``
+(P, Hkv, ps, 1) pools (DESIGN.md §page-layouts): with them the kc/vc
+pools hold int8 codes, the scale pools ride the identical block-table
+index maps, and the kernels multiply the per-token amax scale back in
+f32 after the int8 tiles land in VMEM — dequantize-on-the-fly, HBM
+reads stay int8.
 """
 from __future__ import annotations
 
@@ -53,9 +60,14 @@ from repro.kernels import default_interpret, pad_to_lane
 NEG_INF = -1e30
 
 
-def _kq_decode_paged_kernel(len_ref, btab_ref, q_ref, k_ref, v_ref, o_ref,
-                            m_ref, l_ref, acc_ref, *, page_size: int,
-                            scale: float):
+def _kq_decode_paged_kernel(len_ref, btab_ref, q_ref, *refs, page_size: int,
+                            scale: float, quant: bool):
+    if quant:
+        (k_ref, ks_ref, v_ref, vs_ref, o_ref,
+         m_ref, l_ref, acc_ref) = refs
+    else:
+        k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
+        ks_ref = vs_ref = None
     b = pl.program_id(0)
     t = pl.program_id(2)
     nt = pl.num_programs(2)
@@ -74,6 +86,10 @@ def _kq_decode_paged_kernel(len_ref, btab_ref, q_ref, k_ref, v_ref, o_ref,
     def _update():
         q = q_ref[0, 0].astype(jnp.float32)               # (m, Rk)
         k = k_ref[0, 0].astype(jnp.float32)               # (ps, Rk)
+        if quant:
+            # dequantize in-register: HBM traffic stays int8 + one
+            # bf16 scale per token (DESIGN.md §page-layouts)
+            k = k * ks_ref[0, 0].astype(jnp.float32)      # (ps, 1) bcast
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         tpos = t * page_size + jax.lax.broadcasted_iota(
@@ -85,6 +101,8 @@ def _kq_decode_paged_kernel(len_ref, btab_ref, q_ref, k_ref, v_ref, o_ref,
         corr = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
         v = v_ref[0, 0].astype(jnp.float32)               # (ps, Rv)
+        if quant:
+            v = v * vs_ref[0, 0].astype(jnp.float32)      # (ps, 1) bcast
         # zero the tail page's dead rows: 0 * garbage = NaN otherwise
         row = t * page_size + jax.lax.broadcasted_iota(
             jnp.int32, (v.shape[0], 1), 0)
@@ -99,9 +117,16 @@ def _kq_decode_paged_kernel(len_ref, btab_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0, :, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
 
 
-def _kq_decode_paged_split_kernel(len_ref, btab_ref, q_ref, k_ref, v_ref,
-                                  o_ref, lse_ref, m_ref, l_ref, acc_ref, *,
-                                  page_size: int, span: int, scale: float):
+def _kq_decode_paged_split_kernel(len_ref, btab_ref, q_ref, *refs,
+                                  page_size: int, span: int, scale: float,
+                                  quant: bool):
+    if quant:
+        (k_ref, ks_ref, v_ref, vs_ref, o_ref, lse_ref,
+         m_ref, l_ref, acc_ref) = refs
+    else:
+        (k_ref, v_ref, o_ref, lse_ref,
+         m_ref, l_ref, acc_ref) = refs
+        ks_ref = vs_ref = None
     b = pl.program_id(0)
     s = pl.program_id(2)
     t = pl.program_id(3)
@@ -124,6 +149,10 @@ def _kq_decode_paged_split_kernel(len_ref, btab_ref, q_ref, k_ref, v_ref,
     def _update():
         q = q_ref[0, 0].astype(jnp.float32)               # (m, Rk)
         k = k_ref[0, 0].astype(jnp.float32)               # (ps, Rk)
+        if quant:
+            # dequantize in-register, same contract as the unsplit
+            # kernel (DESIGN.md §page-layouts)
+            k = k * ks_ref[0, 0].astype(jnp.float32)      # (ps, 1) bcast
         s_ = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32) * scale
         tpos = page * page_size + jax.lax.broadcasted_iota(
@@ -135,6 +164,8 @@ def _kq_decode_paged_split_kernel(len_ref, btab_ref, q_ref, k_ref, v_ref,
         corr = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
         v = v_ref[0, 0].astype(jnp.float32)               # (ps, Rv)
+        if quant:
+            v = v * vs_ref[0, 0].astype(jnp.float32)      # (ps, 1) bcast
         # zero the tail page's dead rows: 0 * garbage = NaN otherwise
         row = page * page_size + jax.lax.broadcasted_iota(
             jnp.int32, (v.shape[0], 1), 0)
@@ -184,7 +215,8 @@ def combine_split_partials(o_parts, lse):
 
 def _kq_decode_paged_split(qg, kc_pool, vc_pool, lengths, block_table, *,
                            scale: float, interpret: bool, span: int,
-                           n_splits: int, bound: int):
+                           n_splits: int, bound: int, kscale=None,
+                           vscale=None):
     """Launch the split-KV grid and merge the partials.
 
     qg: (B, Hkv, m, Rk) group-reshaped queries; spans/splits are
@@ -193,12 +225,16 @@ def _kq_decode_paged_split(qg, kc_pool, vc_pool, lengths, block_table, *,
     (b, g, s) program chain walks pages ``s*span + t`` of the block
     table and emits f32 partial blocks ``o_parts`` (B, Hkv, S, m, Rv)
     and lane-broadcast ``lse_parts`` (B, Hkv, S, m, Rv), merged here
-    by ``combine_split_partials``.  Returns (B, Hkv, m, Rv) in the
-    query dtype.
+    by ``combine_split_partials``.  ``kscale``/``vscale`` (both or
+    neither) are (P, Hkv, ps, 1) per-token scale pools that ride the
+    same block-table index map; when present the kc/vc pools are int8
+    and the kernel dequantizes in-register.  Returns (B, Hkv, m, Rv)
+    in the query dtype.
     """
     B, Hkv, m, Rk = qg.shape
     ps = kc_pool.shape[2]
     Rv = vc_pool.shape[-1]
+    quant = kscale is not None
     grid = (B, Hkv, n_splits, span)
 
     def _kv_map(b, g, s, t, lens, btab):
@@ -210,16 +246,24 @@ def _kq_decode_paged_split(qg, kc_pool, vc_pool, lengths, block_table, *,
         return (btab[b, jnp.minimum(s * span + t, last)], g, 0, 0)
 
     kernel = functools.partial(_kq_decode_paged_split_kernel,
-                               page_size=ps, span=span, scale=scale)
+                               page_size=ps, span=span, scale=scale,
+                               quant=quant)
+    in_specs = [pl.BlockSpec((1, 1, m, Rk),
+                             lambda b, g, s, t, lens, btab: (b, g, 0, 0)),
+                pl.BlockSpec((1, 1, ps, Rk), _kv_map)]
+    inputs = [qg, kc_pool]
+    if quant:
+        in_specs.append(pl.BlockSpec((1, 1, ps, 1), _kv_map))
+        inputs.append(kscale)
+    in_specs.append(pl.BlockSpec((1, 1, ps, Rv), _kv_map))
+    inputs.append(vc_pool)
+    if quant:
+        in_specs.append(pl.BlockSpec((1, 1, ps, 1), _kv_map))
+        inputs.append(vscale)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, m, Rk),
-                         lambda b, g, s, t, lens, btab: (b, g, 0, 0)),
-            pl.BlockSpec((1, 1, ps, Rk), _kv_map),
-            pl.BlockSpec((1, 1, ps, Rv), _kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, 1, m, Rv),
                          lambda b, g, s, t, lens, btab: (b, g, s, 0, 0)),
@@ -240,7 +284,7 @@ def _kq_decode_paged_split(qg, kc_pool, vc_pool, lengths, block_table, *,
             jax.ShapeDtypeStruct((B, Hkv, n_splits, m, Rv), jnp.float32),
         ],
         interpret=interpret,
-    )(lengths, block_table, qg, kc_pool, vc_pool)
+    )(lengths, block_table, *inputs)
     out = combine_split_partials(o_parts, lse_parts[..., 0])
     return out.astype(qg.dtype)
 
@@ -394,7 +438,8 @@ def kq_decode_paged_attention(qc, kc_pool, vc_pool, lengths, block_table,
                               interpret: Optional[bool] = None,
                               max_len: Optional[int] = None,
                               pad_lanes: Optional[bool] = None,
-                              num_splits: int = 1):
+                              num_splits: int = 1,
+                              kscale=None, vscale=None):
     """qc: (B,H,Rk); kc_pool: (P,Hkv,ps,Rk); vc_pool: (P,Hkv,ps,Rv).
 
     ``lengths``: (B,) int32 live cache entries per sequence;
@@ -414,18 +459,33 @@ def kq_decode_paged_attention(qc, kc_pool, vc_pool, lengths, block_table,
     (and any bound that fits one page) dispatches the single-program
     kernel unchanged — the bitwise parity oracle for the split path.
 
+    ``kscale``/``vscale`` (both or neither) select the int8 page
+    layout (DESIGN.md §page-layouts): kc/vc pools hold int8 codes and
+    these (P, Hkv, ps, 1) pools hold the per-token bf16 amax scales,
+    streamed through the same block-table index maps and multiplied
+    back in-register after the int8 tiles land in VMEM — HBM reads
+    stay int8.
+
     Returns (B, H, Rv) group-aggregated values.
     """
+    if (kscale is None) != (vscale is None):
+        raise ValueError("kscale/vscale must be passed together")
+    quant = kscale is not None
     if interpret is None:
         interpret = default_interpret()
     if (not interpret) if pad_lanes is None else pad_lanes:
         rv = vc_pool.shape[-1]
         if qc.shape[-1] % 128 or rv % 128:
+            # zero-padding the rank axis is exact for int8 codes too
+            # (code 0 dequantizes to 0); the width-1 scale pools are
+            # left alone — their lane axis is handled by the interpret
+            # path, and on real TPU the scale tile would be widened at
+            # the BlockSpec level instead (not exercised here).
             out = kq_decode_paged_attention(
                 pad_to_lane(qc), pad_to_lane(kc_pool),
                 pad_to_lane(vc_pool), lengths, block_table, scale=scale,
                 interpret=interpret, max_len=max_len, pad_lanes=False,
-                num_splits=num_splits)
+                num_splits=num_splits, kscale=kscale, vscale=vscale)
             return out[..., :rv]
     B, H, Rk = qc.shape
     P, Hkv, ps, _ = kc_pool.shape
@@ -457,7 +517,8 @@ def kq_decode_paged_attention(qc, kc_pool, vc_pool, lengths, block_table,
         return _kq_decode_paged_split(
             qg, kc_pool, vc_pool, lengths, block_table, scale=scale,
             interpret=interpret, span=span, n_splits=n_splits,
-            bound=bound).reshape(B, H, Rv)
+            bound=bound, kscale=kscale,
+            vscale=vscale).reshape(B, H, Rv)
     grid = (B, Hkv, nt)
 
     def _kv_map(b, g, t, lens, btab):
@@ -468,16 +529,23 @@ def kq_decode_paged_attention(qc, kc_pool, vc_pool, lengths, block_table,
         return (btab[b, jnp.minimum(t, last)], g, 0, 0)
 
     kernel = functools.partial(_kq_decode_paged_kernel, page_size=ps,
-                               scale=scale)
+                               scale=scale, quant=quant)
+    in_specs = [pl.BlockSpec((1, 1, m, Rk),
+                             lambda b, g, t, lens, btab: (b, g, 0, 0)),
+                pl.BlockSpec((1, 1, ps, Rk), _kv_map)]
+    inputs = [qg, kc_pool]
+    if quant:
+        in_specs.append(pl.BlockSpec((1, 1, ps, 1), _kv_map))
+        inputs.append(kscale)
+    in_specs.append(pl.BlockSpec((1, 1, ps, Rv), _kv_map))
+    inputs.append(vc_pool)
+    if quant:
+        in_specs.append(pl.BlockSpec((1, 1, ps, 1), _kv_map))
+        inputs.append(vscale)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, m, Rk),
-                         lambda b, g, t, lens, btab: (b, g, 0, 0)),
-            pl.BlockSpec((1, 1, ps, Rk), _kv_map),
-            pl.BlockSpec((1, 1, ps, Rv), _kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, m, Rv),
                                lambda b, g, t, lens, btab: (b, g, 0, 0)),
         scratch_shapes=[
@@ -491,5 +559,5 @@ def kq_decode_paged_attention(qc, kc_pool, vc_pool, lengths, block_table,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hkv, m, Rv), qc.dtype),
         interpret=interpret,
-    )(lengths, block_table, qg, kc_pool, vc_pool)
+    )(lengths, block_table, *inputs)
     return out.reshape(B, H, Rv)

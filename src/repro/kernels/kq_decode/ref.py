@@ -42,6 +42,23 @@ def kq_decode_paged_attention_ref(qc, kc_pool, vc_pool, lengths,
     return kq_decode_attention_ref(qc, kc, vc, lengths, scale=scale)
 
 
+def kq_decode_paged_attention_int8_ref(qc, kc_pool, vc_pool, kscale, vscale,
+                                       lengths, block_table, *,
+                                       scale: float = 1.0):
+    """Int8-page oracle (DESIGN.md §page-layouts): dequantize the whole
+    pools in f32 — ``code * per-token amax scale`` — then run the fp
+    paged oracle.  The kernel's in-register dequant must match this
+    gather-then-dequant path to fp tolerance.
+
+    kc_pool/vc_pool: (P, Hkv, ps, R) int8 codes; kscale/vscale:
+    (P, Hkv, ps, 1) bf16 per-token scales.
+    """
+    kd = kc_pool.astype(jnp.float32) * kscale.astype(jnp.float32)
+    vd = vc_pool.astype(jnp.float32) * vscale.astype(jnp.float32)
+    return kq_decode_paged_attention_ref(qc, kd, vd, lengths, block_table,
+                                         scale=scale)
+
+
 def kq_decode_paged_attention_split_ref(qc, kc_pool, vc_pool, lengths,
                                         block_table, *, num_splits: int,
                                         scale: float = 1.0):

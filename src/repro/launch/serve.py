@@ -43,6 +43,21 @@ def main() -> None:
     ap.add_argument("--n-pages", type=int, default=0,
                     help="pool size; 0 derives full capacity, smaller "
                          "oversubscribes with admission backpressure")
+    ap.add_argument("--cache-quant", default="none",
+                    choices=["none", "int8", "svdq"],
+                    help="paged page layout (DESIGN.md §page-layouts): "
+                         "int8 = int8 pages + per-page scale pools with "
+                         "dequantize-on-the-fly decode; svdq = per-rank "
+                         "key bits allocated from the calibrated "
+                         "spectrum, packed sub-byte.  Implies --paged "
+                         "(svdq also chunked prefill); needs a "
+                         "compressed --method to take effect.")
+    ap.add_argument("--decode-splits", type=int, default=1,
+                    help="split-KV flash-decoding fan-out (DESIGN.md "
+                         "§split-kv): >1 = fixed, 0 = re-derived per "
+                         "step from the live max length (snapped to "
+                         "{1,2,4,8}), 1 = unsplit oracle.  Implies "
+                         "--paged.")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="chunked prefill straight into pages (DESIGN.md "
                          "§prefill): chunk size in tokens; 0 keeps the "
@@ -126,6 +141,18 @@ def main() -> None:
         args.prefill_chunk = 8
     if args.prefill_buckets and not args.prefill_chunk:
         ap.error("--prefill-buckets requires --prefill-chunk")
+    if args.cache_quant == "svdq" and not args.prefill_chunk:
+        print("--cache-quant svdq packs sub-byte ranks at page-write "
+              "time: enabling chunked prefill (--prefill-chunk 8)")
+        args.prefill_chunk = 8
+    if args.cache_quant != "none" and not args.paged:
+        print("--cache-quant selects a paged page layout: enabling "
+              "--paged")
+        args.paged = True
+    if args.decode_splits != 1 and not args.paged:
+        print("--decode-splits splits the paged page chain: enabling "
+              "--paged")
+        args.paged = True
     if args.prefill_chunk and not args.paged:
         print("--prefill-chunk writes straight into pages: enabling "
               "--paged")
@@ -175,7 +202,9 @@ def main() -> None:
                      audit=args.audit,
                      chaos_seed=args.chaos_seed,
                      chaos_rate=args.chaos_rate,
-                     max_num_batched_tokens=args.max_batched_tokens)
+                     max_num_batched_tokens=args.max_batched_tokens,
+                     cache_quant=args.cache_quant,
+                     decode_splits=args.decode_splits)
     eng = ServingEngine(cfg, params, sc, projections=proj)
     rng = np.random.default_rng(0)
     lens = rng.integers(min(4, args.prompt_len), args.prompt_len + 1,
@@ -226,6 +255,24 @@ def main() -> None:
         print(f"admission={args.admission}: preemptions="
               f"{eng.n_preempted} (swap out/in {eng.n_swapped_out}/"
               f"{eng.n_swapped_in}), failed={eng.n_failed}")
+        if args.cache_quant != "none":
+            # page-layout capacity story (DESIGN.md §page-layouts):
+            # packed vs fp bytes per cached token at the served ranks
+            from repro.serving.page_layouts import FpLayout, get_layout
+            lay = get_layout(eng.cfg)
+            rk, rv = eng.ranks
+            if eng.cfg.cache_quant == "none":
+                print(f"cache quant {args.cache_quant}: inert "
+                      f"(no compression projections; fp pages served)")
+            else:
+                fp = FpLayout()
+                packed = (lay.token_bytes("k", rk)
+                          + lay.token_bytes("v", rv))
+                full = (fp.token_bytes("k", rk)
+                        + fp.token_bytes("v", rv))
+                print(f"cache quant {args.cache_quant}: "
+                      f"{packed} packed vs {full} fp byte(s)/token "
+                      f"-> {full / packed:.2f}x resident capacity")
         if args.share_prefix:
             print(f"prefix sharing: {eng.n_shared_pages} page(s) / "
                   f"{eng.n_shared_tokens} token(s) shared, "

@@ -32,6 +32,7 @@ from repro.kernels.kq_decode.kq_decode import kq_decode_attention
 from repro.kernels.kq_decode.paged import (kq_decode_paged_attention,
                                            kq_prefill_paged_attention)
 from repro.models.layers import apply_rope, init_dense
+from repro.serving.page_layouts import get_layout, quantize_int8  # noqa: F401
 from repro.serving.paged_cache import (append_chunk, append_token,
                                        gather_pages)
 
@@ -78,6 +79,52 @@ def int8_decode_attention(qg, k8, v8, kscale, vscale, valid, scale):
     pv = prob * vscale.astype(jnp.float32)[:, :, None, :]
     return jnp.einsum("bgmt,bgtr->bgmr", pv.astype(jnp.bfloat16),
                       v8.astype(jnp.bfloat16))
+
+
+def int8_split_decode_attention(qg, k8, v8, kscale, vscale, valid, scale,
+                                num_splits):
+    """Split-KV twin of ``int8_decode_attention`` (DESIGN.md §split-kv).
+
+    Same segment / partial-LSE / combine algebra as
+    ``split_decode_attention``, but each segment runs the int8
+    dot-then-scale math (scores from int8 keys scaled per token, value
+    aggregation with the probability mass pre-multiplied by the value
+    scales), so the paged int8 lax path covers ``decode_splits > 1``
+    without a pallas kernel.  Shapes as in ``int8_decode_attention``."""
+    B, Hkv, m, _ = qg.shape
+    T = k8.shape[2]
+    S = max(1, min(int(num_splits), T))
+    seg = -(-T // S)
+    S = -(-T // seg)
+    s = jnp.einsum("bgmr,bgtr->bgmt", qg.astype(jnp.float32),
+                   k8.astype(jnp.float32)) * scale
+    s = s * kscale.astype(jnp.float32)[:, :, None, :]
+    if valid.ndim == 1:
+        vm = jnp.broadcast_to(valid[None, :], (B, T))
+    else:
+        vm = valid
+    s = jnp.where(vm[:, None, None, :], s, NEG_INF)
+    pad = S * seg - T
+    s = jnp.pad(s, ((0, 0),) * 3 + ((0, pad),),
+                constant_values=NEG_INF).reshape(B, Hkv, m, S, seg)
+    vmp = jnp.pad(vm, ((0, 0), (0, pad))).reshape(B, 1, 1, S, seg)
+    vs = jnp.pad(vscale.astype(jnp.float32), ((0, 0), (0, 0), (0, pad)))
+    vs = vs.reshape(B, Hkv, 1, S, seg)
+    v = jnp.pad(v8, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    v = v.reshape(B, Hkv, S, seg, -1).astype(jnp.bfloat16)
+    mx = jnp.max(s, axis=-1)                                 # (B,Hkv,m,S)
+    p = jnp.where(vmp, jnp.exp(s - mx[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    den = jnp.maximum(l, 1e-30)
+    pv = (p * vs).astype(jnp.bfloat16)
+    o = jnp.einsum("bgmst,bgstr->bgmsr", pv,
+                   v).astype(jnp.float32) / den[..., None]
+    lse = jnp.where(l > 0, mx + jnp.log(den), NEG_INF)       # (B,Hkv,m,S)
+    m_star = jnp.max(lse, axis=-1, keepdims=True)
+    w = jnp.exp(lse - m_star)
+    num = jnp.sum(w[..., None] * o, axis=-2)                 # (B,Hkv,m,rv)
+    agg = num / jnp.maximum(jnp.sum(w, axis=-1), 1e-30)[..., None]
+    return agg.astype(jnp.bfloat16)
 
 
 # ---------------------------------------------------------------------------
@@ -325,6 +372,7 @@ def chunk_decode_attention(qg, cache_k, cache_v, qpos, scale):
 
 
 def padded_heads(cfg: ModelConfig) -> int:
+    """Query-head count after TP padding (``qhead_pad`` or n_heads)."""
     return cfg.qhead_pad or cfg.n_heads
 
 
@@ -346,6 +394,8 @@ def head_mask(cfg: ModelConfig) -> Optional[jnp.ndarray]:
 
 
 def init_attention(key, cfg: ModelConfig, dtype) -> Dict[str, jnp.ndarray]:
+    """Init q/k/v/o projections (pad query heads zeroed, see
+    ``head_mask``)."""
     D, Hkv, dh = cfg.d_model, cfg.n_kv_heads, cfg.d_head
     Hp = padded_heads(cfg)
     k1, k2, k3, k4 = jax.random.split(key, 4)
@@ -373,6 +423,7 @@ def _qkv(p, x, cfg: ModelConfig, positions):
 
 
 def attn_train(p, x, cfg: ModelConfig, pos0: int = 0) -> jnp.ndarray:
+    """Full-sequence causal attention (training / no-cache path)."""
     S = x.shape[1]
     positions = jnp.arange(S) + pos0
     q, k, v = _qkv(p, x, cfg, positions)
@@ -387,6 +438,8 @@ def attn_train(p, x, cfg: ModelConfig, pos0: int = 0) -> jnp.ndarray:
 
 
 def attn_calibrate(p, x, cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict]:
+    """``attn_train`` plus captured q/k/v tensors for the KQ-SVD
+    calibration pass (pad query heads excluded from the captures)."""
     S = x.shape[1]
     positions = jnp.arange(S)
     q, k, v = _qkv(p, x, cfg, positions)
@@ -420,22 +473,28 @@ def group_output_weights(p, cfg: ModelConfig) -> np.ndarray:
     return wo.transpose(0, 2, 1, 3).reshape(Hkv, dh, m * D)
 
 
-def quantize_int8(x: jnp.ndarray, axis: int = -1):
-    """Symmetric per-vector int8 quantization: returns (q, scale)."""
-    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis)
-    scale = jnp.maximum(amax, 1e-8) / 127.0
-    q = jnp.clip(jnp.round(x.astype(jnp.float32)
-                           / scale[..., None]), -127, 127).astype(jnp.int8)
-    return q, scale.astype(jnp.bfloat16)
-
-
 def make_attn_cache(cfg: ModelConfig, batch: int, max_len: int,
-                    proj_rank: Tuple[int, int] = (0, 0), dtype=jnp.bfloat16):
-    """Empty cache pytree for one attention layer."""
+                    proj_rank: Tuple[int, int] = (0, 0), dtype=jnp.bfloat16,
+                    paged: bool = False):
+    """Empty cache pytree for one attention layer.
+
+    ``paged=True`` reinterprets (batch, max_len) as (pages, page_size)
+    and builds the pool leaves from the page layout ``cfg.cache_quant``
+    selects (DESIGN.md §page-layouts): fp data pages for ``FpLayout``
+    (bit-identical to the dense leaf shapes), int8/packed data pages
+    plus width-1 bf16 scale pools for the quantized layouts."""
     W = cfg.sliding_window or 0
     T = min(max_len, W) if W else max_len
     Hkv = cfg.n_kv_heads
     rk, rv = proj_rank
+    if paged and rk:
+        layout = get_layout(cfg)
+        cache = {}
+        for side, rank in (("k", rk), ("v", rv)):
+            for name, width, ldt in layout.leaves(side, rank):
+                cache[name] = jnp.zeros((batch, Hkv, T, width),
+                                        ldt or dtype)
+        return cache
     int8 = rk and cfg.cache_quant == "int8"
     if rk:
         cdt = jnp.int8 if int8 else dtype
@@ -522,10 +581,10 @@ def attn_prefill_chunk(p, x, cache: Dict, pos0, cfg: ModelConfig,
     if block_table is None:
         raise ValueError("attn_prefill_chunk requires a paged cache "
                          "(block_table)")
-    if cfg.sliding_window or cfg.cache_quant == "int8":
+    if cfg.sliding_window:
         raise NotImplementedError(
-            "chunked prefill supports full-attention bf16/f32 and "
-            "compressed layouts only (no sliding window, no int8)")
+            "chunked prefill supports full-attention stacks only "
+            "(no sliding window)")
     B, S, _ = x.shape
     dh = cfg.d_head
     scale = 1.0 / math.sqrt(dh)
@@ -548,12 +607,40 @@ def attn_prefill_chunk(p, x, cache: Dict, pos0, cfg: ModelConfig,
     if proj is not None:
         k_st = jnp.einsum("bhtd,hdr->bhtr", k_new, proj["a_k"])
         v_st = jnp.einsum("bhtd,hdr->bhtr", v_new, proj["a_v"])
-        kc = append_chunk(cache["kc"], block_table, pos0, k_st, wvalid)
-        vc = append_chunk(cache["vc"], block_table, pos0, v_st, wvalid)
-        new_cache = dict(cache, kc=kc, vc=vc)
+        layout = get_layout(cfg)
+        quant = layout.kernel != "fp"
+        if quant:
+            # quantized page layout (DESIGN.md §page-layouts): encode
+            # the chunk into data + scale leaves; every leaf writes
+            # through the same block table and valid mask, so scale
+            # pools stay in lockstep with their data pages
+            enc = {**layout.encode("k", k_st), **layout.encode("v", v_st)}
+            new_cache = dict(cache)
+            for name, val in enc.items():
+                new_cache[name] = append_chunk(cache[name], block_table,
+                                               pos0, val, wvalid)
+            kc, vc = new_cache["kc"], new_cache["vc"]
+        else:
+            kc = append_chunk(cache["kc"], block_table, pos0, k_st, wvalid)
+            vc = append_chunk(cache["vc"], block_table, pos0, v_st, wvalid)
+            new_cache = dict(cache, kc=kc, vc=vc)
         qg = q.reshape(B, Hkv, m_p, S, dh)
         qc = jnp.einsum("bgmsd,gdr->bgmsr", qg, proj["b_q"])
-        if cfg.use_pallas:
+        if quant:
+            # dequantize-then-attend lax twin: prefill is compute-bound
+            # (the decode kernels carry the int8 HBM story), so chunks
+            # gather + dequantize the written pages for every layout
+            rk_ = proj["a_k"].shape[-1]
+            rv_ = proj["a_v"].shape[-1]
+            k_seq = layout.decode("k", {
+                name: gather_pages(new_cache[name], block_table)
+                for name, _, _ in layout.leaves("k", rk_)}, rk_)
+            v_seq = layout.decode("v", {
+                name: gather_pages(new_cache[name], block_table)
+                for name, _, _ in layout.leaves("v", rv_)}, rv_)
+            agg = chunk_decode_attention(qc, k_seq, v_seq, positions,
+                                         scale)
+        elif cfg.use_pallas:
             # TPU runtime hot path: the prefill-append kernel streams
             # the written pages in place via the block table
             agg = kq_prefill_paged_attention(
@@ -607,11 +694,13 @@ def attn_decode(p, x, cache: Dict, pos, cfg: ModelConfig,
     q, k_new, v_new = _qkv(p, x, cfg, pos[:, None, None])   # S=1
     W = cfg.sliding_window or 0
     paged = block_table is not None
+    layout = get_layout(cfg) if paged else None
+    quant = paged and proj is not None and layout.kernel != "fp"
     if paged:
-        if W or cfg.cache_quant == "int8":
+        if W:
             raise NotImplementedError(
-                "paged cache supports full-attention bf16/f32 and "
-                "compressed layouts only (no sliding window, no int8)")
+                "paged cache supports full-attention stacks only "
+                "(no sliding window)")
         T = block_table.shape[1] * cache[
             "kc" if proj is not None else "k"].shape[2]
     else:
@@ -620,17 +709,27 @@ def attn_decode(p, x, cache: Dict, pos, cfg: ModelConfig,
     if proj is not None:
         k_st = jnp.einsum("bhtd,hdr->bhtr", k_new, proj["a_k"])
         v_st = jnp.einsum("bhtd,hdr->bhtr", v_new, proj["a_v"])
-        int8 = cfg.cache_quant == "int8"
+        int8 = cfg.cache_quant == "int8" and not paged
         if int8:
             k_st, ks_new = quantize_int8(k_st)
             v_st, vs_new = quantize_int8(v_st)
-        if paged:
+        if quant:
+            # quantized page layout (DESIGN.md §page-layouts): encode
+            # the token into data + scale leaves, each appended through
+            # the same block table (scale pools move in lockstep)
+            enc = {**layout.encode("k", k_st), **layout.encode("v", v_st)}
+            new_cache = dict(cache)
+            for name, val in enc.items():
+                new_cache[name] = append_token(cache[name], block_table,
+                                               pos, val[:, :, 0])
+        elif paged:
             kc = append_token(cache["kc"], block_table, pos, k_st[:, :, 0])
             vc = append_token(cache["vc"], block_table, pos, v_st[:, :, 0])
+            new_cache = dict(cache, kc=kc, vc=vc)
         else:
             kc = scatter_time(cache["kc"], k_st, slot)
             vc = scatter_time(cache["vc"], v_st, slot)
-        new_cache = dict(cache, kc=kc, vc=vc)
+            new_cache = dict(cache, kc=kc, vc=vc)
         if int8:
             new_cache["kscale"] = scatter_time(
                 cache["kscale"], ks_new.astype(jnp.bfloat16), slot)
@@ -643,7 +742,7 @@ def attn_decode(p, x, cache: Dict, pos, cfg: ModelConfig,
         qg = q.reshape(B, Hkv, m_p, dh)
         qc = jnp.einsum("bgmd,gdr->bgmr", qg, proj["b_q"]).reshape(
             B, Hp, 1, -1)
-        keys, vals = kc, vc
+        keys, vals = new_cache["kc"], new_cache["vc"]
         qq = qc
     else:
         if paged:
@@ -661,12 +760,54 @@ def attn_decode(p, x, cache: Dict, pos, cfg: ModelConfig,
         valid = (slot_pos >= 0) & (slot_pos > pos[:, None] - W)
     else:
         valid = jnp.arange(T)[None, :] <= pos[:, None]      # (B, T)
-    if proj is not None and cfg.cache_quant == "int8":
+    if proj is not None and cfg.cache_quant == "int8" and not paged:
         Hkv = cfg.n_kv_heads
         m = padded_heads(cfg) // Hkv
         agg = int8_decode_attention(
             qq.reshape(B, Hkv, m, -1), keys, vals, new_cache["kscale"],
             new_cache["vscale"], valid, scale)
+    elif quant and layout.kernel == "int8":
+        # paged int8 (DESIGN.md §page-layouts): the pallas kernel
+        # dequantizes on the fly from int8 pages + scale pools (unsplit
+        # and split-KV variants); the lax twin runs the same
+        # dot-then-scale math on gathered pages
+        Hkv = cfg.n_kv_heads
+        if cfg.use_pallas:
+            agg = kq_decode_paged_attention(
+                qq.reshape(B, -1, qq.shape[-1]), keys, vals, pos + 1,
+                block_table, scale=scale, max_len=T,
+                num_splits=num_splits, kscale=new_cache["kscale"],
+                vscale=new_cache["vscale"]).reshape(
+                    B, Hkv, -1, vals.shape[-1])
+        else:
+            m_p2 = padded_heads(cfg) // Hkv
+            k8 = gather_pages(keys, block_table)
+            v8 = gather_pages(vals, block_table)
+            ks = gather_pages(new_cache["kscale"], block_table)[..., 0]
+            vs = gather_pages(new_cache["vscale"], block_table)[..., 0]
+            qg2 = qq.reshape(B, Hkv, m_p2, -1)
+            if num_splits > 1:
+                agg = int8_split_decode_attention(
+                    qg2, k8, v8, ks, vs, valid, scale, num_splits)
+            else:
+                agg = int8_decode_attention(qg2, k8, v8, ks, vs, valid,
+                                            scale)
+    elif quant:
+        # svdq is lax-only (layout.kernel is None): unpack + dequantize
+        # the gathered pages, then the fp decode twins
+        rk_ = proj["a_k"].shape[-1]
+        rv_ = proj["a_v"].shape[-1]
+        k_seq = layout.decode("k", {
+            name: gather_pages(new_cache[name], block_table)
+            for name, _, _ in layout.leaves("k", rk_)}, rk_)
+        v_seq = layout.decode("v", {
+            name: gather_pages(new_cache[name], block_table)
+            for name, _, _ in layout.leaves("v", rv_)}, rv_)
+        if num_splits > 1:
+            agg = split_decode_attention(qq, k_seq, v_seq, valid, scale,
+                                         num_splits)
+        else:
+            agg = decode_attention(qq, k_seq, v_seq, valid, scale)
     elif paged and proj is not None and cfg.use_pallas:
         # TPU runtime hot path, paged: the kernel dereferences the block
         # table via scalar prefetch — no page gather is materialized

@@ -62,6 +62,8 @@ def attn_sublayer_index(cfg: ModelConfig, step: List[int]) -> Optional[int]:
 
 
 def init_layer(key, cfg: ModelConfig, layer_idx: int, dtype) -> Dict:
+    """Init one transformer layer's params for its configured kind
+    (attn / mla / ssm sublayer plus dense or MoE FFN)."""
     kind = cfg.layer_kinds()[layer_idx]
     fk = cfg.ffn_kind(layer_idx)
     k1, k2, k3 = jax.random.split(key, 3)
@@ -176,10 +178,14 @@ def apply_layer(p: Dict, x, cfg: ModelConfig, layer_idx: int, mode: str,
 
 
 def init_layer_cache(cfg: ModelConfig, layer_idx: int, batch: int,
-                     max_len: int, ranks: Tuple[int, int], dtype):
+                     max_len: int, ranks: Tuple[int, int], dtype,
+                     paged: bool = False):
+    """Empty decode-cache pytree for one layer (``paged``: pool leaves
+    built from the configured page layout; attention layers only)."""
     kind = cfg.layer_kinds()[layer_idx]
     if kind == "attn":
-        return attn_mod.make_attn_cache(cfg, batch, max_len, ranks, dtype)
+        return attn_mod.make_attn_cache(cfg, batch, max_len, ranks, dtype,
+                                        paged)
     if kind == "mla":
         return mla_mod.make_mla_cache(cfg, batch, max_len, ranks, dtype)
     return ssm_mod.make_ssm_state(cfg.ssm, cfg.d_model, batch, dtype)

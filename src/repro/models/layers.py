@@ -9,6 +9,7 @@ import numpy as np
 
 
 def dtype_of(name: str):
+    """jnp dtype for a ModelConfig.dtype name."""
     return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
             "float16": jnp.float16}[name]
 
@@ -20,6 +21,7 @@ def dtype_of(name: str):
 
 def rms_norm(x: jnp.ndarray, gain: jnp.ndarray,
              eps: float = 1e-5) -> jnp.ndarray:
+    """RMSNorm over the last axis (fp32 statistics, input dtype out)."""
     dt = x.dtype
     x32 = x.astype(jnp.float32)
     var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
@@ -28,6 +30,7 @@ def rms_norm(x: jnp.ndarray, gain: jnp.ndarray,
 
 
 def init_rms(d: int, dtype) -> jnp.ndarray:
+    """Unit gain vector for ``rms_norm``."""
     return jnp.ones((d,), dtype=dtype)
 
 
@@ -37,6 +40,7 @@ def init_rms(d: int, dtype) -> jnp.ndarray:
 
 
 def rope_frequencies(d_head: int, theta: float) -> np.ndarray:
+    """(d_head/2,) inverse-frequency ladder for rotary embeddings."""
     return 1.0 / (theta ** (np.arange(0, d_head, 2, dtype=np.float64)
                             / d_head))
 
@@ -63,6 +67,7 @@ def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
 
 
 def swiglu(params: Dict[str, jnp.ndarray], x: jnp.ndarray) -> jnp.ndarray:
+    """SwiGLU MLP: ``wo @ (silu(wg x) * wi x)``."""
     h = jnp.einsum("...d,df->...f", x, params["wi"])
     g = jnp.einsum("...d,df->...f", x, params["wg"])
     h = h * jax.nn.sigmoid(g.astype(jnp.float32)).astype(h.dtype) * g
@@ -71,6 +76,7 @@ def swiglu(params: Dict[str, jnp.ndarray], x: jnp.ndarray) -> jnp.ndarray:
 
 
 def init_swiglu(key, d: int, ff: int, dtype) -> Dict[str, jnp.ndarray]:
+    """Fan-in scaled gaussian init for the three SwiGLU matrices."""
     k1, k2, k3 = jax.random.split(key, 3)
     s_in = 1.0 / np.sqrt(d)
     s_out = 1.0 / np.sqrt(ff)
@@ -82,4 +88,5 @@ def init_swiglu(key, d: int, ff: int, dtype) -> Dict[str, jnp.ndarray]:
 
 
 def init_dense(key, shape: Tuple[int, ...], fan_in: int, dtype):
+    """Gaussian init scaled by ``1/sqrt(fan_in)``."""
     return (jax.random.normal(key, shape) / np.sqrt(fan_in)).astype(dtype)

@@ -37,6 +37,8 @@ _scatter_seq = functools.partial(scatter_time, axis=0)
 
 
 def init_mla(key, cfg: ModelConfig, dtype) -> Dict:
+    """Init multi-head latent attention params (down/up projections,
+    decoupled rope path, output projection)."""
     m = cfg.mla
     D, H = cfg.d_model, cfg.n_heads
     qk = m.qk_nope_dim + m.qk_rope_dim
@@ -116,6 +118,8 @@ def mla_group_output_weights(p, cfg: ModelConfig) -> np.ndarray:
 
 def make_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
                    proj_rank: Tuple[int, int] = (0, 0), dtype=jnp.bfloat16):
+    """Zeroed (B, T, R) MLA decode cache — compressed ``cc``/``ccv``
+    leaves when KQ-SVD ranks are given, else the raw latent ``c``."""
     m = cfg.mla
     rk, rv = proj_rank
     if rk:
@@ -129,6 +133,7 @@ def make_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 def mla_prefill(p, x, cfg: ModelConfig, max_len: int,
                 proj: Optional[Dict] = None):
+    """Full-prompt MLA prefill: outputs plus a populated decode cache."""
     B, S, D = x.shape
     y = mla_train(p, x, cfg)
     positions = jnp.arange(S)

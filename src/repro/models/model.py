@@ -57,6 +57,9 @@ def _add_aux(acc, aux):
 
 
 class LM:
+    """The language model: layer stack + embed/head, with train,
+    prefill (full and chunked/paged) and decode entry points."""
+
     def __init__(self, cfg: ModelConfig):
         self.cfg = cfg
         self.dtype = dtype_of(cfg.dtype)
@@ -71,6 +74,7 @@ class LM:
     # -- init ---------------------------------------------------------------
 
     def init(self, rng) -> Dict[str, Any]:
+        """Init all model parameters (embed, head, layer stack)."""
         cfg = self.cfg
         k_embed, k_head, k_pre, k_body = jax.random.split(rng, 4)
         params: Dict[str, Any] = {
@@ -257,12 +261,14 @@ class LM:
     # -- public entry points ---------------------------------------------------
 
     def train_logits(self, params, batch):
+        """Full-sequence logits + aux losses (training forward)."""
         x = self._embed(params, batch)
         x, _, _, aux = self._run_stack(params, x, "train")
         x = rms_norm(x, params["final_norm"], self.cfg.rms_eps)
         return self._logits(params, x), aux
 
     def prefill(self, params, batch, max_len: int, proj=None):
+        """Full-prompt prefill: last-token logits + populated cache."""
         x = self._embed(params, batch)
         x, cache, _, _ = self._run_stack(params, x, "prefill", proj=proj,
                                          max_len=max_len)
@@ -348,15 +354,20 @@ class LM:
     # -- caches & projections ---------------------------------------------------
 
     def init_cache(self, batch: int, max_len: int,
-                   ranks: Tuple[int, int] = (0, 0), dtype=None):
+                   ranks: Tuple[int, int] = (0, 0), dtype=None,
+                   paged: bool = False):
+        """Empty decode cache; ``paged=True`` builds page-pool leaves
+        from the configured page layout (DESIGN.md §page-layouts)."""
         cfg = self.cfg
         dtype = dtype or self.dtype
-        prefix = [init_layer_cache(cfg, i, batch, max_len, ranks, dtype)
+        prefix = [init_layer_cache(cfg, i, batch, max_len, ranks, dtype,
+                                   paged)
                   for i in self.prefix]
         step_caches = []
         for st in (self.steps[:1] if cfg.scan_layers else self.steps):
             step_caches.append({"layers": tuple(
-                init_layer_cache(cfg, l, batch, max_len, ranks, dtype)
+                init_layer_cache(cfg, l, batch, max_len, ranks, dtype,
+                                 paged)
                 for l in st)})
         if self.steps:
             if cfg.scan_layers:
@@ -385,10 +396,11 @@ class LM:
             raise NotImplementedError(
                 f"paged cache supports plain attention stacks only "
                 f"(layer kinds: {sorted(kinds)})")
-        if cfg.sliding_window or cfg.cache_quant == "int8":
+        if cfg.sliding_window:
             raise NotImplementedError(
-                "paged cache: sliding window / int8 not supported")
-        return self.init_cache(n_phys_pages, page_size, ranks, dtype)
+                "paged cache: sliding window not supported")
+        return self.init_cache(n_phys_pages, page_size, ranks, dtype,
+                               paged=True)
 
     def projections_pytree(self, mp: ModelProjections, dtype=None):
         """Convert solved ModelProjections to the runtime pytree."""
@@ -412,4 +424,5 @@ class LM:
 
 @functools.lru_cache(maxsize=None)
 def build_model(cfg: ModelConfig) -> LM:
+    """Memoized ``LM`` for a (frozen, hashable) ModelConfig."""
     return LM(cfg)

@@ -37,6 +37,8 @@ from repro.sharding.partition import axis_size, shard
 
 
 def init_moe(key, d_model: int, mo: MoEConfig, dtype) -> Dict:
+    """Init router (fp32) + stacked expert SwiGLU weights, plus the
+    shared-expert params when configured."""
     keys = jax.random.split(key, 8)
     E, ff = mo.n_experts, mo.expert_ff
     p = {

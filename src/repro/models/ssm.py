@@ -34,6 +34,8 @@ def _dims(s: SSMConfig, d_model: int):
 
 
 def init_ssm(key, d_model: int, s: SSMConfig, dtype) -> Dict:
+    """Init Mamba-2 style SSM params (fused in-proj, depthwise conv,
+    per-head decay/dt/skip, gated-norm out-proj)."""
     d_in, nh, conv_dim = _dims(s, d_model)
     keys = jax.random.split(key, 4)
     proj_out = 2 * d_in + 2 * s.n_groups * s.d_state + nh
@@ -198,6 +200,7 @@ def ssm_decode(p: Dict, x: jnp.ndarray, state: Dict, s: SSMConfig
 
 def make_ssm_state(s: SSMConfig, d_model: int, batch: int,
                    dtype=jnp.bfloat16) -> Dict:
+    """Zeroed recurrent state: conv tail + fp32 SSM state tensor."""
     d_in, nh, conv_dim = _dims(s, d_model)
     return {
         "conv": jnp.zeros((batch, conv_dim, s.d_conv - 1), dtype),

@@ -248,6 +248,16 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, sc: ServeConfig,
                  projections: Optional[ModelProjections] = None,
                  faults: Optional[FaultInjector] = None):
+        # the serve config owns the paged page layout (DESIGN.md
+        # §page-layouts): fold it into the model config before
+        # build_model so every attention path — prefill staging,
+        # chunked prefill, decode — resolves the same layout.
+        # Quantized layouts compress the projected R_k/R_v page
+        # entries (the paper's setting); a full-cache engine (no
+        # projections) has none, so it keeps serving fp pages and the
+        # request is recorded inert rather than rejected.
+        if sc.cache_quant != "none" and projections is not None:
+            cfg = dataclasses.replace(cfg, cache_quant=sc.cache_quant)
         self.cfg = cfg
         self.sc = sc
         # explicit injector (tests / chaos drivers) wins over the
@@ -262,21 +272,26 @@ class ServingEngine:
                       if projections is not None else (0, 0))
         if sc.paged:
             self._validate_paged()
-        # split-KV flash-decoding fan-out (DESIGN.md §split-kv):
-        # resolved once at construction — 0 derives the heuristic from
-        # the static length bound, so every decode dispatch compiles
-        # with one static split count
+        # split-KV flash-decoding fan-out (DESIGN.md §split-kv): a
+        # fixed positive count is resolved once at construction; 0
+        # re-derives the count per step from the live maximum sequence
+        # length, snapped down to {1, 2, 4, 8} so the decode dispatch
+        # compiles at most four split variants
         self._decode_splits = 1
+        self._dynamic_splits = False
         if sc.paged:
-            self._decode_splits = (sc.decode_splits or
-                                   default_decode_splits(sc.max_seq_len,
-                                                         sc.page_size))
+            if sc.decode_splits:
+                self._decode_splits = sc.decode_splits
+            else:
+                self._dynamic_splits = True
         self._prefill = jax.jit(self._prefill_impl)
         self._insert = jax.jit(self._insert_impl)
         self._paged_insert = jax.jit(self._paged_insert_impl)
         self._prefill_chunk = jax.jit(self._prefill_chunk_impl)
-        self._decode_chunk = jax.jit(self._decode_chunk_impl)
-        self._fused_step = jax.jit(self._fused_step_impl)
+        self._decode_chunk = jax.jit(self._decode_chunk_impl,
+                                     static_argnames=("num_splits",))
+        self._fused_step = jax.jit(self._fused_step_impl,
+                                   static_argnames=("num_splits",))
         self._fork_page = jax.jit(self._fork_page_impl)
         self.rng = jax.random.PRNGKey(sc.seed)
         # distinct chunk shapes traced so far — the compile-count bound
@@ -292,9 +307,43 @@ class ServingEngine:
             raise NotImplementedError(
                 f"paged serving supports plain attention stacks only "
                 f"(layer kinds: {sorted(kinds)})")
-        if cfg.sliding_window or cfg.cache_quant == "int8":
+        if cfg.sliding_window:
             raise NotImplementedError(
-                "paged serving: sliding window / int8 not supported")
+                "paged serving: sliding window not supported")
+        if cfg.cache_quant != "none" and self.sc.cache_quant == "none":
+            raise NotImplementedError(
+                "paged serving selects its page layout via "
+                "ServeConfig.cache_quant (DESIGN.md §page-layouts); "
+                "ModelConfig.cache_quant alone configures the *dense* "
+                "int8 cache only")
+
+    def _splits_for_step(self, live_max: int) -> int:
+        """Static split count for one decode dispatch.
+
+        Fixed ``decode_splits`` passes through; dynamic mode
+        (``decode_splits == 0``) feeds the *live* maximum sequence
+        length — the tokens this chunk can actually touch, not the
+        ``max_seq_len`` worst case — through the split heuristic and
+        snaps the result down to {1, 2, 4, 8}, bounding the dispatch
+        at four compiled variants per engine lifetime."""
+        if not self._dynamic_splits:
+            return self._decode_splits
+        raw = default_decode_splits(
+            max(1, min(live_max, self.sc.max_seq_len)), self.sc.page_size)
+        for snapped in (8, 4, 2):
+            if raw >= snapped:
+                return snapped
+        return 1
+
+    def _live_splits(self, live: np.ndarray) -> int:
+        """Split count for the chunk about to dispatch: the live slots'
+        deepest position plus the chunk's growth is the most cache the
+        scan can touch."""
+        if not self.sc.paged or not self._dynamic_splits:
+            return self._decode_splits
+        pos_np = np.asarray(self._pos)
+        live_max = int(pos_np[live].max()) if live.any() else 1
+        return self._splits_for_step(live_max + self.sc.decode_chunk)
 
     # -- jitted internals ---------------------------------------------------
 
@@ -353,19 +402,32 @@ class ServingEngine:
         prefill contract is unchanged); they are cut into
         (T / page_size) pages and the first ``len(phys)`` — the pages
         the prompt occupies — are written at the allocated physical
-        ids.  Compiles once per distinct page count, same as prefill
+        ids.  Int8-layout staging additionally carries (1, Hkv, T)
+        scale leaves (the dense int8 prefill contract), repaged into
+        the (P, Hkv, ps, 1) scale pools in lockstep with their data
+        pages.  Compiles once per distinct page count, same as prefill
         per distinct length.  The chunked path writes pages directly
         and never builds this staging buffer."""
         ps = self.sc.page_size
         n = phys.shape[0]
 
-        def _repage0(pool, dense):           # dense (1, Hkv, T, R)
+        def _repage0(pool, dense):           # dense (1, Hkv, T[, R])
+            if dense.ndim == 3:              # scale leaf: (1, Hkv, T)
+                hkv, t = dense.shape[1:]
+                pages = dense[0].reshape(hkv, t // ps, ps).transpose(
+                    1, 0, 2)[..., None]
+                return pool.at[phys].set(pages[:n].astype(pool.dtype))
             hkv, t, r = dense.shape[1:]
             pages = dense[0].reshape(hkv, t // ps, ps, r).transpose(
                 1, 0, 2, 3)
             return pool.at[phys].set(pages[:n].astype(pool.dtype))
 
-        def _repage1(pool, dense):           # (n_steps, 1, Hkv, T, R)
+        def _repage1(pool, dense):           # (n_steps, 1, Hkv, T[, R])
+            if dense.ndim == 4:              # scale leaf
+                nl, _, hkv, t = dense.shape
+                pages = dense[:, 0].reshape(nl, hkv, t // ps, ps).transpose(
+                    0, 2, 1, 3)[..., None]
+                return pool.at[:, phys].set(pages[:, :n].astype(pool.dtype))
             nl, _, hkv, t, r = dense.shape
             pages = dense[:, 0].reshape(nl, hkv, t // ps, ps, r).transpose(
                 0, 2, 1, 3, 4)
@@ -395,13 +457,16 @@ class ServingEngine:
         return out
 
     def _decode_chunk_impl(self, params, proj, cache, logits, pos, emitted,
-                           max_new, done, trunc, rng, block_table):
+                           max_new, done, trunc, rng, block_table,
+                           num_splits=1):
         """Fused ``decode_chunk``-step decode, fully on device.
 
         logits: (B, V) next-token logits per slot; pos: (B,) index where
         each slot's next token will be written (== live length); the
         sampled-token / emit-mask streams come back (N, B).
-        ``block_table`` is None for the dense cache."""
+        ``block_table`` is None for the dense cache.  ``num_splits``
+        (static) selects split-KV flash-decoding in the paged path —
+        ``_splits_for_step`` resolves it per dispatch."""
         T = self.sc.max_seq_len
         temp = self.sc.temperature
         eos = self.sc.eos_token
@@ -412,7 +477,7 @@ class ServingEngine:
             if self.proj is not None:
                 kw["proj"] = proj
             if block_table is not None:
-                kw["num_splits"] = self._decode_splits
+                kw["num_splits"] = num_splits
             return self.model.decode_step(params, cache, tokens, fpos,
                                           **kw)
 
@@ -460,7 +525,8 @@ class ServingEngine:
 
     def _fused_step_impl(self, params, proj, cache, pf_tokens, pf_pos0,
                          pf_n_valid, pf_row, logits, pos, emitted,
-                         max_new, done, trunc, rng, block_table):
+                         max_new, done, trunc, rng, block_table,
+                         num_splits=1):
         """One fused scheduling iteration: a prefill chunk piggybacks
         on the decode scan in a single device dispatch (sarathi-style,
         DESIGN.md §scheduler).
@@ -478,7 +544,7 @@ class ServingEngine:
             params, proj, cache, pf_tokens, pf_pos0, pf_n_valid, pf_row)
         carry, toks, emits = self._decode_chunk_impl(
             params, proj, cache, logits, pos, emitted, max_new, done,
-            trunc, rng, block_table)
+            trunc, rng, block_table, num_splits)
         return last, carry, toks, emits
 
     # -- capacity accounting --------------------------------------------------
@@ -1520,7 +1586,7 @@ class ServingEngine:
         carry, toks, emits = self._decode_chunk(
             self.params, self.proj, self._cache, self._logits, self._pos,
             self._emitted, self._max_new, self._done, self._trunc,
-            self.rng, btab_dev)
+            self.rng, btab_dev, num_splits=self._live_splits(live))
         (self._logits, self._cache, self._pos, self._emitted, self._done,
          self._trunc, self.rng) = carry
         freed = self._harvest(live, toks, emits)
@@ -1639,6 +1705,7 @@ class ServingEngine:
             btab_dev = self._btabs.device(live=live)
             self.peak_used_pages = max(self.peak_used_pages,
                                        self.pool.used_count)
+            num_splits = self._live_splits(live)
             if fused is not None:
                 fb, fr, fstart, fn, fbucket, ftoks = fused
                 last, carry, toks, emits = self._fused_step(
@@ -1649,7 +1716,7 @@ class ServingEngine:
                     jnp.asarray(self._btabs.rows[fb: fb + 1]),
                     self._logits, self._pos, self._emitted,
                     self._max_new, self._done, self._trunc, self.rng,
-                    btab_dev)
+                    btab_dev, num_splits=num_splits)
                 (self._logits, self._cache, self._pos, self._emitted,
                  self._done, self._trunc, self.rng) = carry
                 # after the carry unpack: activation must overwrite
@@ -1660,7 +1727,8 @@ class ServingEngine:
                 carry, toks, emits = self._decode_chunk(
                     self.params, self.proj, self._cache, self._logits,
                     self._pos, self._emitted, self._max_new,
-                    self._done, self._trunc, self.rng, btab_dev)
+                    self._done, self._trunc, self.rng, btab_dev,
+                    num_splits=num_splits)
                 (self._logits, self._cache, self._pos, self._emitted,
                  self._done, self._trunc, self.rng) = carry
             freed = self._harvest(live, toks, emits)

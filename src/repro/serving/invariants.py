@@ -21,6 +21,10 @@ not corrupt:
   accounting; occupied slots own at most their reserved worst case,
   their private-page count is sane, and their decode position /
   prefill progress fits inside the pages they own;
+* **page-layout agreement** (DESIGN.md §page-layouts): every paged
+  layer's cache leaves match the configured ``PageLayout`` schema —
+  names, pool-sized page axis, widths, dtypes — so quantized data
+  pages and their scale-pool pages cannot drift out of lockstep;
 * **swap/pending agreement**: every saved swap state belongs to a
   request currently waiting in the pending queue.
 
@@ -41,6 +45,7 @@ from typing import Dict, List
 import numpy as np
 
 from repro.serving.paged_cache import GARBAGE_PAGE, pages_needed
+from repro.serving.page_layouts import get_layout
 
 
 class InvariantViolation(AssertionError):
@@ -189,6 +194,50 @@ def _audit_slots(eng, bad: List[str]) -> None:
                            f"only {owned} pages")
 
 
+def _audit_layout(eng, bad: List[str]) -> None:
+    """Page-layout agreement (DESIGN.md §page-layouts): every paged
+    attention layer's cache must match the configured layout's schema
+    — same leaf names, a pool-sized leading page axis, and the
+    declared per-leaf widths/dtypes — so a quantized data page can
+    never drift out of lockstep with its scale-pool page (allocation,
+    COW forks and swaps move whole leaf sets through ``tree.map``,
+    which this check keeps honest)."""
+    rk, rv = eng.ranks
+    if not rk:
+        return                       # full-cache pages: single kc/vc pair
+    layout = get_layout(eng.cfg)
+    expect = {}
+    for side, rank in (("k", rk), ("v", rv)):
+        for name, width, dtype in layout.leaves(side, rank):
+            expect[name] = (width, dtype)
+    n_rows = eng.pool.n_pages + 1    # + the garbage page
+
+    def _check(tag: str, leaves, lead: int) -> None:
+        if set(leaves) != set(expect):
+            bad.append(f"{tag}: cache leaves {sorted(leaves)} != "
+                       f"layout {layout.name!r} schema {sorted(expect)}")
+            return
+        for name, arr in leaves.items():
+            width, dtype = expect[name]
+            if arr.shape[lead] != n_rows:
+                bad.append(f"{tag}/{name}: page axis {arr.shape[lead]} "
+                           f"!= pool size {n_rows}")
+            if arr.shape[-1] != width:
+                bad.append(f"{tag}/{name}: width {arr.shape[-1]} != "
+                           f"layout width {width}")
+            if dtype is not None and arr.dtype != dtype:
+                bad.append(f"{tag}/{name}: dtype {arr.dtype} != "
+                           f"layout dtype {dtype}")
+
+    for i, layer in enumerate(eng._cache["prefix"]):
+        _check(f"prefix layer {i}", layer, 0)
+    steps = eng._cache["steps"]
+    if steps is not None:
+        # stacked scan steps: leaves carry a leading (n_steps,) axis
+        for j, layer in enumerate(steps["layers"]):
+            _check(f"steps sublayer {j}", layer, 1)
+
+
 def _audit_swapped(eng, bad: List[str]) -> None:
     pending_ids = {id(r) for r in eng._pending}
     for key in eng._swapped:
@@ -207,6 +256,7 @@ def audit(eng) -> None:
     if eng.sc.paged and eng.pool is not None:
         _audit_pool(eng, bad)
         _audit_block_tables(eng, bad)
+        _audit_layout(eng, bad)
         _audit_swapped(eng, bad)
     _audit_slots(eng, bad)
     if bad:

@@ -1,0 +1,336 @@
+"""Pluggable per-page byte formats for the paged KV cache.
+
+DESIGN.md §page-layouts.  The page store (``PagePool`` allocation,
+``BlockTables``, COW forks, swaps, the paged kernels) historically
+assumed one byte format: fp pages holding the compressed ``R_k``/``R_v``
+entries at the cache dtype.  A ``PageLayout`` makes the format a
+first-class component instead: it names the pool leaves one attention
+layer needs per side (data pages plus any per-page aux pools such as
+quantization scales), encodes new cache entries into those leaves, and
+decodes gathered pages back to floating point for the lax reference
+paths.  Because every leaf is an ordinary ``(P, Hkv, page_size, width)``
+pool, the whole paged machinery — refcounted allocation, block tables,
+``append_token``/``append_chunk``, ``copy_page`` COW forks,
+``swap_out``/``swap_in`` with crc checksums, chaos injection, invariant
+audits — applies to aux pools in lockstep with their data pages with no
+layout-specific code.
+
+Three layouts:
+
+* ``FpLayout`` — today's behavior, bitwise: one fp leaf per side at the
+  cache dtype.  The parity oracle every engine leg runs on.
+* ``Int8Layout`` — int8 data pages plus a per-token bf16 scale pool
+  (``kscale``/``vscale``, trailing width 1).  Same symmetric per-vector
+  quantizer as the dense int8 cache (``quantize_int8``), so paged and
+  dense int8 decode agree exactly.  The paged Pallas decode kernel
+  dequantizes on the fly, so HBM reads stay int8.
+* ``SvdqLayout`` — SVDq-style per-rank bit allocation on the key side
+  (PAPERS.md, arXiv 2502.15304): the calibrated SVD spectrum orders
+  latent directions by attention-fidelity energy, so high-energy ranks
+  keep 8 bits while tail ranks drop to 4 or 2, nibble/crumb-packed into
+  a single uint8 page stride narrower than the rank count.  The value
+  side stays plain int8 (SVDq is a key-cache method; values lack the
+  score-path energy ordering).
+
+Quantization error contract (tests/test_page_layouts.py): with the
+per-vector scale ``s = max(|x|) / 127`` and the per-rank step widening
+``w_b = 127 / (2^(b-1) - 1)``, a rank stored at ``b`` bits reconstructs
+within ``0.75 * s * w_b`` per component (0.5 from rounding, the rest
+from storing ``s`` in bf16) — no clipping occurs because the max
+representable value at every width is exactly ``amax``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+VALID_CACHE_QUANT = ("none", "int8", "svdq")
+
+#: leaf spec: (leaf name, trailing width, dtype or None for cache dtype)
+LeafSpec = Tuple[str, int, Optional[jnp.dtype]]
+
+
+def quantize_int8(x: jnp.ndarray, axis: int = -1):
+    """Symmetric per-vector int8 quantization: returns (q, scale).
+
+    The scale is computed in f32 (``max(|x|, 1e-8) / 127``) and returned
+    as bf16 — the storage dtype of every scale pool and of the dense
+    int8 cache's scale planes.
+    """
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32)
+                           / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# Sub-byte packing helpers (pure jnp, jit-safe)
+# ---------------------------------------------------------------------------
+
+
+def pack_nibbles(u: jnp.ndarray) -> jnp.ndarray:
+    """Pack (..., n) uint8 values in [0, 15] two-per-byte -> (..., ceil(n/2)).
+
+    Odd counts are padded with 7 (the zero code at 4 bits)."""
+    n = u.shape[-1]
+    if n % 2:
+        pad = jnp.full(u.shape[:-1] + (1,), 7, jnp.uint8)
+        u = jnp.concatenate([u, pad], axis=-1)
+    lo = u[..., 0::2]
+    hi = u[..., 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_nibbles(b: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Inverse of ``pack_nibbles``: (..., ceil(n/2)) bytes -> (..., n)."""
+    lo = b & 0xF
+    hi = (b >> 4) & 0xF
+    u = jnp.stack([lo, hi], axis=-1).reshape(b.shape[:-1] + (-1,))
+    return u[..., :n]
+
+
+def pack_crumbs(u: jnp.ndarray) -> jnp.ndarray:
+    """Pack (..., n) uint8 values in [0, 3] four-per-byte -> (..., ceil(n/4)).
+
+    Counts are padded to a multiple of 4 with 1 (the zero code at 2
+    bits)."""
+    n = u.shape[-1]
+    pad = (-n) % 4
+    if pad:
+        fill = jnp.full(u.shape[:-1] + (pad,), 1, jnp.uint8)
+        u = jnp.concatenate([u, fill], axis=-1)
+    g = u.reshape(u.shape[:-1] + (-1, 4))
+    return (g[..., 0] | (g[..., 1] << 2) | (g[..., 2] << 4)
+            | (g[..., 3] << 6)).astype(jnp.uint8)
+
+
+def unpack_crumbs(b: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Inverse of ``pack_crumbs``: (..., ceil(n/4)) bytes -> (..., n)."""
+    u = jnp.stack([(b >> (2 * i)) & 0x3 for i in range(4)],
+                  axis=-1).reshape(b.shape[:-1] + (-1,))
+    return u[..., :n]
+
+
+# ---------------------------------------------------------------------------
+# Bit allocation (SVDq)
+# ---------------------------------------------------------------------------
+
+
+def default_svdq_bits(rank: int) -> Tuple[int, ...]:
+    """Positional bit allocation when no spectrum is available.
+
+    The calibrated factors order ranks by singular value, so a fixed
+    front-loaded split is a reasonable prior: the top quarter keeps 8
+    bits, the next half gets 4, the tail gets 2."""
+    assert rank >= 1
+    n8 = max(1, round(rank * 0.25))
+    n4 = min(rank - n8, max(0, round(rank * 0.5)))
+    n2 = rank - n8 - n4
+    return (8,) * n8 + (4,) * n4 + (2,) * n2
+
+
+def svdq_bits_from_spectrum(sigma, rank: Optional[int] = None,
+                            thresholds: Tuple[float, float] = (0.85, 0.98)
+                            ) -> Tuple[int, ...]:
+    """Per-rank bits from a calibrated singular-value spectrum.
+
+    Ranks inside the leading ``thresholds[0]`` fraction of spectral
+    energy (sum of sigma^2) keep 8 bits, ranks up to ``thresholds[1]``
+    get 4, the tail gets 2 — SVDq's energy rule (PAPERS.md, arXiv
+    2502.15304) on this repo's own calibration spectrum.  At least one
+    rank always keeps 8 bits."""
+    sigma = np.asarray(sigma, np.float64)
+    if rank is not None:
+        sigma = sigma[:rank]
+    assert sigma.ndim == 1 and sigma.size >= 1
+    energy = sigma ** 2
+    total = energy.sum()
+    if total <= 0.0:
+        return (8,) * sigma.size
+    frac = np.cumsum(energy) / total
+    t8, t4 = thresholds
+    bits = tuple(8 if f <= t8 else (4 if f <= t4 else 2) for f in frac)
+    if bits[0] != 8:
+        bits = (8,) + bits[1:]
+    return bits
+
+
+def _split_bits(bits: Tuple[int, ...]) -> Tuple[int, int, int]:
+    """Validate a non-increasing {8,4,2} tuple -> (n8, n4, n2)."""
+    assert bits, "empty bit allocation"
+    assert all(b in (8, 4, 2) for b in bits), bits
+    assert list(bits) == sorted(bits, reverse=True), (
+        f"svdq bits must be non-increasing (spectrum-ordered): {bits}")
+    n8 = sum(1 for b in bits if b == 8)
+    n4 = sum(1 for b in bits if b == 4)
+    return n8, n4, len(bits) - n8 - n4
+
+
+def packed_width(bits: Tuple[int, ...]) -> int:
+    """Bytes per token needed to store one rank vector at ``bits``."""
+    n8, n4, n2 = _split_bits(bits)
+    return n8 + -(-n4 // 2) + -(-n2 // 4)
+
+
+# ---------------------------------------------------------------------------
+# Layouts
+# ---------------------------------------------------------------------------
+
+
+class FpLayout:
+    """The identity layout: fp pages at the cache dtype (parity oracle)."""
+
+    name = "fp"
+    #: Pallas decode-kernel dispatch tag: "fp" and "int8" have kernels,
+    #: None means lax-only (the engine falls back to the gather twin).
+    kernel = "fp"
+
+    def leaves(self, side: str, rank: int) -> Tuple[LeafSpec, ...]:
+        """One data leaf per side, dtype deferred to the cache dtype."""
+        return ((side + "c", rank, None),)
+
+    def encode(self, side: str, x: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        """Identity: the caller casts to the pool dtype on append."""
+        return {side + "c": x}
+
+    def decode(self, side: str, leaves: Dict[str, jnp.ndarray],
+               rank: int) -> jnp.ndarray:
+        """Identity: gathered pages are already the fp entries."""
+        return leaves[side + "c"]
+
+    def token_bytes(self, side: str, rank: int, fp_bytes: int = 2) -> int:
+        """Bytes one cache entry occupies per kv head at this layout."""
+        return rank * fp_bytes
+
+
+class Int8Layout:
+    """Int8 data pages + per-token bf16 scale pools (width-1 leaves)."""
+
+    name = "int8"
+    kernel = "int8"
+
+    def leaves(self, side: str, rank: int) -> Tuple[LeafSpec, ...]:
+        """Data leaf (int8, width R) plus its scale leaf (bf16, width 1)."""
+        return ((side + "c", rank, jnp.int8),
+                (side + "scale", 1, jnp.bfloat16))
+
+    def encode(self, side: str, x: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        """Quantize (..., R) fp entries with the dense-path quantizer."""
+        q, s = quantize_int8(x)
+        return {side + "c": q, side + "scale": s[..., None]}
+
+    def decode(self, side: str, leaves: Dict[str, jnp.ndarray],
+               rank: int) -> jnp.ndarray:
+        """Dequantize gathered pages to f32: ``q * scale``."""
+        return (leaves[side + "c"].astype(jnp.float32)
+                * leaves[side + "scale"].astype(jnp.float32))
+
+    def token_bytes(self, side: str, rank: int, fp_bytes: int = 2) -> int:
+        """R int8 bytes plus one bf16 scale per entry per kv head."""
+        return rank + 2
+
+
+@dataclass(frozen=True)
+class SvdqLayout:
+    """Per-rank bit allocation on the key side; int8 on the value side.
+
+    ``bits`` is the non-increasing per-rank allocation for the key
+    ranks (``None`` resolves ``default_svdq_bits`` at the call's rank).
+    The key data leaf is uint8 with trailing width ``packed_width(bits)``
+    — 8-bit ranks as biased bytes, 4-bit ranks nibble-packed, 2-bit
+    ranks crumb-packed — sharing the per-vector scale ``s`` with
+    per-rank step widening ``w_b = 127 / (2^(b-1) - 1)`` so every width
+    spans exactly ``[-amax, amax]``.
+    """
+
+    bits: Optional[Tuple[int, ...]] = None
+    name = "svdq"
+    kernel = None
+    _int8 = Int8Layout()
+
+    def resolve_bits(self, rank: int) -> Tuple[int, ...]:
+        """The effective key-side allocation at ``rank`` ranks."""
+        if self.bits is None:
+            return default_svdq_bits(rank)
+        assert len(self.bits) == rank, (self.bits, rank)
+        return self.bits
+
+    def leaves(self, side: str, rank: int) -> Tuple[LeafSpec, ...]:
+        """Packed uint8 key leaf + scale; plain int8 leaves for values."""
+        if side == "v":
+            return self._int8.leaves(side, rank)
+        width = packed_width(self.resolve_bits(rank))
+        return ((side + "c", width, jnp.uint8),
+                (side + "scale", 1, jnp.bfloat16))
+
+    def encode(self, side: str, x: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        """Quantize and pack (..., R) entries into the page stride."""
+        if side == "v":
+            return self._int8.encode(side, x)
+        bits = self.resolve_bits(x.shape[-1])
+        n8, n4, n2 = _split_bits(bits)
+        xf = x.astype(jnp.float32)
+        amax = jnp.max(jnp.abs(xf), axis=-1)
+        s = jnp.maximum(amax, 1e-8) / 127.0
+        segs = []
+        q8 = jnp.clip(jnp.round(xf[..., :n8] / s[..., None]), -127, 127)
+        segs.append((q8 + 127).astype(jnp.uint8))
+        if n4:
+            step = s * (127.0 / 7.0)
+            q4 = jnp.clip(jnp.round(xf[..., n8:n8 + n4] / step[..., None]),
+                          -7, 7)
+            segs.append(pack_nibbles((q4 + 7).astype(jnp.uint8)))
+        if n2:
+            step = s * 127.0
+            q2 = jnp.clip(jnp.round(xf[..., n8 + n4:] / step[..., None]),
+                          -1, 1)
+            segs.append(pack_crumbs((q2 + 1).astype(jnp.uint8)))
+        return {side + "c": jnp.concatenate(segs, axis=-1),
+                side + "scale": s.astype(jnp.bfloat16)[..., None]}
+
+    def decode(self, side: str, leaves: Dict[str, jnp.ndarray],
+               rank: int) -> jnp.ndarray:
+        """Unpack and dequantize gathered key pages to f32 (..., R)."""
+        if side == "v":
+            return self._int8.decode(side, leaves, rank)
+        bits = self.resolve_bits(rank)
+        n8, n4, n2 = _split_bits(bits)
+        data = leaves[side + "c"]
+        s = leaves[side + "scale"].astype(jnp.float32)       # (..., 1)
+        segs = []
+        off = n8
+        q8 = data[..., :n8].astype(jnp.float32) - 127.0
+        segs.append(q8 * s)
+        if n4:
+            w4 = -(-n4 // 2)
+            u = unpack_nibbles(data[..., off:off + w4], n4)
+            segs.append((u.astype(jnp.float32) - 7.0) * (s * (127.0 / 7.0)))
+            off += w4
+        if n2:
+            u = unpack_crumbs(data[..., off:], n2)
+            segs.append((u.astype(jnp.float32) - 1.0) * (s * 127.0))
+        return jnp.concatenate(segs, axis=-1)
+
+    def token_bytes(self, side: str, rank: int, fp_bytes: int = 2) -> int:
+        """Packed bytes plus the bf16 scale per entry per kv head."""
+        if side == "v":
+            return self._int8.token_bytes(side, rank, fp_bytes)
+        return packed_width(self.resolve_bits(rank)) + 2
+
+
+def get_layout(cfg):
+    """The page layout a model config's ``cache_quant`` selects.
+
+    ``cfg`` needs ``cache_quant`` and (for svdq) ``svdq_bits`` — i.e. a
+    ``ModelConfig``, but duck-typed so tests can pass a stub."""
+    quant = cfg.cache_quant
+    if quant == "int8":
+        return Int8Layout()
+    if quant == "svdq":
+        return SvdqLayout(tuple(cfg.svdq_bits) or None)
+    assert quant == "none", f"unknown cache_quant {quant!r}"
+    return FpLayout()

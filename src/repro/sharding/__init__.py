@@ -1,3 +1,4 @@
+"""Mesh/partition helpers (see ``repro.sharding.partition``)."""
 from repro.sharding.partition import (active_mesh, dp_axes, named,
                                       param_spec, params_shardings, shard,
                                       use_mesh)

@@ -27,6 +27,8 @@ _ACTIVE_MESH: contextvars.ContextVar[Optional[Mesh]] = \
 
 @contextlib.contextmanager
 def use_mesh(mesh: Optional[Mesh]):
+    """Context manager installing ``mesh`` as the process-global active
+    mesh (``None`` deactivates, making every helper a no-op)."""
     token = _ACTIVE_MESH.set(mesh)
     try:
         if mesh is not None:
@@ -39,10 +41,13 @@ def use_mesh(mesh: Optional[Mesh]):
 
 
 def active_mesh() -> Optional[Mesh]:
+    """The mesh installed by ``use_mesh``, or None outside one."""
     return _ACTIVE_MESH.get()
 
 
 def dp_axes(mesh: Optional[Mesh] = None) -> Tuple[str, ...]:
+    """Data-parallel axis names present on the mesh (("data",) when no
+    mesh is active)."""
     mesh = mesh or active_mesh()
     if mesh is None:
         return ("data",)
@@ -50,6 +55,8 @@ def dp_axes(mesh: Optional[Mesh] = None) -> Tuple[str, ...]:
 
 
 def axis_size(name, mesh: Optional[Mesh] = None) -> int:
+    """Product of the named mesh axes' sizes (1 without a mesh, and
+    absent axes count as 1)."""
     mesh = mesh or active_mesh()
     if mesh is None:
         return 1
@@ -92,6 +99,7 @@ def shard(x, *spec):
 
 
 def named(mesh: Mesh, *spec) -> NamedSharding:
+    """Shorthand for ``NamedSharding(mesh, PartitionSpec(*spec))``."""
     return NamedSharding(mesh, P(*spec))
 
 

@@ -26,7 +26,10 @@ from repro.config import ServeConfig
 # residual-budget chunk truncation; paged-longctx runs the paged stack
 # with split-KV flash-decoding (ServeConfig.decode_splits > 1, DESIGN.md
 # §split-kv) so every parity test also covers the split+combine decode
-# path; the default (dense) keeps the exact-length parity oracle.
+# path; paged-quant runs the whole budget-leg stack on int8 scale-pool
+# pages (ServeConfig.cache_quant, DESIGN.md §page-layouts) with
+# per-step dynamic split derivation (decode_splits=0); the default
+# (dense) keeps the exact-length parity oracle.
 ENGINE = os.environ.get("REPRO_ENGINE", "dense")
 
 
@@ -59,23 +62,34 @@ def serve_config(**kw) -> ServeConfig:
     REPRO_ENGINE=paged-longctx runs the paged stack with split-KV
     flash-decoding (decode_splits=3 — odd, so the tests' page chains
     split into uneven spans and boundary cases fire); greedy outputs
-    must stay identical to the decode_splits=1 paged leg."""
+    must stay identical to the decode_splits=1 paged leg.
+    REPRO_ENGINE=paged-quant layers the int8 scale-pool page layout
+    (ServeConfig.cache_quant="int8", DESIGN.md §page-layouts) over the
+    whole budget-leg stack — optimistic admission, swap preemption,
+    sharing, chaos, sampled audits, token budget — plus per-step
+    dynamic split derivation (decode_splits=0), so prefix sharing,
+    COW forks, swap checksums and split-KV all run against int8 data
+    pages moving in lockstep with their scale pools.  (Engines built
+    without projections serve fp pages — a full cache has no
+    compressed R_k/R_v entries to quantize.)"""
     if ENGINE in ("paged", "paged-preempt", "paged-prefix",
-                  "paged-chaos", "paged-budget", "paged-longctx"):
+                  "paged-chaos", "paged-budget", "paged-longctx",
+                  "paged-quant"):
         kw.setdefault("paged", True)
         kw.setdefault("page_size", 4)
         kw.setdefault("chunked_prefill", True)
         kw.setdefault("prefill_chunk", 8)
     if ENGINE == "paged-longctx":
         kw.setdefault("decode_splits", 3)
-    if ENGINE in ("paged-preempt", "paged-chaos", "paged-budget"):
+    if ENGINE in ("paged-preempt", "paged-chaos", "paged-budget",
+                  "paged-quant"):
         T = kw.get("max_seq_len", 4096)
         kw.setdefault("n_pages", max(2, T // kw["page_size"]))
         kw.setdefault("admission", "optimistic")
         kw.setdefault("watermark_low", 0.1)
     if ENGINE == "paged-prefix":
         kw.setdefault("share_prefix", True)
-    if ENGINE in ("paged-chaos", "paged-budget"):
+    if ENGINE in ("paged-chaos", "paged-budget", "paged-quant"):
         kw.setdefault("share_prefix", True)
         kw.setdefault("preempt_mode", "swap")
         kw.setdefault("chaos_seed", 0)
@@ -84,10 +98,16 @@ def serve_config(**kw) -> ServeConfig:
         # still catches cross-step corruption while covering the
         # sampling arithmetic itself on the hardest legs
         kw.setdefault("audit_every", 2)
-    if ENGINE == "paged-budget":
+    if ENGINE in ("paged-budget", "paged-quant"):
         # small enough that residual truncation and budget-capped
         # admission actually happen under the tests' max_batch=4
         kw.setdefault("max_num_batched_tokens", 6)
+    if ENGINE == "paged-quant":
+        if kw.get("paged"):
+            kw.setdefault("cache_quant", "int8")
+            # per-step split derivation from the live max length,
+            # snapped to {1, 2, 4, 8} (bounded-compile satellite)
+            kw.setdefault("decode_splits", 0)
     return ServeConfig(**kw)
 
 
