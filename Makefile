@@ -37,7 +37,7 @@ REGRESSION_RATIO_THRESHOLD ?= 2.0
 FMT_PATHS := benchmarks/check_regression.py \
              tests/test_check_regression.py
 
-.PHONY: verify test lint check-regression bench-quick bench chaos longctx quant
+.PHONY: verify test lint check-regression bench-quick bench chaos longctx quant sharded
 
 # bench-quick rewrites BENCH_decode.json, so it must run after the
 # regression gate has read the committed baseline — the recipe (not a
@@ -67,6 +67,18 @@ longctx:
 # dynamic split derivation (decode_splits=0)
 quant:
 	REPRO_ENGINE=paged-quant $(PY) -m pytest -x -q
+
+# the paged-sharded CI leg, runnable locally: the serving suite with
+# ServeConfig.shards > 1 on a 4-way forced-host-device data mesh
+# (DESIGN.md §sharded-engine) under the chaos stack — greedy outputs
+# must match the 1-shard legs token-for-token.  Scoped to the tests
+# that route through tests/conftest.py serve_config (the only ones the
+# leg changes) plus the sharded router/isolation tests.
+sharded:
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	REPRO_ENGINE=paged-sharded $(PY) -m pytest -x -q \
+		tests/test_serving.py tests/test_preemption.py \
+		tests/test_sharded.py
 
 lint:
 	@if command -v ruff >/dev/null 2>&1; then \

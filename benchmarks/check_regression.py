@@ -120,6 +120,20 @@ RATIO_PAIRS = (
     # plus bit-unpacking is real extra work — 2x-widened
     ("decode_paged_int8", "decode_paged_full"),
     ("decode_paged_svdq", "decode_paged_full", 2.0),
+    # data-axis sharded engine (DESIGN.md §sharded-engine): per-slot
+    # step cost at 4 / 2 shards vs the 1-shard oracle drained in the
+    # same forced-4-device subprocess — catches gathers or per-step
+    # host sync creeping into the sharded dispatch.  Engine drains over
+    # a forced host mesh are the noisiest rows we gate (the mesh
+    # multiplies the host-scheduling jitter), so 2.5x-widened
+    ("decode_sharded_step", "decode_sharded_base", 2.5),
+    ("decode_sharded_pool", "decode_sharded_base", 2.5),
+    # the same 4-shard per-slot step cost vs the paged decode kernel
+    # row: an absolute anchor outside the sharded subprocess, so a
+    # regression slowing all three sharded drains together (which the
+    # intra-subprocess pairs cancel out) still trips the gate — widened
+    # further, the sides run in different processes
+    ("decode_sharded_step", "decode_paged_full", 3.0),
 )
 
 

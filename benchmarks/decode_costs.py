@@ -35,8 +35,15 @@ preempt-and-recompute / preempt-and-swap on a small one
 (DESIGN.md §preemption).  The ``decode_shared_prefix`` row serves a
 common-system-prompt batch through the refcounted prefix-sharing
 store (DESIGN.md §prefix-sharing), recording prefill-chunk and
-pool-occupancy savings against the same batch unshared.  All these
-quotients feed the machine-normalized regression gate
+pool-occupancy savings against the same batch unshared.
+The ``decode_sharded_*`` rows drain the same batch through the
+data-axis sharded engine (DESIGN.md §sharded-engine) on a forced
+4-host-device CPU mesh in a subprocess (the bench process must keep
+the single real device): per-slot step cost at 1, 2 and 4 shards,
+with pooled capacity and per-shard peak occupancy in the derived
+fields — the quotients vs the 1-shard drain (and vs the paged decode
+kernel) gate hot-path gathers sneaking into the sharded dispatch.
+All these quotients feed the machine-normalized regression gate
 (``check_regression.RATIO_PAIRS``).
 """
 from __future__ import annotations
@@ -363,6 +370,7 @@ def run(B: int = 4, Hkv: int = 8, m: int = 8, T: int = 4096,
 
     rows.extend(_preemption_rows())
     rows.extend(_shared_prefix_rows())
+    rows.extend(_sharded_rows())
     return rows
 
 
@@ -505,6 +513,95 @@ def _shared_prefix_rows() -> List[Row]:
              f"shared_pages={eng.n_shared_pages};"
              f"cow_forks={eng.n_cow_forks};"
              f"full_hits={eng.n_full_hits}")]
+
+
+# the bench process must keep the single real CPU device, so the
+# sharded drains fork a subprocess that forces a 4-host-device mesh
+# (same idiom as tests/test_multidevice.py) and ships its rows back as
+# one JSON line
+_SHARDED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import jax
+import numpy as np
+from benchmarks.common import timed
+from repro.config import ServeConfig
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import Request, ServingEngine
+
+cfg = get_config("tinyllama-1.1b").reduced()
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+T, ps, B, max_new = 32, 4, 8, 5
+lens = (14, 13, 12, 11, 10, 9, 8, 7, 6, 5, 14, 13)
+
+
+def mk_reqs():
+    rng = np.random.default_rng(0)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        L).astype(np.int32),
+                    max_new_tokens=max_new)
+            for i, L in enumerate(lens)]
+
+
+base = dict(max_seq_len=T, max_batch=B, temperature=0.0, decode_chunk=4,
+            paged=True, page_size=ps, chunked_prefill=True,
+            prefill_chunk=8, n_pages=64)
+rows = []
+for name, shards in (("decode_sharded_base", 1),
+                     ("decode_sharded_pool", 2),
+                     ("decode_sharded_step", 4)):
+    eng = ServingEngine(cfg, params, ServeConfig(**base, shards=shards))
+    eng.generate(mk_reqs())                          # warm compiles
+    served, us = timed(lambda e=eng: e.generate(mk_reqs()), reps=3,
+                       budget_s=1.5)
+    assert all(r.done and not r.failed for r in served)
+    steps = eng._step_count
+    per_slot = us / (steps * B)
+    derived = (f"shards={shards};steps={steps};drain_us={us:.0f};"
+               f"slots={B};pooled_pages={eng.pool.n_pages};"
+               f"peak_used_pages={eng.peak_used_pages}")
+    if shards > 1:
+        derived += ";per_shard_peak=" + "/".join(
+            str(w.peak_used_pages) for w in eng.workers)
+    rows.append((name, per_slot, derived))
+print("SHARDED_ROWS " + json.dumps(rows))
+"""
+
+
+def _sharded_rows() -> List[Row]:
+    """Data-axis sharded engine drains (DESIGN.md §sharded-engine).
+
+    The same 12-request batch served at shards = 1 / 2 / 4 on a forced
+    4-host-device mesh, reported as *per-slot step cost* (drain time /
+    steps / slots) so the quotients vs the 1-shard oracle isolate the
+    per-step sharding overhead: one sharded dispatch plus host-local
+    scheduling, no gathers on the hot path.  Runs in a subprocess; on
+    failure the rows are skipped (the gate treats missing rows as a
+    skip, never a pass/fail)."""
+    import json
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    r = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=1200)
+    print("\n== decode_costs: data-axis sharded engine drains ==")
+    line = next((ln for ln in r.stdout.splitlines()
+                 if ln.startswith("SHARDED_ROWS ")), None)
+    if r.returncode != 0 or line is None:
+        print(f"sharded drains skipped (subprocess rc={r.returncode}): "
+              f"{r.stderr[-500:]}")
+        return []
+    rows = [tuple(row) for row in json.loads(line.split(" ", 1)[1])]
+    for name, us, derived in rows:
+        print(f"{name}: {us:.1f}us/slot-step  {derived}")
+    return rows
 
 
 if __name__ == "__main__":

@@ -1,3 +1,4 @@
+"""Checkpointing: sharded save/restore with async commit (see manager)."""
 from repro.checkpoint.manager import CheckpointManager
 
 __all__ = ["CheckpointManager"]

@@ -82,6 +82,10 @@ def _unflatten_like(template, flat: Dict[str, np.ndarray]):
 
 
 class CheckpointManager:
+    """Step-directory checkpoint store: atomic commit via .tmp rename,
+    optional async save thread, keep-N garbage collection, and elastic
+    restore onto any mesh/sharding (see the module docstring)."""
+
     def __init__(self, root: str, keep: int = 3, async_save: bool = True):
         self.root = root
         self.keep = keep
@@ -159,6 +163,7 @@ class CheckpointManager:
         os.rename(part, path)
 
     def wait(self) -> None:
+        """Block until the in-flight async save (if any) commits."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
@@ -172,6 +177,7 @@ class CheckpointManager:
     # -- restore ------------------------------------------------------------
 
     def list_steps(self) -> List[int]:
+        """Committed checkpoint steps under root, ascending."""
         out = []
         for d in os.listdir(self.root):
             if d.startswith("step_") and not d.endswith(".tmp"):
@@ -219,5 +225,6 @@ class CheckpointManager:
         raise IOError(f"all checkpoints damaged under {self.root}: {err}")
 
     def latest_step(self) -> Optional[int]:
+        """Newest committed step, or None when the store is empty."""
         steps = self.list_steps()
         return steps[-1] if steps else None

@@ -479,6 +479,18 @@ class ServeConfig:
     # {1, 2, 4, 8} so the decode dispatch compiles at most four split
     # variants.  Requires paged=True.
     decode_splits: int = 1
+    # data-axis shards for the serving engine (DESIGN.md
+    # §sharded-engine): 1 runs the single-device engine untouched (the
+    # bitwise parity oracle); >1 partitions the slot axis into that
+    # many contiguous shards, each owning its own page pool, block
+    # tables, prefix index and sampling key on its own device of a
+    # ("data",) mesh, with decode/prefill dispatched as one shard_map
+    # computation and a thin global router feeding per-shard
+    # schedulers.  Requires paged chunked prefill on the legacy
+    # scheduler (max_num_batched_tokens == 0), max_batch divisible by
+    # shards, and total_pages divisible by shards.  CPU CI forces
+    # devices via XLA_FLAGS=--xla_force_host_platform_device_count=N.
+    shards: int = 1
     # page byte format (DESIGN.md §page-layouts): "none" keeps fp pages
     # (serving/page_layouts.FpLayout, the bitwise parity oracle);
     # "int8" stores int8 data pages plus per-token bf16 scale pools;
@@ -581,6 +593,31 @@ class ServeConfig:
                 "time and requires chunked_prefill=True (the "
                 "exact-length dense staging path has no packed-page "
                 "writer)")
+        if self.shards < 1:
+            raise ValueError("shards must be >= 1 (1 = unsharded oracle)")
+        if self.shards > 1:
+            if not (self.paged and self.chunked_prefill):
+                raise ValueError(
+                    "shards > 1 partitions the paged slot/page axes over "
+                    "a data mesh and requires paged=True and "
+                    "chunked_prefill=True (the dense and exact-length "
+                    "paths stay single-device parity oracles)")
+            if self.max_num_batched_tokens:
+                raise ValueError(
+                    "shards > 1 runs the legacy per-request scheduler "
+                    "per shard; the token-budget scheduler "
+                    "(max_num_batched_tokens > 0) is not sharded yet — "
+                    "see ROADMAP.md")
+            if self.max_batch % self.shards:
+                raise ValueError(
+                    f"max_batch {self.max_batch} must be divisible by "
+                    f"shards {self.shards} (each shard owns an equal "
+                    f"contiguous slice of the slot axis)")
+            if self.total_pages % self.shards:
+                raise ValueError(
+                    f"total_pages {self.total_pages} must be divisible "
+                    f"by shards {self.shards} (each shard owns an equal "
+                    f"device-local page pool)")
 
     @property
     def buckets(self) -> Tuple[int, ...]:

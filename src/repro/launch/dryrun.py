@@ -1,11 +1,8 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
-The two lines above MUST precede any jax import: jax locks the device
-count on first init, and the production meshes need 512 host devices
-(16x16 single-pod, 2x16x16 multi-pod).
+The XLA_FLAGS assignment below MUST precede any jax import: jax locks
+the device count on first init, and the production meshes need 512
+host devices (16x16 single-pod, 2x16x16 multi-pod).
 
 Per cell this driver:
   1. builds abstract inputs (ShapeDtypeStruct, no allocation) and
@@ -19,6 +16,9 @@ Usage:
   python -m repro.launch.dryrun --arch deepseek-67b --shape train_4k
   python -m repro.launch.dryrun --all [--multi-pod] [--jobs-filter k]
 """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
 import argparse
 import dataclasses
 import json
@@ -139,6 +139,9 @@ def _lower_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, variant: str):
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              variant: str = "baseline",
              out_dir: Optional[str] = None) -> Optional[dict]:
+    """Lower + compile one (arch x shape x mesh x variant) cell and
+    write its artifact record; returns the record (status "skip" with
+    a reason when the shape does not apply to the arch)."""
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     ok, why = shape_applicable(cfg, shape)
@@ -233,6 +236,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
 
 def all_cells(include_variants: bool = True):
+    """Every (arch, shape, variant) cell of the assignment grid;
+    compressed variants only where a decode shape applies."""
     cells = []
     for arch in list_archs():
         cfg = get_config(arch)
@@ -249,6 +254,7 @@ def all_cells(include_variants: bool = True):
 
 
 def main() -> None:
+    """CLI entry: one cell (--arch/--shape) or the whole grid (--all)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
     ap.add_argument("--shape")

@@ -10,6 +10,8 @@ import jax
 
 
 def make_production_mesh(*, multi_pod: bool = False):
+    """The assignment's target mesh: (16, 16) data x model, or
+    (2, 16, 16) pod x data x model with ``multi_pod``."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)

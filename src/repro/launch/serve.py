@@ -20,6 +20,9 @@ from repro.serving import Request, ServingEngine
 
 
 def main() -> None:
+    """CLI entry: calibrate + compress a (reduced) arch, then drain a
+    synthetic request batch through the serving engine, printing the
+    per-mode scheduling/pool/sharing/budget reports."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
@@ -43,6 +46,16 @@ def main() -> None:
     ap.add_argument("--n-pages", type=int, default=0,
                     help="pool size; 0 derives full capacity, smaller "
                          "oversubscribes with admission backpressure")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="data-axis shards for the serving engine "
+                         "(DESIGN.md §sharded-engine): each shard owns "
+                         "an equal slice of the slot axis with its own "
+                         "page pool and scheduler; one sharded dispatch "
+                         "serves the whole batch.  Needs >= shards "
+                         "devices (CPU: XLA_FLAGS=--xla_force_host_"
+                         "platform_device_count=N before launch).  "
+                         "Implies --paged and chunked prefill.  1 = "
+                         "unsharded parity oracle.")
     ap.add_argument("--cache-quant", default="none",
                     choices=["none", "int8", "svdq"],
                     help="paged page layout (DESIGN.md §page-layouts): "
@@ -130,6 +143,15 @@ def main() -> None:
     ap.add_argument("--chaos-rate", type=float, default=0.05,
                     help="per-hit fault probability under --chaos-seed")
     args = ap.parse_args()
+    if args.shards > 1 and not args.prefill_chunk:
+        print("--shards shards the chunked-prefill dispatch: enabling "
+              "chunked prefill (--prefill-chunk 8)")
+        args.prefill_chunk = 8
+    if args.shards > 1 and args.n_pages % args.shards:
+        n = -(-args.n_pages // args.shards) * args.shards
+        print(f"--shards needs equal per-shard pools: rounding "
+              f"--n-pages {args.n_pages} up to {n}")
+        args.n_pages = n
     if args.max_batched_tokens and not args.prefill_chunk:
         print("--max-batched-tokens schedules prefill at chunk "
               "granularity: enabling chunked prefill "
@@ -204,7 +226,8 @@ def main() -> None:
                      chaos_rate=args.chaos_rate,
                      max_num_batched_tokens=args.max_batched_tokens,
                      cache_quant=args.cache_quant,
-                     decode_splits=args.decode_splits)
+                     decode_splits=args.decode_splits,
+                     shards=args.shards)
     eng = ServingEngine(cfg, params, sc, projections=proj)
     rng = np.random.default_rng(0)
     lens = rng.integers(min(4, args.prompt_len), args.prompt_len + 1,
@@ -252,6 +275,18 @@ def main() -> None:
         pool = eng.pool
         print(f"page pool: {pool.n_pages} x {args.page_size}-token "
               f"pages, {pool.free_count} free after drain")
+        if args.shards > 1:
+            # pooled capacity across the data mesh: shards x the
+            # per-shard physical pool (already scaled by the layout's
+            # resident-capacity multiplier, DESIGN.md §sharded-engine)
+            print(f"sharded: {args.shards} shard(s) x "
+                  f"{eng._local_phys} physical page(s) = "
+                  f"{pool.n_pages} pooled "
+                  f"(x{eng.workers[0].capacity_x:.2f} resident "
+                  f"capacity multiplier); per-shard occupancy: "
+                  + ", ".join(
+                      f"s{w._shard}={w.pool.used_count}"
+                      f"/{w.pool.n_pages}" for w in eng.workers))
         print(f"admission={args.admission}: preemptions="
               f"{eng.n_preempted} (swap out/in {eng.n_swapped_out}/"
               f"{eng.n_swapped_in}), failed={eng.n_failed}")

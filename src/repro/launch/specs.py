@@ -39,6 +39,9 @@ def _sds(shape, dtype):
 
 def batch_specs(cfg: ModelConfig, batch: int, seq: int,
                 with_labels: bool) -> Dict[str, Any]:
+    """ShapeDtypeStruct tree for one training/eval batch of the cell:
+    token ids or embeddings, optional image patches, optional labels
+    (patch tokens extend the label length)."""
     out: Dict[str, Any] = {}
     label_len = seq
     if cfg.inputs_embeds:
@@ -55,6 +58,8 @@ def batch_specs(cfg: ModelConfig, batch: int, seq: int,
 
 
 def batch_shardings(batch_tree, mesh: Mesh) -> Dict[str, Any]:
+    """NamedShardings for a batch tree: leading (batch) dim split over
+    the mesh's data axes when divisible, everything else replicated."""
     dp = dp_axes(mesh)
 
     def spec(leaf):
@@ -73,10 +78,13 @@ def batch_shardings(batch_tree, mesh: Mesh) -> Dict[str, Any]:
 
 
 def abstract_params(model: LM):
+    """Parameter pytree as ShapeDtypeStructs (no device memory)."""
     return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
 
 
 def abstract_opt_state(params_abs, tc: TrainConfig):
+    """Optimizer-state pytree as ShapeDtypeStructs, matching
+    ``optim.init_state`` over the abstract params."""
     return jax.eval_shape(lambda p: optim.init_state(p, tc), params_abs)
 
 
@@ -87,6 +95,8 @@ def abstract_opt_state(params_abs, tc: TrainConfig):
 
 def abstract_cache(model: LM, batch: int, max_len: int,
                    ranks: Tuple[int, int]):
+    """Decode-cache pytree as ShapeDtypeStructs at the given batch,
+    capacity and compression ranks ((0, 0) = full cache)."""
     return jax.eval_shape(
         lambda: model.init_cache(batch, max_len, ranks))
 
@@ -218,6 +228,9 @@ def abstract_projections(model: LM, ranks: Tuple[int, int]):
 
 
 def projection_shardings(proj_tree, mesh: Mesh):
+    """NamedShardings for KQ-SVD projection factors: the kv-head dim
+    (axis -3 on every factor kind) splits over the model axis when
+    divisible, everything else replicated."""
     msize = mesh.shape.get("model", 1)
 
     def spec_for(path, leaf):
@@ -238,8 +251,10 @@ def projection_shardings(proj_tree, mesh: Mesh):
 
 
 def replicated(mesh: Mesh):
+    """Fully replicated NamedSharding on ``mesh``."""
     return NamedSharding(mesh, P())
 
 
 def tree_replicated(tree, mesh: Mesh):
+    """Replicate every leaf of ``tree`` on ``mesh``."""
     return jax.tree.map(lambda _: replicated(mesh), tree)

@@ -17,6 +17,8 @@ from repro.train import Trainer
 
 
 def main() -> None:
+    """CLI entry: train a (reduced) arch on Zipf token data, with
+    optional periodic checkpointing via CheckpointManager."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--steps", type=int, default=100)

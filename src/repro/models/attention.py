@@ -35,6 +35,7 @@ from repro.models.layers import apply_rope, init_dense
 from repro.serving.page_layouts import get_layout, quantize_int8  # noqa: F401
 from repro.serving.paged_cache import (append_chunk, append_token,
                                        gather_pages)
+from repro.sharding import partition
 
 NEG_INF = -1e30
 
@@ -586,6 +587,12 @@ def attn_prefill_chunk(p, x, cache: Dict, pos0, cfg: ModelConfig,
             "chunked prefill supports full-attention stacks only "
             "(no sliding window)")
     B, S, _ = x.shape
+    # slot-axis sharding constraint (DESIGN.md §sharded-engine): a
+    # no-op without an active mesh — the sharded engine dispatches via
+    # shard_map, where every shard already sees only its slice — but
+    # under an active data mesh (pjit serving flows) it pins the
+    # chunk's batch axis in place so GSPMD cannot gather it.
+    x = partition.shard(x, ("pod", "data"), None, None)
     dh = cfg.d_head
     scale = 1.0 / math.sqrt(dh)
     pos0 = batched_positions(pos0, B)
@@ -688,6 +695,10 @@ def attn_decode(p, x, cache: Dict, pos, cfg: ModelConfig,
     kernel, the lax path routes through ``split_decode_attention``; 1
     is the unsplit parity oracle."""
     B = x.shape[0]
+    # slot-axis sharding constraint (DESIGN.md §sharded-engine): no-op
+    # without an active mesh; under one it keeps the decode batch axis
+    # device-local (no gathers on the hot path)
+    x = partition.shard(x, ("pod", "data"), None, None)
     dh = cfg.d_head
     scale = 1.0 / math.sqrt(dh)
     pos = batched_positions(pos, B)

@@ -127,6 +127,8 @@ from typing import Any, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.config import ModelConfig, ServeConfig
 from repro.core.calibration import ModelProjections
@@ -134,10 +136,12 @@ from repro.core.compressed import cache_footprint
 from repro.kernels.kq_decode import default_decode_splits
 from repro.serving import invariants
 from repro.serving.faults import FaultInjector, SwapFailed, checksum
-from repro.serving.paged_cache import (BlockTables, PagePool,
+from repro.serving.page_layouts import FpLayout, get_layout
+from repro.serving.paged_cache import (GARBAGE_PAGE, BlockTables, PagePool,
                                        PagePoolExhausted, PrefixIndex,
                                        copy_page, pages_needed, swap_in,
                                        swap_out)
+from repro.sharding import partition
 from repro.models.model import build_model
 
 # the structured failure taxonomy (DESIGN.md §robustness): every
@@ -245,6 +249,17 @@ class ServingEngine:
     to tests, benches and the CLI; docs/SERVING.md is the operator
     guide."""
 
+    def __new__(cls, cfg=None, params=None, sc=None, *args, **kwargs):
+        """Route construction to the data-sharded engine when the
+        config asks for more than one shard (DESIGN.md
+        §sharded-engine).  ``shards == 1`` — and any explicit subclass
+        construction — takes the ordinary path, so the single-device
+        engine stays the bitwise parity oracle."""
+        sc = kwargs.get("sc", sc)
+        if cls is ServingEngine and sc is not None and sc.shards > 1:
+            return super().__new__(ShardedServingEngine)
+        return super().__new__(cls)
+
     def __init__(self, cfg: ModelConfig, params, sc: ServeConfig,
                  projections: Optional[ModelProjections] = None,
                  faults: Optional[FaultInjector] = None):
@@ -270,6 +285,14 @@ class ServingEngine:
                      if projections is not None else None)
         self.ranks = ((projections.rank_k, projections.rank_v)
                       if projections is not None else (0, 0))
+        # physical-page capacity multiplier of the active page layout
+        # (DESIGN.md §page-layouts): quantized pages are narrower than
+        # fp pages, so the same HBM byte budget (``ServeConfig.n_pages``
+        # counts fp-sized pages) holds ``capacity_x`` more physical
+        # pages.  Admission watermarks, worst-case reservation and the
+        # pool itself are all sized from the physical count — fp
+        # layouts keep capacity_x == 1.0 and stay bitwise unchanged.
+        self.capacity_x = self._capacity_multiplier()
         if sc.paged:
             self._validate_paged()
         # split-KV flash-decoding fan-out (DESIGN.md §split-kv): a
@@ -298,6 +321,30 @@ class ServingEngine:
         # is len(sc.buckets) per engine lifetime (tests assert on it)
         self.prefill_chunk_shapes: set = set()
         self._started = False
+
+    def _capacity_multiplier(self) -> float:
+        """Physical pages per fp-page of HBM under the active layout.
+
+        The ratio of fp token bytes to the layout's token bytes at the
+        engine's ranks (page_layouts ``token_bytes``); 1.0 for fp pages
+        or when serving without projections (no quantized layout)."""
+        if not self.sc.paged or self.ranks[0] == 0 \
+                or self.sc.cache_quant == "none":
+            return 1.0
+        layout = get_layout(self.cfg)
+        rk, rv = self.ranks
+        fp = FpLayout()
+        fp_bytes = fp.token_bytes("k", rk) + fp.token_bytes("v", rv)
+        q_bytes = layout.token_bytes("k", rk) + layout.token_bytes("v", rv)
+        return fp_bytes / q_bytes
+
+    def _pool_pages(self) -> int:
+        """Allocatable physical page count: the configured fp-unit HBM
+        budget (``ServeConfig.total_pages``) scaled by the layout's
+        capacity multiplier.  Watermarks (pool fractions) and the
+        oversize/worst-case admission checks all derive from this, so
+        quantized pools no longer under-admit in fp-page units."""
+        return max(1, int(self.sc.total_pages * self.capacity_x))
 
     def _validate_paged(self) -> None:
         """Fail fast at construction, not mid-serve."""
@@ -604,12 +651,17 @@ class ServingEngine:
         self._btabs = None
         self._pindex = None
         if sc.paged:
-            self.pool = PagePool(sc.total_pages, sc.watermark_high,
+            # pool and cache are sized in *physical* pages: the fp-unit
+            # HBM budget times the layout's capacity multiplier, so
+            # watermarks and worst-case reservation stop under-admitting
+            # quantized pools (satellite of DESIGN.md §page-layouts)
+            n_phys = self._pool_pages()
+            self.pool = PagePool(n_phys, sc.watermark_high,
                                  sc.watermark_low)
             self.pool.faults = self.faults
             self._btabs = BlockTables(B, sc.pages_per_seq)
             self._cache = self.model.init_paged_cache(
-                sc.total_pages + 1, sc.page_size, self.ranks)
+                n_phys + 1, sc.page_size, self.ranks)
             if sc.share_prefix:
                 # per-batch prefix index (DESIGN.md §prefix-sharing):
                 # reset with the pool, since its entries pin pool pages
@@ -1331,6 +1383,29 @@ class ServingEngine:
         self._pf_next = (self._pf_next + 1) % B
         return budget
 
+    def _stage_prefill(self, budget: Optional[int] = None) -> List[tuple]:
+        """Stage (without dispatching) up to ``budget`` prefill chunks,
+        with ``_prefill_step``'s round-robin order.  The sharded engine
+        uses this so every shard's r-th staged chunk can ride one
+        sharded device call per round; staging is safe because a pass
+        stages at most one chunk per slot and a chunk's page writes
+        never touch another slot's staged pages."""
+        sc = self.sc
+        B = sc.max_batch
+        if budget is None:
+            budget = sc.prefill_chunks_per_step
+        preps: List[tuple] = []
+        for off in range(B):
+            if budget == 0:
+                break
+            prep = self._prep_chunk((self._pf_next + off) % B)
+            if prep is None:
+                continue
+            preps.append(prep)
+            budget -= 1
+        self._pf_next = (self._pf_next + 1) % B
+        return preps
+
     # -- preemption (DESIGN.md §preemption) ---------------------------------
 
     def _swap_out_slot(self, b: int, n_tokens: int) -> Dict[str, Any]:
@@ -1757,3 +1832,630 @@ class ServingEngine:
         while self.step():
             pass
         return requests
+
+
+# ---------------------------------------------------------------------------
+# Data-axis sharded engine (DESIGN.md §sharded-engine)
+# ---------------------------------------------------------------------------
+
+
+class PooledPages:
+    """Read-only aggregate view over the shard-local page pools.
+
+    The sharded engine's ``pool`` attribute for introspection (tests,
+    benches, the serve CLI): counts sum over every worker's pool.
+    Allocation never goes through this view — pages are owned and
+    allocated strictly per shard."""
+
+    def __init__(self, workers):
+        self._workers = workers
+
+    @property
+    def n_pages(self) -> int:
+        """Total allocatable physical pages across every shard."""
+        return sum(w.pool.n_pages for w in self._workers)
+
+    @property
+    def free_count(self) -> int:
+        """Free pages summed over the shard pools."""
+        return sum(w.pool.free_count for w in self._workers)
+
+    @property
+    def used_count(self) -> int:
+        """Allocated pages summed over the shard pools."""
+        return sum(w.pool.used_count for w in self._workers)
+
+    @property
+    def high_pages(self) -> int:
+        """Admission high-watermark page budget summed over shards."""
+        return sum(w.pool.high_pages for w in self._workers)
+
+
+def pick_shard(workers, capacity=None):
+    """Route target for the next pending request (the thin global
+    admission layer, DESIGN.md §sharded-engine): among workers with
+    routing capacity — free slots not already spoken for by their
+    local backlog (preemption requeues) — the one with the most
+    admission headroom: free pages capped at the high-watermark
+    budget, so a pool already past its watermark does not look
+    attractive just because another shard is fuller.  Ties break on
+    the lower shard index (determinism).  ``capacity`` lets the
+    routing loop thread residual per-worker capacities; by default it
+    is derived from the worker's slots and backlog.  Returns None when
+    no worker has capacity: the head request waits, preserving global
+    FIFO order."""
+    if capacity is None:
+        capacity = [sum(q is None for q in w._slot_req) - len(w._pending)
+                    for w in workers]
+    best, best_score = None, -1
+    for i, w in enumerate(workers):
+        if capacity[i] <= 0:
+            continue
+        score = min(w.pool.free_count,
+                    max(w.pool.high_pages - w.pool.used_count, 0))
+        if score > best_score:
+            best, best_score = w, score
+    return best
+
+
+class _ShardWorker(ServingEngine):
+    """One shard's host-local scheduler inside a sharded engine.
+
+    A full ``ServingEngine`` over the shard's slice of the slot axis:
+    it owns every piece of host scheduling state — local pending queue
+    (preemption requeues stay shard-local), page pool with local
+    physical ids, block tables, prefix index, swap store, fault
+    injector, counters.  Its *device* state is a view into the
+    parent's globally sharded arrays: the properties below route every
+    read/write of the decode state, the sampling key and the paged
+    cache through the parent's slice, so scheduling code inherited
+    from the base class runs unchanged while the bytes stay on the
+    shard's device.  Workers never dispatch decode or prefill from
+    ``step()`` themselves — the parent batches both across shards into
+    single ``shard_map`` calls."""
+
+    def __init__(self, parent, shard: int, cfg, params, sc, projections,
+                 faults):
+        # the routed properties dereference the parent, so these must
+        # exist before base __init__ assigns self.rng through one
+        self._parent = parent
+        self._shard = shard
+        self._base = shard * sc.max_batch
+        super().__init__(cfg, params, sc, projections=projections,
+                         faults=faults)
+
+    def _gs(self) -> slice:
+        """This shard's slice of the global slot axis."""
+        return slice(self._base, self._base + self.sc.max_batch)
+
+    @property
+    def _logits(self):
+        return self._parent._g_logits[self._gs()]
+
+    @_logits.setter
+    def _logits(self, val):
+        p = self._parent
+        p._g_logits = p._g_logits.at[self._gs()].set(val)
+
+    @property
+    def _pos(self):
+        return self._parent._g_pos[self._gs()]
+
+    @_pos.setter
+    def _pos(self, val):
+        p = self._parent
+        p._g_pos = p._g_pos.at[self._gs()].set(val)
+
+    @property
+    def _emitted(self):
+        return self._parent._g_emitted[self._gs()]
+
+    @_emitted.setter
+    def _emitted(self, val):
+        p = self._parent
+        p._g_emitted = p._g_emitted.at[self._gs()].set(val)
+
+    @property
+    def _max_new(self):
+        return self._parent._g_max_new[self._gs()]
+
+    @_max_new.setter
+    def _max_new(self, val):
+        p = self._parent
+        p._g_max_new = p._g_max_new.at[self._gs()].set(val)
+
+    @property
+    def _done(self):
+        return self._parent._g_done[self._gs()]
+
+    @_done.setter
+    def _done(self, val):
+        p = self._parent
+        p._g_done = p._g_done.at[self._gs()].set(val)
+
+    @property
+    def _trunc(self):
+        return self._parent._g_trunc[self._gs()]
+
+    @_trunc.setter
+    def _trunc(self, val):
+        p = self._parent
+        p._g_trunc = p._g_trunc.at[self._gs()].set(val)
+
+    @property
+    def rng(self):
+        """This shard's sampling key: row ``shard`` of the parent's
+        (shards, 2) stacked key array (decorrelated per-shard seeds)."""
+        return self._parent._g_rng[self._shard]
+
+    @rng.setter
+    def rng(self, val):
+        p = self._parent
+        p._g_rng = p._g_rng.at[self._shard].set(val)
+
+    @property
+    def _cache(self):
+        return self._parent._slice_cache(self._shard)
+
+    @_cache.setter
+    def _cache(self, val):
+        self._parent._merge_cache(self._shard, val)
+
+
+class ShardedServingEngine(ServingEngine):
+    """Data-axis sharded serving engine (DESIGN.md §sharded-engine).
+
+    ``ServingEngine`` construction routes here when
+    ``ServeConfig.shards > 1`` (so ``shards == 1`` never touches this
+    code and the single-device engine stays the bitwise parity
+    oracle).  The slot axis is cut into ``shards`` contiguous slices,
+    one ``_ShardWorker`` per slice; each worker schedules host-locally
+    — admission, chunked prefill staging, preemption, prefix sharing,
+    swap and fault injection all operate on its own slots and its own
+    page pool — while the device state (decode arrays, sampling keys,
+    page pools) lives in globally sharded arrays laid over a
+    ``("data",)`` mesh (``partition.serve_mesh``).  Each step runs at
+    most one sharded prefill round per staged chunk and one sharded
+    decode scan, dispatched with ``shard_map``: every shard computes
+    on its local slice against its local page pool, so there are no
+    gathers and no collectives on the hot path.
+
+    A thin global admission layer on top routes pending requests, in
+    strict queue order, to the shard ``pick_shard`` selects
+    (watermark-aware most-free-pages, head-of-line blocking preserves
+    priority order inside each shard's admit window).  Greedy decoding
+    is batch-composition invariant, so ``shards = N`` reproduces the
+    ``shards = 1`` outputs token-for-token."""
+
+    def __init__(self, cfg: ModelConfig, params, sc: ServeConfig,
+                 projections: Optional[ModelProjections] = None,
+                 faults: Optional[FaultInjector] = None):
+        super().__init__(cfg, params, sc, projections=projections,
+                         faults=faults)
+        sc = self.sc
+        S = sc.shards
+        self._mesh = partition.serve_mesh(S)
+        # per-shard sampling keys must exist before the workers: base
+        # __init__ assigns worker.rng through the routed property
+        self._g_rng = jnp.stack(
+            [jax.random.PRNGKey(sc.seed + s) for s in range(S)])
+
+        def _local_sc(s: int) -> ServeConfig:
+            kw: Dict[str, Any] = dict(
+                shards=1,
+                max_batch=sc.max_batch // S,
+                n_pages=sc.total_pages // S,
+                seed=sc.seed + s)
+            if sc.chaos_seed is not None:
+                # decorrelated chaos schedules: each shard draws its
+                # own fault sequence, still reproducible from the seed
+                kw["chaos_seed"] = sc.chaos_seed + s
+            return dataclasses.replace(sc, **kw)
+
+        self.workers = [
+            _ShardWorker(self, s, cfg, params, _local_sc(s), projections,
+                         faults)
+            for s in range(S)]
+        # every worker's cache slice has identical shapes: share one
+        # compiled COW fork instead of tracing it per shard
+        for w in self.workers[1:]:
+            w._fork_page = self.workers[0]._fork_page
+        self._local_phys = self.workers[0]._pool_pages()
+        self._sharded_prefill = jax.jit(self._sharded_prefill_impl)
+        self._sharded_decode = jax.jit(self._sharded_decode_impl,
+                                       static_argnames=("num_splits",))
+
+    #: scheduler counters transparently summed over the shard workers
+    #: on read (each worker counts its own slots; the aggregate is the
+    #: engine-level number tests and benches expect)
+    _AGG_COUNTERS = (
+        "n_completed", "n_preempted", "n_swapped_out", "n_swapped_in",
+        "n_retried", "n_swap_fallbacks", "n_reclaimed", "n_cow_forks",
+        "n_shared_pages", "n_shared_tokens", "n_full_hits",
+        "n_prefill_chunks", "n_fused_steps", "n_truncated_chunks",
+        "peak_used_pages")
+
+    def __getattr__(self, name):
+        """Aggregate per-shard scheduler counters on read: plain sums
+        for ``_AGG_COUNTERS``, merged dict for ``error_counts``,
+        concatenation for ``preempted_rids``; ``n_failed`` adds
+        failures of requests still in the global queue (deadline
+        before routing)."""
+        workers = self.__dict__.get("workers")
+        if workers:
+            if name in ShardedServingEngine._AGG_COUNTERS:
+                return sum(getattr(w, name) for w in workers)
+            if name == "preempted_rids":
+                return [rid for w in workers for rid in w.preempted_rids]
+            if name == "n_failed":
+                return (self.__dict__.get("_n_failed_global", 0)
+                        + sum(w.n_failed for w in workers))
+            if name == "error_counts":
+                out = dict(self.__dict__.get("_error_counts_global")
+                           or {k: 0 for k in ERROR_KINDS})
+                for w in workers:
+                    for k, v in w.error_counts.items():
+                        out[k] = out.get(k, 0) + v
+                return out
+        raise AttributeError(
+            f"{type(self).__name__!r} object has no attribute {name!r}")
+
+    # -- global cache layout -------------------------------------------------
+
+    def _cache_spec(self):
+        """``shard_map`` partition-spec tree for the global paged
+        cache: prefix leaves shard their page axis (dim 0), scanned
+        step leaves shard dim 1 (dim 0 is the scan-stacked layers)."""
+        return {"prefix": P("data"), "steps": P(None, "data")}
+
+    def _slice_cache(self, s: int):
+        """Shard ``s``'s local cache view: its ``local_phys + 1`` page
+        slice (garbage page included) of every pool leaf."""
+        lo = s * (self._local_phys + 1)
+        hi = lo + self._local_phys + 1
+
+        def _s0(leaf):
+            return leaf[lo:hi]
+
+        def _s1(leaf):
+            return leaf[:, lo:hi]
+
+        g = self._g_cache
+        return {"prefix": jax.tree.map(_s0, g["prefix"]),
+                "steps": (jax.tree.map(_s1, g["steps"])
+                          if g["steps"] is not None else None)}
+
+    def _merge_cache(self, s: int, local) -> None:
+        """Write shard ``s``'s local cache view back into the global
+        pools (the worker ``_cache`` property setter: swap-ins, COW
+        forks and slot inserts land here)."""
+        lo = s * (self._local_phys + 1)
+        hi = lo + self._local_phys + 1
+
+        def _m0(leaf, lleaf):
+            return leaf.at[lo:hi].set(lleaf.astype(leaf.dtype))
+
+        def _m1(leaf, lleaf):
+            return leaf.at[:, lo:hi].set(lleaf.astype(leaf.dtype))
+
+        g = self._g_cache
+        self._g_cache = {
+            "prefix": jax.tree.map(_m0, g["prefix"], local["prefix"]),
+            "steps": (jax.tree.map(_m1, g["steps"], local["steps"])
+                      if g["steps"] is not None else None)}
+
+    # -- sharded device dispatch --------------------------------------------
+
+    def _sharded_prefill_impl(self, params, proj, cache, tokens, pos0,
+                              n_valid, rows):
+        """One prefill round over every shard as a single ``shard_map``
+        computation: shard ``s`` runs the ordinary
+        ``_prefill_chunk_impl`` on its (1, bucket) token slice against
+        its local page slice — shard-local, no collectives.  Shards
+        with no staged chunk this round carry a dummy row
+        (``n_valid == 0``, all-garbage block-table row): their writes
+        route to the shard's garbage page and the returned logits are
+        discarded."""
+        d = P("data")
+
+        def _body(cache, tokens, pos0, n_valid, rows):
+            return self._prefill_chunk_impl(params, proj, cache, tokens,
+                                            pos0, n_valid, rows)
+
+        return shard_map(
+            _body, self._mesh,
+            in_specs=(self._cache_spec(), d, d, d, d),
+            out_specs=(d, self._cache_spec()),
+            check_rep=False)(cache, tokens, pos0, n_valid, rows)
+
+    def _sharded_decode_impl(self, params, proj, cache, logits, pos,
+                             emitted, max_new, done, trunc, rngs,
+                             block_table, num_splits=1):
+        """The fused decode scan over every shard as a single
+        ``shard_map`` computation: shard ``s`` runs the ordinary
+        ``_decode_chunk_impl`` on its slot slice with its own sampling
+        key against its local page slice.  Block-table rows hold
+        *local* physical ids, so no index translation (and no gather)
+        happens on the hot path; shards whose slots are all done take
+        the scan's cheap skip branch."""
+        d = P("data")
+        cspec = self._cache_spec()
+
+        def _body(cache, logits, pos, emitted, max_new, done, trunc,
+                  rngs, block_table):
+            carry, toks, emits = self._decode_chunk_impl(
+                params, proj, cache, logits, pos, emitted, max_new,
+                done, trunc, rngs[0], block_table, num_splits)
+            (logits, cache, pos, emitted, done, trunc, rng) = carry
+            return (logits, cache, pos, emitted, done, trunc, rng[None],
+                    toks, emits)
+
+        return shard_map(
+            _body, self._mesh,
+            in_specs=(cspec, d, d, d, d, d, d, d, d),
+            out_specs=(d, cspec, d, d, d, d, d, P(None, "data"),
+                       P(None, "data")),
+            check_rep=False)(cache, logits, pos, emitted, max_new, done,
+                             trunc, rngs, block_table)
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start(self, requests: List[Request]) -> None:
+        """Initialize sharded serving state for a batch of requests.
+
+        Allocates the globally sharded decode arrays and page pools on
+        the ``("data",)`` mesh, then starts every shard worker empty —
+        requests enter through the global router at the first
+        ``step()``."""
+        sc = self.sc
+        S = sc.shards
+        B, T = sc.max_batch, sc.max_seq_len
+        for r in requests:
+            if len(r.prompt) > T:
+                raise ValueError(
+                    f"request {r.rid}: prompt length {len(r.prompt)}"
+                    f" exceeds max_seq_len {T}")
+        self._pending = list(requests)        # global queue, pre-routing
+        self._all_requests = list(requests)
+        # parent-level injector resolution mirrors the base engine for
+        # introspection; the *workers* own actual injection (an
+        # explicit injector is shared, a chaos schedule is rebuilt
+        # per-shard from decorrelated seeds)
+        if self._faults_arg is not None:
+            self.faults = self._faults_arg
+        elif sc.chaos_seed is not None:
+            self.faults = FaultInjector.chaos(sc.chaos_seed,
+                                              sc.chaos_rate)
+        else:
+            self.faults = None
+        mesh = self._mesh
+        Pl = self._local_phys
+
+        def _put(x):
+            return jax.device_put(x, partition.slot_sharding(mesh, x.ndim))
+
+        self._g_logits = _put(jnp.zeros((B, self.cfg.vocab_size),
+                                        jnp.float32))
+        self._g_pos = _put(jnp.zeros((B,), jnp.int32))
+        self._g_emitted = _put(jnp.zeros((B,), jnp.int32))
+        self._g_max_new = _put(jnp.zeros((B,), jnp.int32))
+        self._g_done = _put(jnp.ones((B,), bool))
+        self._g_trunc = _put(jnp.zeros((B,), bool))
+        self._g_rng = _put(self._g_rng)
+        cache = self.model.init_paged_cache(S * (Pl + 1), sc.page_size,
+                                            self.ranks)
+
+        def _put1(leaf):
+            return jax.device_put(leaf, partition.named(mesh, None, "data"))
+
+        self._g_cache = {
+            "prefix": jax.tree.map(_put, cache["prefix"]),
+            "steps": (jax.tree.map(_put1, cache["steps"])
+                      if cache["steps"] is not None else None)}
+        for w in self.workers:
+            w.start([])
+        self.pool = PooledPages(self.workers)
+        self._n_failed_global = 0
+        self._error_counts_global = {k: 0 for k in ERROR_KINDS}
+        self._progress_global = False
+        self._step_count = 0
+        self._no_progress = 0
+        self.n_audits = 0
+        self._started = True
+
+    def _busy(self) -> bool:
+        return bool(self._pending) or any(w._busy() for w in self.workers)
+
+    def _fail_global(self, r: Request, kind: str, detail: str = "") -> None:
+        """Terminally fail a request still waiting in the global queue
+        (it was never routed, so no shard state needs unwinding)."""
+        r.error = RequestError(kind=kind, detail=detail,
+                               step=self._step_count)
+        r.done = True
+        self._n_failed_global += 1
+        self._error_counts_global[kind] += 1
+        self._progress_global = True
+        self._pending = [p for p in self._pending if p is not r]
+
+    def _check_global_deadlines(self) -> None:
+        """Deadline pass for requests not yet routed to a shard (the
+        workers check their own requests with the base logic)."""
+        now = self._step_count
+        for r in list(self._pending):
+            ttft = r.ttft_deadline_steps
+            if ttft is not None and not r.out_tokens and now > ttft:
+                self._fail_global(
+                    r, "deadline",
+                    f"no first token after {ttft} steps (TTFT budget)")
+            elif r.deadline_steps is not None and now > r.deadline_steps:
+                self._fail_global(
+                    r, "deadline",
+                    f"incomplete after {r.deadline_steps} steps "
+                    f"({len(r.out_tokens)}/{r.max_new_tokens} tokens)")
+
+    def cancel(self, rid: int, detail: str = "cancelled by caller"
+               ) -> bool:
+        """Cancel request ``rid``: unrouted requests fail in the global
+        queue; routed ones delegate to their owning shard's unwind."""
+        assert self._started, "call start(requests) first"
+        for r in list(self._pending):
+            if r.rid == rid and not r.done:
+                self._fail_global(r, "cancelled", detail)
+                return True
+        return any(w.cancel(rid, detail) for w in self.workers)
+
+    def _route(self) -> None:
+        """The thin global admission layer: move pending requests,
+        strictly in queue order, to the shard ``pick_shard`` selects.
+        Stops at the first unroutable head (every shard slot-full) so
+        queue order is preserved; after routing, a request's whole
+        lifecycle — admission, preemption requeues, swap, failure —
+        stays host-local to its shard."""
+        cap = [sum(q is None for q in w._slot_req) - len(w._pending)
+               for w in self.workers]
+        while self._pending:
+            w = pick_shard(self.workers, cap)
+            if w is None:
+                break
+            cap[w._shard] -= 1
+            r = self._pending.pop(0)
+            w._pending.append(r)
+            w._all_requests.append(r)
+
+    def _run_prefill_rounds(self) -> None:
+        """Advance chunked prefills across shards: each worker stages
+        its round-robin chunks host-side (at most its per-shard
+        ``prefill_chunks_per_step``), then round ``r`` batches every
+        worker's r-th staged chunk into one sharded prefill dispatch —
+        workers with nothing left this round ride along as dummy rows.
+        Token buffers are padded to the round's largest bucket so all
+        shards trace one shape (the compile-count bound stays
+        ``len(sc.buckets)``)."""
+        S = self.sc.shards
+        npp = self.sc.pages_per_seq
+        staged = [w._stage_prefill() for w in self.workers]
+        for rnd in range(max(len(sp) for sp in staged)):
+            preps = [sp[rnd] if rnd < len(sp) else None for sp in staged]
+            bucket = max(p[4] for p in preps if p is not None)
+            toks = np.zeros((S, bucket), np.int32)
+            pos0 = np.zeros((S,), np.int32)
+            nval = np.zeros((S,), np.int32)
+            rows = np.full((S, npp), GARBAGE_PAGE, np.int32)
+            for s, p in enumerate(preps):
+                if p is None:
+                    continue
+                b, _, start, n, pb, ptoks = p
+                toks[s, :pb] = ptoks[0]
+                pos0[s] = start
+                nval[s] = n
+                rows[s] = self.workers[s]._btabs.rows[b]
+            last, self._g_cache = self._sharded_prefill(
+                self.params, self.proj, self._g_cache,
+                jnp.asarray(toks), jnp.asarray(pos0), jnp.asarray(nval),
+                jnp.asarray(rows))
+            last_np = np.asarray(last)
+            self.prefill_chunk_shapes.add(bucket)
+            for s, p in enumerate(preps):
+                if p is None:
+                    continue
+                b, req, start, n, _, _ = p
+                self.workers[s]._finish_chunk(b, req, start, n, bucket,
+                                              last_np[s: s + 1])
+
+    def _dispatch_decode(self, lives) -> bool:
+        """One sharded decode scan over every shard's live slots, then
+        per-shard harvest.  Non-live rows export as garbage exactly as
+        in the base engine; rows hold shard-local physical page ids.
+        Returns whether any slot was freed (same-step refill
+        trigger)."""
+        sc = self.sc
+        rows = np.concatenate(
+            [w._btabs.host(live=live)
+             for w, live in zip(self.workers, lives)])
+        if self._dynamic_splits:
+            g_live = np.concatenate(lives)
+            pos_np = np.asarray(self._g_pos)
+            live_max = int(pos_np[g_live].max()) if g_live.any() else 1
+            num_splits = self._splits_for_step(live_max + sc.decode_chunk)
+        else:
+            num_splits = self._decode_splits
+        out = self._sharded_decode(
+            self.params, self.proj, self._g_cache, self._g_logits,
+            self._g_pos, self._g_emitted, self._g_max_new, self._g_done,
+            self._g_trunc, self._g_rng, jnp.asarray(rows),
+            num_splits=num_splits)
+        (self._g_logits, self._g_cache, self._g_pos, self._g_emitted,
+         self._g_done, self._g_trunc, self._g_rng, toks, emits) = out
+        toks_np = np.asarray(toks)
+        emits_np = np.asarray(emits)
+        freed = False
+        for w, live in zip(self.workers, lives):
+            if not live.any():
+                continue
+            lo, hi = w._base, w._base + w.sc.max_batch
+            freed |= w._harvest(live, toks_np[:, lo:hi],
+                                emits_np[:, lo:hi])
+        return freed
+
+    def step(self) -> bool:
+        """One sharded scheduling iteration, mirroring the base
+        ``step`` phase-for-phase with per-shard schedulers: deadlines,
+        global routing, per-shard admission, staged prefill rounds
+        (one sharded dispatch per round), headroom growth per shard,
+        one sharded decode scan, per-shard harvest, same-step refill —
+        then sampled audits (per-worker plus the cross-shard
+        accounting pass) and the no-progress watchdog over all
+        shards."""
+        assert self._started, "call start(requests) first"
+        sc = self.sc
+        self._step_count += 1
+        self._progress_global = False
+        for w in self.workers:
+            # workers share the parent's scheduler clock so retry
+            # backoff, deadlines and chaos schedules line up with the
+            # global step count
+            w._step_count = self._step_count
+            w._progress = False
+            w._check_deadlines()
+        self._check_global_deadlines()
+        self._route()
+        for w in self.workers:
+            w._admit()
+            w.peak_used_pages = max(w.peak_used_pages, w.pool.used_count)
+        self._run_prefill_rounds()
+        lives = [np.array([w._slot_req[b] is not None
+                           and w._prefilled[b] is None
+                           for b in range(w.sc.max_batch)])
+                 for w in self.workers]
+        for w, live in zip(self.workers, lives):
+            if live.any():
+                w._ensure_chunk_headroom(live)
+                w.peak_used_pages = max(w.peak_used_pages,
+                                        w.pool.used_count)
+        if any(live.any() for live in lives):
+            if self._dispatch_decode(lives):
+                # refill freed slots in the same step (the base
+                # engine's refill-bubble fix, routed globally)
+                self._route()
+                for w in self.workers:
+                    w._admit()
+        busy = self._busy()
+        if sc.audit and self._step_count % sc.audit_every == 0:
+            for w in self.workers:
+                invariants.audit(w)
+            invariants.audit_sharded(self)
+            self.n_audits += 1
+        progress = (self._progress_global
+                    or any(w._progress for w in self.workers))
+        if busy and not progress:
+            self._no_progress += 1
+            if (sc.stall_steps
+                    and self._no_progress >= sc.stall_steps):
+                raise EngineStalledError(
+                    self._no_progress,
+                    "\n".join(f"[shard {s}] "
+                              + invariants.scheduler_dump(w)
+                              for s, w in enumerate(self.workers)))
+        else:
+            self._no_progress = 0
+        return busy

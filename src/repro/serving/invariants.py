@@ -263,6 +263,58 @@ def audit(eng) -> None:
         raise InvariantViolation(bad, scheduler_dump(eng))
 
 
+def audit_sharded(eng) -> None:
+    """Cross-shard accounting for the data-sharded engine (DESIGN.md
+    §sharded-engine).  Per-shard state is checked by running the
+    ordinary ``audit`` over each worker; this pass checks what no
+    single worker can see:
+
+    * **exclusive ownership**: every live request is owned by exactly
+      one shard — its slots, local pending queue and swap store are
+      pairwise disjoint with every other shard's;
+    * **router/worker disjointness**: the parent's global queue holds
+      no request a shard also owns (a routed request never reappears
+      upstream);
+    * **uniform partitioning**: every shard agrees on its slot-slice
+      width and physical pool size (the global cache page axis is
+      ``shards * (local_pages + 1)``);
+    * **slot-axis cover**: the shard slices tile the global
+      ``max_batch`` exactly."""
+    bad: List[str] = []
+    owner: Dict[int, int] = {}
+    for w in eng.workers:
+        owned = [r for r in w._slot_req if r is not None]
+        owned += list(w._pending)
+        for r in owned:
+            prev = owner.get(id(r))
+            if prev is not None and prev != w._shard:
+                bad.append(f"request rid={r.rid} owned by both shard "
+                           f"{prev} and shard {w._shard}")
+            owner[id(r)] = w._shard
+    for r in eng._pending:
+        if id(r) in owner:
+            bad.append(f"request rid={r.rid} both in the global queue "
+                       f"and owned by shard {owner[id(r)]}")
+    widths = {w.sc.max_batch for w in eng.workers}
+    if len(widths) != 1:
+        bad.append(f"unequal shard slot widths: {sorted(widths)}")
+    pools = {w.pool.n_pages for w in eng.workers}
+    if len(pools) != 1:
+        bad.append(f"unequal shard pool sizes: {sorted(pools)}")
+    if sum(w.sc.max_batch for w in eng.workers) != eng.sc.max_batch:
+        bad.append(
+            f"shard slot slices cover "
+            f"{sum(w.sc.max_batch for w in eng.workers)} slots != "
+            f"max_batch {eng.sc.max_batch}")
+    bases = [w._base for w in eng.workers]
+    if bases != sorted(set(bases)) or (bases and bases[0] != 0):
+        bad.append(f"shard slot bases not a contiguous tiling: {bases}")
+    if bad:
+        dump = "\n".join(f"[shard {s}]\n" + scheduler_dump(w)
+                         for s, w in enumerate(eng.workers))
+        raise InvariantViolation(bad, dump)
+
+
 def refcount_histogram(eng) -> Dict[int, int]:
     """refcount -> page count (observability helper for tests and the
     serve CLI's failure printout)."""

@@ -377,6 +377,17 @@ class BlockTables:
         self._dev_cache = (key, out)
         return out
 
+    def host(self, live=None) -> np.ndarray:
+        """Host-side copy of the rows with ``device``'s garbage
+        masking, but no upload: the sharded engine concatenates every
+        shard's masked rows (local physical ids) into one global
+        export before its single sharded decode dispatch."""
+        rows = self.rows
+        if live is not None:
+            rows = np.where(np.asarray(live, bool)[:, None], rows,
+                            GARBAGE_PAGE)
+        return np.array(rows)
+
 
 # ---------------------------------------------------------------------------
 # Device-side paged primitives (pure jnp, jit-safe)

@@ -104,6 +104,39 @@ def named(mesh: Mesh, *spec) -> NamedSharding:
 
 
 # ---------------------------------------------------------------------------
+# Serving-engine data mesh (DESIGN.md §sharded-engine)
+# ---------------------------------------------------------------------------
+
+
+def serve_mesh(shards: int) -> Mesh:
+    """1-D ``("data",)`` mesh over the first ``shards`` local devices.
+
+    The sharded serving engine lays its slot axis, page pools and
+    sampling keys over this mesh (one contiguous slice per device).  On
+    CPU CI the devices are forced hosts
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=N``)."""
+    devs = jax.devices()
+    if len(devs) < shards:
+        raise ValueError(
+            f"serve_mesh needs {shards} devices, found {len(devs)} "
+            f"(CPU CI forces them via XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={shards})")
+    return Mesh(np.asarray(devs[:shards]), ("data",))
+
+
+def slot_spec(ndim: int) -> P:
+    """PartitionSpec sharding dim 0 (the slot or page axis) over
+    ``"data"``; every trailing dim replicates.  Used for the engine's
+    per-slot decode state, block-table exports and page pools."""
+    return P(*(("data",) + (None,) * (ndim - 1)))
+
+
+def slot_sharding(mesh: Mesh, ndim: int) -> NamedSharding:
+    """``NamedSharding`` form of ``slot_spec`` on ``mesh``."""
+    return NamedSharding(mesh, slot_spec(ndim))
+
+
+# ---------------------------------------------------------------------------
 # Parameter partition rules
 # ---------------------------------------------------------------------------
 

@@ -28,8 +28,11 @@ from repro.config import ServeConfig
 # §split-kv) so every parity test also covers the split+combine decode
 # path; paged-quant runs the whole budget-leg stack on int8 scale-pool
 # pages (ServeConfig.cache_quant, DESIGN.md §page-layouts) with
-# per-step dynamic split derivation (decode_splits=0); the default
-# (dense) keeps the exact-length parity oracle.
+# per-step dynamic split derivation (decode_splits=0); paged-sharded
+# runs the chaos stack on a multi-shard data mesh (ServeConfig.shards,
+# DESIGN.md §sharded-engine) over forced host devices — greedy outputs
+# must match the 1-shard legs token-for-token; the default (dense)
+# keeps the exact-length parity oracle.
 ENGINE = os.environ.get("REPRO_ENGINE", "dense")
 
 
@@ -71,10 +74,16 @@ def serve_config(**kw) -> ServeConfig:
     COW forks, swap checksums and split-KV all run against int8 data
     pages moving in lockstep with their scale pools.  (Engines built
     without projections serve fp pages — a full cache has no
-    compressed R_k/R_v entries to quantize.)"""
+    compressed R_k/R_v entries to quantize.)
+    REPRO_ENGINE=paged-sharded runs the chaos stack (optimistic
+    admission, swap, sharing, chaos, sampled audits) with
+    ServeConfig.shards > 1 on a forced-host-device data mesh
+    (DESIGN.md §sharded-engine); shards adapts to the test's
+    max_batch so every slot slice stays equal-width, and single-slot
+    tests fall back to the unsharded oracle."""
     if ENGINE in ("paged", "paged-preempt", "paged-prefix",
                   "paged-chaos", "paged-budget", "paged-longctx",
-                  "paged-quant"):
+                  "paged-quant", "paged-sharded"):
         kw.setdefault("paged", True)
         kw.setdefault("page_size", 4)
         kw.setdefault("chunked_prefill", True)
@@ -87,9 +96,22 @@ def serve_config(**kw) -> ServeConfig:
         kw.setdefault("n_pages", max(2, T // kw["page_size"]))
         kw.setdefault("admission", "optimistic")
         kw.setdefault("watermark_low", 0.1)
+    if ENGINE == "paged-sharded":
+        # widest equal-slice shard count the test's max_batch allows;
+        # per-shard pool sized like the preempt legs so oversubscription
+        # still fires inside each shard
+        T = kw.get("max_seq_len", 4096)
+        B = kw.get("max_batch", 8)
+        shards = 4 if B % 4 == 0 else (2 if B % 2 == 0 else 1)
+        kw.setdefault("shards", shards)
+        kw.setdefault("n_pages",
+                      max(2, T // kw["page_size"]) * kw["shards"])
+        kw.setdefault("admission", "optimistic")
+        kw.setdefault("watermark_low", 0.1)
     if ENGINE == "paged-prefix":
         kw.setdefault("share_prefix", True)
-    if ENGINE in ("paged-chaos", "paged-budget", "paged-quant"):
+    if ENGINE in ("paged-chaos", "paged-budget", "paged-quant",
+                  "paged-sharded"):
         kw.setdefault("share_prefix", True)
         kw.setdefault("preempt_mode", "swap")
         kw.setdefault("chaos_seed", 0)

@@ -329,7 +329,11 @@ def test_corrupted_swap_scale_bytes_degrade_to_recompute(setup):
     the same checksum) are corrupted must fail verification on
     swap-in and fall back to recompute — greedy outputs unchanged."""
     cfg, model, params, proj = setup
-    sc_kw = dict(QUANT_SC, n_pages=10, admission="optimistic",
+    # n_pages is an fp-unit HBM budget: the int8 layout's capacity
+    # multiplier (64/36 at rk=rv=16) turns 6 fp pages into 10 physical
+    # pages — exactly tight enough that three 14-token requests still
+    # oversubscribe and swap
+    sc_kw = dict(QUANT_SC, n_pages=6, admission="optimistic",
                  preempt_mode="swap", watermark_low=0.1)
     lens, max_new = [14, 13, 14], 8
     base = ServingEngine(cfg, params, ServeConfig(**sc_kw),

@@ -110,7 +110,7 @@ def test_engine_mixed_lengths_match_one_by_one():
     eng.generate(reqs)
     for i, p in enumerate(prompts):
         single = ServingEngine(cfg, params, dataclasses.replace(
-            sc, max_batch=1))
+            sc, max_batch=1, shards=1))
         r1 = [Request(rid=0, prompt=p, max_new_tokens=6)]
         single.generate(r1)
         assert reqs[i].out_tokens == r1[0].out_tokens, i
